@@ -1,0 +1,81 @@
+"""Shared benchmark fixtures: trained tiny embedder/judge, timing helper.
+
+Model-quality figures run the paper's *protocols* end-to-end on the real
+router/cache/judge machinery; response TEXTS come from the synthetic
+response generator (big-quality vs small-quality templates), because a
+CPU-trainable 2-layer LM's sampled tokens carry no judgeable signal.  The
+serving examples (examples/serve_e2e.py) exercise true token generation.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.models.embedder import init_embedder, tiny_embedder_config
+from repro.models import ModelConfig, build_model
+from repro.tokenizer import HashWordTokenizer
+from repro.training.embedder_train import train_embedder
+
+VOCAB = 8192
+_cache = {}
+
+
+def get_tokenizer() -> HashWordTokenizer:
+    if "tok" not in _cache:
+        _cache["tok"] = HashWordTokenizer(VOCAB)
+    return _cache["tok"]
+
+
+def get_trained_embedder(steps: int = 150):
+    if "emb" not in _cache:
+        cfg = tiny_embedder_config(VOCAB)
+        params = init_embedder(jax.random.PRNGKey(0), cfg)
+        params, losses = train_embedder(params, cfg, get_tokenizer(),
+                                        steps=steps, batch=16)
+        _cache["emb"] = (params, cfg, losses)
+    return _cache["emb"]
+
+
+def get_judge_lm(steps: int = 120):
+    """Tiny reference LM trained on the synthetic corpus (judge model)."""
+    if "judge" not in _cache:
+        from repro.data import token_stream_batches
+        from repro.training import AdamWConfig, init_opt_state, make_train_step
+        import jax.numpy as jnp
+        cfg = ModelConfig(name="judge", num_layers=2, d_model=96, num_heads=4,
+                          num_kv_heads=2, d_ff=192, vocab_size=VOCAB,
+                          max_seq_len=512, dtype="float32")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(7))
+        step = jax.jit(make_train_step(model, AdamWConfig(lr=3e-3),
+                                       total_steps=steps))
+        opt = init_opt_state(params)
+        stream = token_stream_batches(get_tokenizer(), 8, 64, seed=3)
+        for _ in range(steps):
+            batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+            params, opt, _ = step(params, opt, batch)
+        _cache["judge"] = (model, params)
+    return _cache["judge"]
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Mean microseconds per call."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r) if hasattr(r, "block_until_ready") or \
+            isinstance(r, (tuple, list)) else None
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = fn(*args)
+        try:
+            jax.block_until_ready(r)
+        except Exception:
+            pass
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def csv_row(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,169 @@
+"""Figs 3-7: response-quality protocols per cosine-similarity band.
+
+Runs the REAL pipeline — embedder similarity, band assignment, tweak-prompt
+machinery, loglik judge, 3-persona x 2-round debate — over paired queries.
+Response texts follow the synthetic-response protocol (big-quality template
+for Big-LLM-direct and for the cached response the tweaker adapts;
+small-quality template for Small-LLM-direct), see benchmarks/common.py.
+
+  Fig 3/4 (user study)  -> simulated raters = per-persona satisfaction votes
+  Fig 5   (QP dataset)  -> debate: Big direct vs Small TWEAKED
+  Fig 6   (control)     -> debate: Big direct vs Small DIRECT (no tweak)
+  Fig 7   (LMSYS-like)  -> Fig 5 protocol on the workload stream
+
+Expected trends (the reproduction targets): tweaked quality rises with the
+similarity band and approaches parity; small-direct loses clearly.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.router import BANDS, band_of
+from repro.core.tweak import build_tweak_text
+from repro.data import QuestionPairGenerator, WorkloadGenerator, synthesize_response
+from repro.eval import debate_batch, make_loglik_scorer, PERSONAS, persona_score
+from repro.eval.debate import verdict_shares
+from repro.models.embedder import encode as embed_encode
+from .common import csv_row, get_judge_lm, get_tokenizer, get_trained_embedder
+
+
+def _tweaked_response(new_q, cached_q, cached_resp, sim: float,
+                      same_cell: bool, new_topic_resp: str,
+                      rng: np.random.Generator):
+    """Protocol model of the Small LLM's tweak: the cached (big-quality)
+    response adapted toward the new query.
+
+    * same intent+topic (true duplicate): query swap suffices — quality is
+      the Big LLM's, modulo small surface edits.
+    * near-miss hit (cache returned a related-but-different question, the
+      regime the paper says needs 'more substantial, potentially
+      lower-quality modifications'): the tweaker recovers partially — the
+      response mixes corrected content with stale fragments, more stale the
+      lower the similarity."""
+    adapted = cached_resp.replace(f"(answering: {cached_q})",
+                                  f"(answering: {new_q})")
+    if same_cell:
+        # surface degradation from rewriting, rarer the closer the match
+        if rng.random() < max(0.05, min(0.6, (0.96 - sim) * 1.5)):
+            adapted = adapted.replace("consult expert resources.", "")
+        return adapted
+    # near-miss: blend recovered answer with stale cached fragments
+    stale = max(0.0, min(0.9, (0.92 - sim) * 3.0))
+    parts_new = new_topic_resp.split(". ")
+    parts_old = adapted.split(". ")
+    out = []
+    for i in range(max(len(parts_new), len(parts_old))):
+        if rng.random() < stale and i < len(parts_old):
+            out.append(parts_old[i])
+        elif i < len(parts_new):
+            out.append(parts_new[i])
+    return ". ".join(out)
+
+
+def _band_table(bands, verdicts):
+    out = {}
+    for b in range(3):
+        rs = [v for bb, v in zip(bands, verdicts) if bb == b]
+        if rs:
+            out[b] = verdict_shares(rs)
+    return out
+
+
+def run(n_pairs: int = 240, seed: int = 0):
+    tok = get_tokenizer()
+    eparams, ecfg, _ = get_trained_embedder()
+    judge_model, judge_params = get_judge_lm()
+    score = make_loglik_scorer(judge_model, judge_params, tok, max_len=128)
+    gen = QuestionPairGenerator(seed=seed)
+    rng = np.random.default_rng(seed + 99)
+    # Cache-hit population = true duplicates AND near-miss hits (hard
+    # negatives that still clear the similarity threshold) — the realistic
+    # hit mix the paper's §5.2 bands contain.
+    pairs = ([gen.duplicate_pair() + (True,) for _ in range(n_pairs)]
+             + [gen.hard_negative_pair() + (False,) for _ in range(n_pairs)])
+
+    embed = jax.jit(lambda t, m: embed_encode(eparams, t, m, ecfg))
+    t1, m1 = tok.encode_batch([a.text for a, b, s in pairs], 32)
+    t2, m2 = tok.encode_batch([b.text for a, b, s in pairs], 32)
+    e1 = np.asarray(embed(jnp.asarray(t1), jnp.asarray(m1)))
+    e2 = np.asarray(embed(jnp.asarray(t2), jnp.asarray(m2)))
+    sims = np.sum(e1 * e2, axis=1)
+    bands = np.asarray(band_of(jnp.asarray(sims)))
+
+    keep = bands >= 0  # only tweak-path queries (sim >= 0.7), per paper
+    idx = np.nonzero(keep)[0]
+    queries, big_direct, tweaked, small_direct = [], [], [], []
+    for i in idx:
+        a, b, same_cell = pairs[i]
+        queries.append(b.text)
+        big = synthesize_response(b.text, b.topic, b.intent, quality="big")
+        cached = synthesize_response(a.text, a.topic, a.intent, quality="big")
+        big_direct.append(big)
+        tweaked.append(_tweaked_response(b.text, a.text, cached,
+                                         float(sims[i]), same_cell, big, rng))
+        small_direct.append(synthesize_response(b.text, b.topic, b.intent,
+                                                quality="small"))
+    bands_k = bands[idx]
+
+    ll_big = score(queries, big_direct)
+    ll_twk = score(queries, tweaked)
+    ll_sml = score(queries, small_direct)
+
+    # Fig 3: satisfaction (binary votes by persona scorers).  Thresholds
+    # are calibrated per persona so Big-direct satisfaction sits in the
+    # paper's ~80% regime; tweaked satisfaction then varies freely.
+    ps_big = np.array([[persona_score(p, float(ll_big[i]), q, big_direct[i])
+                        for p in PERSONAS] for i, q in enumerate(queries)])
+    ps_twk = np.array([[persona_score(p, float(ll_twk[i]), q, tweaked[i])
+                        for p in PERSONAS] for i, q in enumerate(queries)])
+    thr = np.quantile(ps_big, 0.2, axis=0)        # (n_personas,)
+    sat = {b: {"big": [], "twk": []} for b in range(3)}
+    for i in range(len(queries)):
+        for j in range(len(PERSONAS)):
+            sat[bands_k[i]]["big"].append(ps_big[i, j] > thr[j])
+            sat[bands_k[i]]["twk"].append(ps_twk[i, j] > thr[j])
+
+    # Figs 4/5/7: side-by-side debates big-direct (A) vs tweaked (B)
+    d_twk = debate_batch(queries, big_direct, tweaked,
+                         [float(x) for x in ll_big], [float(x) for x in ll_twk],
+                         seed=seed)
+    # Fig 6 control: big direct vs small DIRECT
+    d_sml = debate_batch(queries, big_direct, small_direct,
+                         [float(x) for x in ll_big], [float(x) for x in ll_sml],
+                         seed=seed + 1)
+    return bands_k, sat, d_twk, d_sml
+
+
+def main():
+    bands, sat, d_twk, d_sml = run()
+    names = ["0.7-0.8", "0.8-0.9", "0.9-1.0"]
+    print("# fig3: satisfaction rating by band (big vs tweaked)")
+    for b in range(3):
+        if sat[b]["big"]:
+            sb = np.mean(sat[b]["big"]) * 100
+            st = np.mean(sat[b]["twk"]) * 100
+            print(f"fig3_band_{names[b]},0.0,big={sb:.1f}%;tweaked={st:.1f}%")
+    print("# fig5/7: debate verdicts by band (A=big direct, B=small tweaked)")
+    tw = _band_table(bands, d_twk)
+    for b, sh in tw.items():
+        par = (sh["B"] + sh["AB"]) * 100
+        print(f"fig5_band_{names[b]},0.0,"
+              f"A={sh['A']:.2f};B={sh['B']:.2f};AB={sh['AB']:.2f};"
+              f"tweaked_better_or_par={par:.1f}%")
+    print("# fig6 control: big direct vs small direct")
+    sm = _band_table(bands, d_sml)
+    for b, sh in sm.items():
+        print(f"fig6_band_{names[b]},0.0,"
+              f"A={sh['A']:.2f};B={sh['B']:.2f};AB={sh['AB']:.2f}")
+    # trend summary: tweaked parity should rise with band; small-direct loses
+    par = [100 * (tw[b]["B"] + tw[b]["AB"]) for b in sorted(tw)]
+    ctl = [100 * sm[b]["A"] for b in sorted(sm)]
+    csv_row("fig567_summary", 0.0,
+            f"tweaked_par_by_band={'/'.join(f'{p:.0f}%' for p in par)};"
+            f"smalldirect_bigwins={'/'.join(f'{p:.0f}%' for p in ctl)}")
+
+
+if __name__ == "__main__":
+    main()

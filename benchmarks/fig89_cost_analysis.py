@@ -1,0 +1,66 @@
+"""Figs 8+9 and §5.2.3: cache-hit distribution vs threshold + cost saving.
+
+Paper protocol: insert the first half of each workload into the cache,
+query the second half, histogram the top-1 cosine similarities, then apply
+the 25x big/small per-token cost ratio.  Paper: LMSYS 68% >= 0.8 -> 35% of
+baseline cost; WildChat 40% >= 0.8 -> 61% of baseline cost.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import WorkloadGenerator
+from repro.kernels.cosine_topk.ops import cosine_topk
+from repro.models.embedder import encode as embed_encode
+from .common import csv_row, get_tokenizer, get_trained_embedder
+
+COST_RATIO = 25.0
+THRESHOLDS = np.arange(0.70, 1.001, 0.05)
+
+
+def run(profile: str, n: int = 2000, seed: int = 0):
+    tok = get_tokenizer()
+    eparams, ecfg, _ = get_trained_embedder()
+    wl = WorkloadGenerator(profile=profile, seed=seed)
+    queries = [q.text for q in wl.sample(n)]
+    embed = jax.jit(lambda t, m: embed_encode(eparams, t, m, ecfg))
+    t_, m_ = tok.encode_batch(queries, 32)
+    embs = np.asarray(embed(jnp.asarray(t_), jnp.asarray(m_)))
+
+    half = n // 2
+    bank = jnp.asarray(embs[:half])
+    test = jnp.asarray(embs[half:])
+    t0 = time.perf_counter()
+    scores, _ = cosine_topk(test, bank, None, k=1, impl="xla")
+    scores = np.asarray(jax.block_until_ready(scores))[:, 0]
+    lookup_us = (time.perf_counter() - t0) / (n - half) * 1e6
+
+    rows = []
+    for t in THRESHOLDS:
+        hit = float(np.mean(scores >= t))
+        # cost per query: hit -> small (1x), miss -> big (25x); vs all-big
+        rel_cost = (hit * 1.0 + (1 - hit) * COST_RATIO) / COST_RATIO
+        rows.append((float(t), hit, rel_cost))
+    return rows, lookup_us
+
+
+def main():
+    for profile in ("lmsys", "wildchat"):
+        rows, lookup_us = run(profile)
+        print(f"# fig{'8' if profile == 'lmsys' else '9'}: "
+              f"threshold,hit_rate,relative_cost ({profile})")
+        for t, hit, cost in rows:
+            print(f"fig89_{profile}@{t:.2f},{lookup_us:.1f},"
+                  f"hit={hit:.3f};rel_cost={cost:.3f}")
+        r08 = [r for r in rows if abs(r[0] - 0.80) < 1e-6][0]
+        csv_row(f"fig89_{profile}_summary", lookup_us,
+                f"hits@0.8={r08[1]:.1%};cost={r08[2]:.1%}_of_baseline"
+                f";paper={'68%/35%' if profile == 'lmsys' else '40%/61%'}")
+
+
+if __name__ == "__main__":
+    main()

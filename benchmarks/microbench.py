@@ -1,0 +1,102 @@
+"""Table-1-level component microbenchmarks: lookup / embed / route / insert.
+
+us_per_call on this CPU host; the derived column reports the TPU-relevant
+quantity (bytes scanned per lookup, entries, dims).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as cache_lib
+from repro.core.router import RouterConfig, route
+from repro.kernels.cosine_topk.ops import cosine_topk
+from repro.models.embedder import encode as embed_encode
+from .common import csv_row, get_tokenizer, get_trained_embedder
+
+
+def bench_lookup(capacity=16384, dim=384, batch=8, k=4):
+    db = jax.random.normal(jax.random.PRNGKey(0), (capacity, dim))
+    db = db / jnp.linalg.norm(db, axis=-1, keepdims=True)
+    q = jax.random.normal(jax.random.PRNGKey(1), (batch, dim))
+    q = q / jnp.linalg.norm(q, axis=-1, keepdims=True)
+    f = jax.jit(lambda q, db: cosine_topk(q, db, None, k=k, impl="xla"))
+    jax.block_until_ready(f(q, db))
+    t0 = time.perf_counter()
+    for _ in range(10):
+        jax.block_until_ready(f(q, db))
+    us = (time.perf_counter() - t0) / 10 * 1e6
+    mb = capacity * dim * 4 / 2 ** 20
+    csv_row("lookup_xla_16k", us, f"scan={mb:.0f}MiB;batch={batch};k={k}")
+
+
+def bench_lookup_pallas_interpret(capacity=2048, dim=384, batch=4, k=4):
+    db = jax.random.normal(jax.random.PRNGKey(0), (capacity, dim))
+    q = jax.random.normal(jax.random.PRNGKey(1), (batch, dim))
+    f = jax.jit(lambda q, db: cosine_topk(q, db, None, k=k, impl="pallas",
+                                          block_n=512))
+    jax.block_until_ready(f(q, db))
+    t0 = time.perf_counter()
+    jax.block_until_ready(f(q, db))
+    us = (time.perf_counter() - t0) * 1e6
+    csv_row("lookup_pallas_interpret_2k", us,
+            "interpret-mode-on-CPU;TPU-target-kernel")
+
+
+def bench_embed(batch=8, seq=32):
+    tok = get_tokenizer()
+    eparams, ecfg, _ = get_trained_embedder()
+    texts = ["how do i learn python setup"] * batch
+    t, m = tok.encode_batch(texts, seq)
+    f = jax.jit(lambda t, m: embed_encode(eparams, t, m, ecfg))
+    jax.block_until_ready(f(jnp.asarray(t), jnp.asarray(m)))
+    t0 = time.perf_counter()
+    for _ in range(10):
+        jax.block_until_ready(f(jnp.asarray(t), jnp.asarray(m)))
+    us = (time.perf_counter() - t0) / 10 * 1e6
+    csv_row("embed_batch8", us, f"dim={ecfg.d_model};layers={ecfg.num_layers}")
+
+
+def bench_route(batch=1024):
+    s = jax.random.uniform(jax.random.PRNGKey(0), (batch,))
+    f = jax.jit(lambda s: route(s, RouterConfig()))
+    jax.block_until_ready(f(s))
+    t0 = time.perf_counter()
+    for _ in range(20):
+        jax.block_until_ready(f(s))
+    us = (time.perf_counter() - t0) / 20 * 1e6
+    csv_row("route_1024", us, "threshold_compare")
+
+
+def bench_insert(capacity=4096, dim=384):
+    cfg = cache_lib.CacheConfig(capacity=capacity, dim=dim)
+    st = cache_lib.init_cache(cfg)
+    e = jax.random.normal(jax.random.PRNGKey(0), (dim,))
+    z = jnp.zeros((cfg.max_query_tokens,), jnp.int32)
+    m = jnp.ones((cfg.max_query_tokens,), jnp.float32)
+    z2 = jnp.zeros((cfg.max_response_tokens,), jnp.int32)
+    m2 = jnp.ones((cfg.max_response_tokens,), jnp.float32)
+    f = jax.jit(lambda st, e: cache_lib.insert(st, cfg, e, z, m, z2, m2))
+    st = f(st, e)
+    jax.block_until_ready(st["emb"])
+    t0 = time.perf_counter()
+    for _ in range(10):
+        st = f(st, e)
+    jax.block_until_ready(st["emb"])
+    us = (time.perf_counter() - t0) / 10 * 1e6
+    csv_row("cache_insert", us, f"capacity={capacity};ring_fifo")
+
+
+def main():
+    bench_lookup()
+    bench_lookup_pallas_interpret()
+    bench_embed()
+    bench_route()
+    bench_insert()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,207 @@
+"""§Roofline: three-term analysis per (arch x shape x mesh) from the dry-run.
+
+  compute term    = FLOPs        / (chips x 197 TFLOP/s bf16)
+  memory term     = HBM bytes    / (chips x 819 GB/s)
+  collective term = coll. bytes  / (chips x 50 GB/s/link)
+
+FLOPs: XLA's cost_analysis() counts while-loop bodies ONCE (verified
+empirically: flops are ~constant in num_layers under scan), so compute/
+memory terms use ANALYTIC per-config formulas (below), cross-checked
+against the HLO numbers for the unscanned program parts.  Collective bytes
+come from the dry-run HLO with loop-body trip-count scaling (dryrun.py).
+
+MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N = active params —
+the ratio MODEL_FLOPS / analytic-HLO-FLOPs exposes remat/dispatch waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict
+
+from repro.configs import get_config
+from repro.launch.shapes import INPUT_SHAPES
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+# ------------------------------------------------------- analytic flops
+
+def _attn_flops_per_layer(cfg, seq, batch, kind, window=0):
+    """Projections + score/PV flops for one attention layer (fwd)."""
+    d, h, hk, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    tokens = batch * (1 if kind == "decode" else seq)
+    proj = 2 * tokens * d * (h + 2 * hk) * dh + 2 * tokens * h * dh * d
+    if kind == "decode":
+        ctx = min(seq, window) if window else seq
+        sc = 2 * batch * h * dh * ctx * 2          # qk + pv, one token
+    else:
+        eff = min(seq, window) if window else seq
+        avg_ctx = eff / 2 if not window else min(window, seq / 2)
+        sc = 2 * batch * seq * h * dh * avg_ctx * 2
+    return proj + sc
+
+
+def _mlp_flops_per_layer(cfg, seq, batch, kind):
+    tokens = batch * (1 if kind == "decode" else seq)
+    mult = 3 if cfg.mlp_type == "swiglu" else 2
+    return 2 * tokens * cfg.d_model * cfg.d_ff * mult
+
+
+def _moe_flops_per_layer(cfg, seq, batch, kind):
+    tokens = batch * (1 if kind == "decode" else seq)
+    d, e, k, f = cfg.d_model, cfg.num_experts, cfg.experts_per_token, cfg.moe_d_ff
+    router = 2 * tokens * d * e
+    experts = 2 * tokens * k * 3 * d * f
+    # GShard dispatch+combine einsum cost: tokens x E x C x d each way.
+    s_g = 1 if kind == "decode" else seq
+    cap = max(8, int(cfg.capacity_factor * k * s_g / e + 7) // 8 * 8)
+    dispatch = 2 * tokens * e * cap * d * 2
+    dense = _mlp_flops_per_layer(cfg, seq, batch, kind) if cfg.moe_dense_residual else 0
+    return router + experts + dispatch + dense
+
+
+def _ssm_flops_per_layer(cfg, seq, batch, kind):
+    tokens = batch * (1 if kind == "decode" else seq)
+    d, di = cfg.d_model, cfg.ssm_d_inner
+    n, h, p = cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    g = cfg.ssm_groups
+    proj = 2 * tokens * d * (2 * di + 2 * g * n + h) + 2 * tokens * di * d
+    conv = 2 * tokens * (di + 2 * g * n) * cfg.ssm_conv_width
+    if kind == "decode":
+        ssd = 2 * tokens * h * p * n * 2
+    else:
+        L = min(cfg.ssm_chunk, seq)
+        ssd = tokens * (2 * L * g * n + 2 * L * h * p + 8 * h * p * n)
+    return proj + conv + ssd
+
+
+def _rglru_flops_per_layer(cfg, seq, batch, kind):
+    tokens = batch * (1 if kind == "decode" else seq)
+    d, w = cfg.d_model, cfg.resolved_rnn_width
+    return (2 * tokens * d * w * 2 + 2 * tokens * w * d
+            + 2 * tokens * w * w * 2 + 10 * tokens * w)
+
+
+def analytic_fwd_flops(cfg, shape_name: str) -> float:
+    seq, batch, kind = INPUT_SHAPES[shape_name]
+    total = 0.0
+    for i in range(cfg.num_layers):
+        k_ = cfg.block_pattern[i % len(cfg.block_pattern)]
+        if k_ in ("attn", "local_attn"):
+            win = cfg.sliding_window if (k_ == "local_attn" or cfg.sliding_window) else 0
+            total += _attn_flops_per_layer(cfg, seq, batch, kind, win)
+            total += _mlp_flops_per_layer(cfg, seq, batch, kind)
+        elif k_ == "moe":
+            win = cfg.sliding_window
+            total += _attn_flops_per_layer(cfg, seq, batch, kind, win)
+            total += _moe_flops_per_layer(cfg, seq, batch, kind)
+        elif k_ == "mamba2":
+            total += _ssm_flops_per_layer(cfg, seq, batch, kind)
+        elif k_ == "rglru":
+            total += _rglru_flops_per_layer(cfg, seq, batch, kind)
+            total += _mlp_flops_per_layer(cfg, seq, batch, kind)
+    if cfg.enc_layers:  # whisper encoder + cross attention
+        f = cfg.enc_frames
+        # decode does NOT re-run the encoder (cross K/V cached at prefill)
+        enc = 0 if kind == "decode" else cfg.enc_layers * (
+            _attn_flops_per_layer(cfg, f, batch, "prefill")
+            + _mlp_flops_per_layer(cfg, f, batch, "prefill"))
+        tokens = batch * (1 if kind == "decode" else seq)
+        cross = cfg.num_layers * (2 * tokens * cfg.d_model
+                                  * (cfg.num_heads + 2 * cfg.num_kv_heads)
+                                  * cfg.resolved_head_dim
+                                  + 2 * tokens * cfg.num_heads
+                                  * cfg.resolved_head_dim * f * 2)
+        total += enc + cross
+    tokens = batch * (1 if kind == "decode" else seq)
+    total += 2 * tokens * cfg.d_model * cfg.padded_vocab      # logits
+    return total
+
+
+def analytic_step_flops(cfg, shape_name: str) -> float:
+    """Train: fwd + 2x bwd + 1x remat recompute; inference: fwd."""
+    seq, batch, kind = INPUT_SHAPES[shape_name]
+    f = analytic_fwd_flops(cfg, shape_name)
+    if kind == "train":
+        return f * (4.0 if cfg.remat else 3.0)
+    return f
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    seq, batch, kind = INPUT_SHAPES[shape_name]
+    n = cfg.param_count(active_only=True)
+    tokens = batch * (1 if kind == "decode" else seq)
+    return (6.0 if kind == "train" else 2.0) * n * tokens
+
+
+# ------------------------------------------------------------- reporting
+
+def load_records(mesh: str = "16x16", dry_dir: str = None):
+    d = dry_dir or os.environ.get("DRYRUN_DIR") or (
+        DRYRUN_DIR + "_optimized"
+        if glob.glob(os.path.join(DRYRUN_DIR + "_optimized", "*.json"))
+        else DRYRUN_DIR)
+    recs = []
+    for f in sorted(glob.glob(os.path.join(d, f"*__{mesh}.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def roofline_row(rec: Dict) -> Dict:
+    arch, shape = rec["arch"], rec["shape"]
+    if rec["status"] != "ok":
+        return {"arch": arch, "shape": shape, "status": rec["status"],
+                "reason": rec.get("reason", "")}
+    cfg = get_config(arch)
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    flops_total = analytic_step_flops(cfg, shape)
+    t_compute = flops_total / (chips * PEAK_FLOPS)
+    # memory term: per-device HBM traffic ~ cost_analysis bytes (per device,
+    # loop bodies once) is an undercount; floor it with resident bytes/dev.
+    mem = rec.get("memory", {})
+    resident = sum(mem.get(k, 0) for k in ("argument_size_in_bytes",
+                                           "temp_size_in_bytes",
+                                           "output_size_in_bytes"))
+    hbm_bytes = max(rec.get("cost", {}).get("bytes accessed", 0.0), resident)
+    t_memory = hbm_bytes / HBM_BW
+    coll = rec.get("collectives", {})
+    coll_bytes = sum(v for k, v in coll.items() if isinstance(v, (int, float)))
+    t_coll = coll_bytes / ICI_BW
+    mf = model_flops(cfg, shape)
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    return {
+        "arch": arch, "shape": shape, "mesh": rec["mesh"], "status": "ok",
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf, "analytic_flops": flops_total,
+        "useful_ratio": mf / max(flops_total, 1.0),
+        "mem_per_dev_gib": resident / 2 ** 30,
+        "hlo_flops_per_dev": rec.get("cost", {}).get("flops", 0.0),
+    }
+
+
+def main():
+    print("# roofline: arch,shape,mesh,t_compute,t_memory,t_collective,"
+          "dominant,useful_ratio,mem_gib")
+    for mesh in ("16x16",):
+        for rec in load_records(mesh):
+            r = roofline_row(rec)
+            if r.get("status") != "ok":
+                print(f"roofline_{r['arch']}_{r['shape']},0.0,"
+                      f"SKIPPED:{r.get('reason','')}")
+                continue
+            print(f"roofline_{r['arch']}_{r['shape']},0.0,"
+                  f"tc={r['t_compute_s']:.2e};tm={r['t_memory_s']:.2e};"
+                  f"tcoll={r['t_collective_s']:.2e};dom={r['dominant']};"
+                  f"useful={r['useful_ratio']:.2f};mem={r['mem_per_dev_gib']:.1f}GiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  fig2_*      precision/recall of GPTCache-style caching   (paper Fig 2)
+  fig3_*      satisfaction per similarity band             (paper Fig 3)
+  fig5/6/7_*  LLM-debate verdicts per band + control       (paper Figs 5-7)
+  fig89_*     cache-hit distribution + cost analysis       (paper Figs 8-9)
+  microbench  per-component latencies                      (paper Table 1)
+  roofline_*  dry-run roofline terms per (arch x shape)    (§Roofline)
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig2,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = ("fig2", "fig34567", "fig89", "microbench", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(SUITES))
+    args, _ = ap.parse_known_args()
+    only = set(args.only.split(",")) if args.only else set(SUITES)
+
+    from . import (fig2_precision_recall, fig34567_quality,
+                   fig89_cost_analysis, microbench, roofline)
+    mods = {
+        "fig2": fig2_precision_recall,
+        "fig34567": fig34567_quality,
+        "fig89": fig89_cost_analysis,
+        "microbench": microbench,
+        "roofline": roofline,
+    }
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in SUITES:
+        if name not in only:
+            continue
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            mods[name].main()
+        except Exception:
+            failures += 1
+            print(f"{name}_FAILED,0.0,{traceback.format_exc(limit=2)!r}")
+        print(f"# {name} took {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Cache-eviction policy study — the paper's §6.2 open question.
+
+Replays the same Zipfian workload against FIFO / LRU / LFU caches that are
+much smaller than the topic universe, and reports hit rates.  This is a
+beyond-paper extension: the paper ships append-only and explicitly defers
+eviction policies.
+
+  PYTHONPATH=src python examples/cache_policy_study.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as cache_lib
+from repro.data import WorkloadGenerator
+from repro.models.embedder import init_embedder, tiny_embedder_config, encode
+from repro.tokenizer import HashWordTokenizer
+from repro.training.embedder_train import train_embedder
+
+VOCAB = 8192
+THRESHOLD = 0.7
+
+
+def run_policy(policy: str, embs, capacity=96):
+    cfg = cache_lib.CacheConfig(capacity=capacity, dim=embs.shape[1],
+                                policy=policy, topk=1,
+                                max_query_tokens=4, max_response_tokens=4)
+    state = cache_lib.init_cache(cfg)
+    z = jnp.zeros((4,), jnp.int32)
+    m = jnp.ones((4,), jnp.float32)
+    lookup = jax.jit(lambda s, q: cache_lib.lookup(s, cfg, q))
+    insert = jax.jit(lambda s, e: cache_lib.insert(s, cfg, e, z, m, z, m))
+    hits = 0
+    for i in range(embs.shape[0]):
+        q = embs[i][None]
+        scores, idx = lookup(state, q)
+        if float(scores[0, 0]) >= THRESHOLD:
+            hits += 1
+            state = cache_lib.touch(state, cfg, idx[0, :1])
+        else:
+            state = insert(state, embs[i])
+    return hits / embs.shape[0]
+
+
+def main():
+    tok = HashWordTokenizer(VOCAB)
+    ecfg = tiny_embedder_config(VOCAB)
+    eparams = init_embedder(jax.random.PRNGKey(0), ecfg)
+    print("training embedder...")
+    eparams, _ = train_embedder(eparams, ecfg, tok, steps=50, batch=16)
+    wl = WorkloadGenerator(profile="lmsys", seed=0)
+    queries = [q.text for q in wl.sample(500)]
+    t, m = tok.encode_batch(queries, 32)
+    embs = np.asarray(jax.jit(lambda t, m: encode(eparams, t, m, ecfg))(
+        jnp.asarray(t), jnp.asarray(m)))
+
+    print(f"workload: 500 queries, cache capacity 96, threshold {THRESHOLD}")
+    for policy in ("fifo", "lru", "lfu"):
+        hr = run_policy(policy, embs)
+        print(f"  {policy.upper():5s} hit rate: {hr:.1%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""TweakLLM quickstart: the Figure-1 pipeline in ~40 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import build_engine
+
+DECISIONS = {0: "MISS->big LLM", 1: "TWEAK->small LLM", 2: "EXACT->cache"}
+
+
+def main():
+    print("building TweakLLM stack (tiny models, contrastive embedder)...")
+    eng = build_engine(train_embedder_steps=40, capacity=256)
+
+    queries = [
+        "how do i learn python setup",           # fresh -> MISS
+        "how do i learn python setup",           # repeat -> EXACT
+        "what is the best way to learn python setup",  # paraphrase -> TWEAK
+        "why is keto diet bad",                  # fresh -> MISS
+        "what are the downsides of keto diet",   # paraphrase
+    ]
+    for q in queries:
+        resp, meta = eng.handle_batch([q], max_new_tokens=8, collect_meta=True)
+        m = meta[0]
+        print(f"  sim={m['sim']:+.3f}  {DECISIONS[m['decision']]:18s}  {q!r}")
+    s = eng.stats
+    print(f"\nrouting: miss={s.miss} tweak={s.tweak} exact={s.exact}")
+    print(f"cost: {s.cost:.0f} vs all-big {s.baseline_cost:.0f} "
+          f"({s.cost/max(s.baseline_cost,1):.0%})")
+
+
+if __name__ == "__main__":
+    main()

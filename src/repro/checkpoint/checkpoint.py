@@ -1,0 +1,72 @@
+"""Checkpointing: pytree <-> directory of .npz + msgpack tree structure.
+
+Offline-friendly (no orbax/tensorstore): leaves go into a single compressed
+.npz keyed by flattened path; the treedef and metadata (step, config) go
+into a msgpack sidecar.  Atomic via tmp-dir rename.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                    metadata: Optional[dict] = None):
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    dtypes = {k: str(v.dtype) for k, v in flat.items()}
+    np.savez_compressed(os.path.join(tmp, "arrays.npz"),
+                        **{k: v.astype(np.float32) if v.dtype == jnp.bfloat16
+                           else v for k, v in flat.items()})
+    meta = {"step": step, "dtypes": dtypes, "metadata": metadata or {}}
+    with open(os.path.join(tmp, "meta.msgpack"), "wb") as f:
+        f.write(msgpack.packb(meta))
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def load_checkpoint(ckpt_dir: str, step: int, like: Any) -> Tuple[Any, dict]:
+    """Restores into the structure of ``like`` (shapes/dtypes from template)."""
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "meta.msgpack"), "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_like = _flatten(like)
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    keys = list(flat_like.keys())
+    assert len(keys) == len(leaves)
+    restored = []
+    for k, leaf in zip(keys, leaves):
+        arr = data[k]
+        tgt = jnp.dtype(meta["dtypes"][k])
+        restored.append(jnp.asarray(arr, dtype=tgt))
+    return jax.tree_util.tree_unflatten(treedef, restored), meta
+
+
+def latest_checkpoint(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_")]
+    return max(steps) if steps else None

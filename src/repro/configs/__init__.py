@@ -1,0 +1,42 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Each module exports CONFIG (exact assigned spec), SMOKE_CONFIG (reduced
+same-family variant for CPU tests) and SKIP_SHAPES (shape -> reason).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+_MODULES = {
+    "whisper-tiny": "whisper_tiny",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "internvl2-26b": "internvl2_26b",
+    "arctic-480b": "arctic_480b",
+    "mamba2-130m": "mamba2_130m",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    # paper's own model pair (not part of the assigned 10)
+    "llama-3.1-8b": "llama31_8b",
+}
+
+ASSIGNED_ARCHS = tuple(k for k in _MODULES if k != "llama-3.1-8b")
+
+
+def get_arch(arch_id: str):
+    """Returns the config module for an architecture id."""
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str, smoke: bool = False):
+    mod = get_arch(arch_id)
+    return mod.SMOKE_CONFIG if smoke else mod.CONFIG
+
+
+def skip_reason(arch_id: str, shape: str):
+    return get_arch(arch_id).SKIP_SHAPES.get(shape)

@@ -1,0 +1,6 @@
+# TweakLLM core: semantic cache + threshold router + tweak engine.
+from . import cache, router, tweak
+from .cache import CacheConfig, init_cache, insert, lookup, fetch
+from .router import RouterConfig, route, band_of, MISS, TWEAK, EXACT
+from .engine import TweakLLMEngine, EngineStats
+from .baseline import GPTCacheBaseline, BaselineConfig

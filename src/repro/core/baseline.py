@@ -1,0 +1,91 @@
+"""GPTCache-style baseline (the paper's foil, §4.2.1 / Fig 2).
+
+Single-layer semantic cache: embed -> ANN top-k -> cross-encoder re-rank ->
+return the cached response VERBATIM when the best candidate clears the
+threshold.  No tweaking.  Used to reproduce the precision/recall curves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.embedder import encode as embed_encode
+from repro.models.reranker import score_pairs
+from repro.serving.batcher import pad_to_buckets
+from repro.tokenizer import HashWordTokenizer
+
+from . import cache as cache_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineConfig:
+    similarity_threshold: float = 0.7
+    rerank: str = "cross_encoder"  # cross_encoder | none
+    topk: int = 4
+
+
+class GPTCacheBaseline:
+    def __init__(self, *, tokenizer: HashWordTokenizer, embedder_params,
+                 embedder_cfg, reranker_params=None, reranker_cfg=None,
+                 cache_cfg: cache_lib.CacheConfig, cfg: BaselineConfig,
+                 max_query_len: int = 64):
+        self.tok = tokenizer
+        self.embedder_params = embedder_params
+        self.embedder_cfg = embedder_cfg
+        self.reranker_params = reranker_params
+        self.reranker_cfg = reranker_cfg
+        self.cache_cfg = cache_cfg
+        self.cfg = cfg
+        self.max_query_len = max_query_len
+        self.state = cache_lib.init_cache(cache_cfg)
+        self._texts = {}
+
+        self._embed = jax.jit(lambda p, t, m: embed_encode(p, t, m, embedder_cfg))
+        self._lookup = jax.jit(lambda s, q: cache_lib.lookup(s, cache_cfg, q))
+        if reranker_params is not None:
+            self._rerank = jax.jit(
+                lambda p, ta, ma, tb, mb: score_pairs(p, ta, ma, tb, mb, reranker_cfg))
+
+    def _embed_texts(self, texts: List[str]) -> jnp.ndarray:
+        toks, mask = self.tok.encode_batch(texts, self.max_query_len)
+        toks, mask, b = pad_to_buckets(toks, mask)
+        return self._embed(self.embedder_params, jnp.asarray(toks),
+                           jnp.asarray(mask))[:b]
+
+    def put(self, query: str, response: str):
+        emb = self._embed_texts([query])[0]
+        qt, qm = self.tok.encode_batch([query], self.cache_cfg.max_query_tokens)
+        rt, rm = self.tok.encode_batch([response], self.cache_cfg.max_response_tokens)
+        slot = int(np.asarray(cache_lib._victim_slot(self.state, self.cache_cfg)))
+        self.state = cache_lib.insert(self.state, self.cache_cfg, emb,
+                                      jnp.asarray(qt[0]), jnp.asarray(qm[0]),
+                                      jnp.asarray(rt[0]), jnp.asarray(rm[0]))
+        self._texts[slot] = (query, response)
+
+    def get(self, query: str) -> Tuple[Optional[str], Optional[str], float]:
+        """Returns (cached_query, cached_response, score) or (None, None, s)."""
+        emb = self._embed_texts([query])
+        scores, idxs = self._lookup(self.state, emb)
+        scores, idxs = np.asarray(scores[0]), np.asarray(idxs[0])
+        live = [(s, i) for s, i in zip(scores, idxs) if i >= 0 and np.isfinite(s)]
+        if not live or live[0][0] < self.cfg.similarity_threshold:
+            return None, None, float(scores[0]) if np.isfinite(scores[0]) else -1.0
+        if self.cfg.rerank == "cross_encoder" and self.reranker_params is not None:
+            cands = [self._texts[int(i)][0] for _, i in live]
+            ta, ma = self.tok.encode_batch([query] * len(cands), self.max_query_len)
+            tb, mb = self.tok.encode_batch(cands, self.max_query_len)
+            ta, ma, b = pad_to_buckets(ta, ma)
+            tb, mb, _ = pad_to_buckets(tb, mb)
+            rr = np.asarray(self._rerank(self.reranker_params, jnp.asarray(ta),
+                                         jnp.asarray(ma), jnp.asarray(tb),
+                                         jnp.asarray(mb)))[:b]
+            best = int(np.argmax(rr))
+        else:
+            best = 0
+        slot = int(live[best][1])
+        cq, cr = self._texts[slot]
+        return cq, cr, float(live[best][0])

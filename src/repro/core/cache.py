@@ -1,0 +1,105 @@
+"""Functional semantic vector cache — the TweakLLM vector DB.
+
+Fixed-capacity, fully JAX (fixed shapes, jit-safe): unit-norm embeddings,
+token buffers for cached query/response texts, validity mask, and an
+insertion policy.  The paper ships append-only (== ring/FIFO here, which is
+append-only until capacity); LRU and LFU are implemented as the
+§6.2 "cache eviction policies" extension.
+
+Lookup dispatches to the Pallas ``cosine_topk`` kernel (TPU target) or its
+XLA reference; ``repro.core.distributed`` wraps it in shard_map for the
+sharded production cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cosine_topk.ops import cosine_topk
+
+POLICIES = ("fifo", "lru", "lfu")
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    capacity: int = 4096
+    dim: int = 384
+    max_query_tokens: int = 64
+    max_response_tokens: int = 256
+    policy: str = "fifo"
+    topk: int = 4
+    lookup_impl: str = "xla"  # xla | pallas
+    block_n: int = 1024
+
+
+def init_cache(cfg: CacheConfig):
+    c = cfg.capacity
+    return {
+        "emb": jnp.zeros((c, cfg.dim), jnp.float32),
+        "q_tokens": jnp.zeros((c, cfg.max_query_tokens), jnp.int32),
+        "q_mask": jnp.zeros((c, cfg.max_query_tokens), jnp.float32),
+        "r_tokens": jnp.zeros((c, cfg.max_response_tokens), jnp.int32),
+        "r_mask": jnp.zeros((c, cfg.max_response_tokens), jnp.float32),
+        "valid": jnp.zeros((c,), bool),
+        "ptr": jnp.zeros((), jnp.int32),          # ring pointer (fifo)
+        "last_used": jnp.zeros((c,), jnp.int32),  # lru clock
+        "hits": jnp.zeros((c,), jnp.int32),       # lfu counter
+        "clock": jnp.zeros((), jnp.int32),
+        "size": jnp.zeros((), jnp.int32),
+    }
+
+
+def _victim_slot(state, cfg: CacheConfig):
+    full = state["size"] >= cfg.capacity
+    if cfg.policy == "fifo":
+        return state["ptr"] % cfg.capacity
+    score = jnp.where(state["valid"],
+                      state["last_used"] if cfg.policy == "lru" else state["hits"],
+                      -1)
+    evict = jnp.argmin(jnp.where(state["valid"], score, jnp.iinfo(jnp.int32).max))
+    return jnp.where(full, evict.astype(jnp.int32), state["ptr"] % cfg.capacity)
+
+
+def insert(state, cfg: CacheConfig, emb, q_tokens, q_mask, r_tokens, r_mask):
+    """Insert ONE entry (emb (D,), tokens already padded to cfg lengths)."""
+    slot = _victim_slot(state, cfg)
+    emb = emb / jnp.maximum(jnp.linalg.norm(emb), 1e-8)
+    upd = lambda buf, val: buf.at[slot].set(val.astype(buf.dtype))
+    new = dict(state)
+    new["emb"] = upd(state["emb"], emb)
+    new["q_tokens"] = upd(state["q_tokens"], q_tokens)
+    new["q_mask"] = upd(state["q_mask"], q_mask)
+    new["r_tokens"] = upd(state["r_tokens"], r_tokens)
+    new["r_mask"] = upd(state["r_mask"], r_mask)
+    new["valid"] = state["valid"].at[slot].set(True)
+    new["last_used"] = state["last_used"].at[slot].set(state["clock"])
+    new["hits"] = state["hits"].at[slot].set(0)
+    new["ptr"] = state["ptr"] + 1
+    new["clock"] = state["clock"] + 1
+    new["size"] = jnp.minimum(state["size"] + 1, cfg.capacity)
+    return new
+
+
+def lookup(state, cfg: CacheConfig, q_embs):
+    """q_embs (B, D) unit vectors -> (scores (B,k), indices (B,k))."""
+    k = min(cfg.topk, cfg.capacity)
+    return cosine_topk(q_embs, state["emb"], state["valid"], k=k,
+                       impl=cfg.lookup_impl, block_n=min(cfg.block_n, cfg.capacity))
+
+
+def touch(state, cfg: CacheConfig, indices):
+    """Record cache hits for LRU/LFU accounting.  indices: (B,) top-1 hits."""
+    new = dict(state)
+    new["last_used"] = state["last_used"].at[indices].set(state["clock"])
+    new["hits"] = state["hits"].at[indices].add(1)
+    new["clock"] = state["clock"] + 1
+    return new
+
+
+def fetch(state, indices):
+    """Gather cached (q_tokens, q_mask, r_tokens, r_mask) rows for indices (B,)."""
+    g = lambda buf: jnp.take(buf, indices, axis=0)
+    return g(state["q_tokens"]), g(state["q_mask"]), g(state["r_tokens"]), g(state["r_mask"])

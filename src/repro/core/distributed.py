@@ -1,0 +1,84 @@
+"""Sharded semantic-cache lookup: shard_map over the mesh 'data' axis.
+
+The cache's (C, D) embedding bank is row-sharded across data devices (the
+TPU-native replacement for Milvus's IVF partitions — see DESIGN.md §3).
+Each device scans its local shard with the cosine-top-k kernel, then the
+tiny (B, k) per-shard winners are all-gathered and merged to a global
+top-k.  Communication: B * k * 8 bytes per shard — microscopic next to the
+HBM-bound local scan, so the lookup scales linearly in device count.
+
+Insertion routes an entry to shard ``slot // local_capacity`` (globally
+rotating pointer), keeping shards balanced.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.kernels.cosine_topk.ops import cosine_topk
+from . import cache as cache_lib
+
+
+def shard_cache_state(state, mesh: Mesh, axis: str = "data"):
+    """Places cache buffers row-sharded over ``axis`` (others replicated)."""
+    row_sharded = {"emb", "q_tokens", "q_mask", "r_tokens", "r_mask", "valid",
+                   "last_used", "hits"}
+    out = {}
+    for k, v in state.items():
+        spec = P(axis) if k in row_sharded else P()
+        out[k] = jax.device_put(v, NamedSharding(mesh, spec))
+    return out
+
+
+def make_distributed_lookup(mesh: Mesh, cfg: cache_lib.CacheConfig,
+                            axis: str = "data"):
+    """Builds a jitted (state, q_embs) -> (scores, idx) sharded lookup."""
+    n_shards = mesh.shape[axis]
+    assert cfg.capacity % n_shards == 0, (cfg.capacity, n_shards)
+    local_c = cfg.capacity // n_shards
+    k = cfg.topk
+
+    def local_lookup(emb, valid, q):
+        # emb: (local_c, D); q: (B, D) replicated
+        s, i = cosine_topk(q, emb, valid, k=k, impl=cfg.lookup_impl,
+                           block_n=min(cfg.block_n, local_c))
+        shard = jax.lax.axis_index(axis)
+        gi = jnp.where(i >= 0, i + shard * local_c, -1)
+        # all-gather the (B,k) winners from every shard and merge
+        all_s = jax.lax.all_gather(s, axis)            # (n_shards, B, k)
+        all_i = jax.lax.all_gather(gi, axis)
+        b = q.shape[0]
+        flat_s = jnp.moveaxis(all_s, 0, 1).reshape(b, n_shards * k)
+        flat_i = jnp.moveaxis(all_i, 0, 1).reshape(b, n_shards * k)
+        top_s, pos = jax.lax.top_k(flat_s, k)
+        top_i = jnp.take_along_axis(flat_i, pos, axis=1)
+        return top_s, top_i
+
+    sm = shard_map(
+        local_lookup, mesh=mesh,
+        in_specs=(P(axis), P(axis), P()),
+        out_specs=(P(), P()),
+        check_rep=False)
+
+    @jax.jit
+    def lookup(state, q_embs):
+        return sm(state["emb"], state["valid"], q_embs)
+
+    return lookup
+
+
+def make_distributed_insert(mesh: Mesh, cfg: cache_lib.CacheConfig,
+                            axis: str = "data"):
+    """Jitted ring-buffer insert against the sharded state (FIFO policy)."""
+
+    @jax.jit
+    def insert(state, emb, q_tokens, q_mask, r_tokens, r_mask):
+        return cache_lib.insert(state, cfg, emb, q_tokens, q_mask,
+                                r_tokens, r_mask)
+
+    return insert

@@ -1,0 +1,191 @@
+"""TweakLLMEngine — the paper's Figure-1 pipeline, end to end.
+
+Per incoming batch of text queries:
+  1. tokenize + embed (MiniLM-class embedder, unit vectors)
+  2. semantic-cache lookup (Pallas cosine top-k / sharded variant)
+  3. threshold routing -> EXACT | TWEAK | MISS sub-batches (host split —
+     the TPU analogue of per-request branching; see DESIGN.md §3)
+  4. MISS  -> Big LLM generates; (query, response) inserted into the cache
+     TWEAK -> Small LLM prefills the Appendix-A tweak prompt and decodes
+     EXACT -> cached response returned verbatim (§6.1 fast path)
+
+Cost accounting mirrors the paper's §5.2.3 analysis: per-token cost ratio
+``big_cost_per_token`` : ``small_cost_per_token`` defaults to 25:1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.embedder import encode as embed_encode
+from repro.models.model import Model
+from repro.serving.batcher import pad_to_buckets
+from repro.serving.generate import GenerateConfig, Generator
+from repro.tokenizer import HashWordTokenizer
+
+from . import cache as cache_lib
+from . import router as router_lib
+from . import tweak as tweak_lib
+
+
+@dataclasses.dataclass
+class EngineStats:
+    total: int = 0
+    miss: int = 0
+    tweak: int = 0
+    exact: int = 0
+    big_tokens: int = 0
+    small_tokens: int = 0
+    big_cost_per_token: float = 25.0
+    small_cost_per_token: float = 1.0
+
+    @property
+    def cost(self) -> float:
+        return (self.big_tokens * self.big_cost_per_token
+                + self.small_tokens * self.small_cost_per_token)
+
+    @property
+    def baseline_cost(self) -> float:
+        """What the same generated-token volume would cost all-Big."""
+        return (self.big_tokens + self.small_tokens) * self.big_cost_per_token
+
+    @property
+    def hit_rate(self) -> float:
+        return (self.tweak + self.exact) / max(self.total, 1)
+
+
+class TweakLLMEngine:
+    def __init__(self, *, tokenizer: HashWordTokenizer,
+                 embedder_params, embedder_cfg,
+                 big: Generator, small: Generator,
+                 cache_cfg: cache_lib.CacheConfig,
+                 router_cfg: router_lib.RouterConfig = router_lib.RouterConfig(),
+                 max_query_len: int = 64):
+        self.tok = tokenizer
+        self.embedder_params = embedder_params
+        self.embedder_cfg = embedder_cfg
+        self.big = big
+        self.small = small
+        self.cache_cfg = cache_cfg
+        self.router_cfg = router_cfg
+        self.max_query_len = max_query_len
+        self.state = cache_lib.init_cache(cache_cfg)
+        self.stats = EngineStats()
+        # host-side mirror of cached texts (display only; tokens are truth)
+        self._text_store: Dict[int, Tuple[str, str]] = {}
+        self._insert_seq = 0
+
+        self._embed = jax.jit(
+            lambda p, t, m: embed_encode(p, t, m, embedder_cfg))
+        self._lookup = jax.jit(
+            lambda s, q: cache_lib.lookup(s, cache_cfg, q))
+
+    # ------------------------------------------------------------- embed
+    def embed_texts(self, texts: List[str]) -> jnp.ndarray:
+        toks, mask = self.tok.encode_batch(texts, self.max_query_len)
+        toks, mask, b = pad_to_buckets(toks, mask)
+        return self._embed(self.embedder_params, jnp.asarray(toks),
+                           jnp.asarray(mask))[:b]
+
+    # ------------------------------------------------------------- serve
+    def handle_batch(self, queries: List[str], *, max_new_tokens: int = 32,
+                     collect_meta: bool = False):
+        queries = [tweak_lib.preprocess_query(q) for q in queries]
+        n = len(queries)
+        embs = self.embed_texts(queries)
+        scores, idxs = self._lookup(self.state, embs)
+        top1 = np.asarray(scores[:, 0])
+        top1_idx = np.asarray(idxs[:, 0])
+        decisions = np.asarray(router_lib.route(jnp.asarray(top1), self.router_cfg))
+
+        responses: List[Optional[str]] = [None] * n
+        meta = [{"sim": float(top1[i]), "decision": int(decisions[i]),
+                 "band": int(np.asarray(router_lib.band_of(jnp.asarray([top1[i]])))[0])}
+                for i in range(n)]
+
+        # EXACT: verbatim cached response
+        for i in np.nonzero(decisions == router_lib.EXACT)[0]:
+            slot = int(top1_idx[i])
+            cached = self._text_store.get(slot)
+            responses[i] = cached[1] if cached else self._decode_cached(slot)
+            self.stats.exact += 1
+        # TWEAK: small LLM refines cached response
+        tweak_ids = np.nonzero(decisions == router_lib.TWEAK)[0]
+        if len(tweak_ids):
+            self._run_tweak(queries, tweak_ids, top1_idx, responses,
+                            max_new_tokens)
+        # MISS: big LLM generates from scratch + cache insert
+        miss_ids = np.nonzero(decisions == router_lib.MISS)[0]
+        if len(miss_ids):
+            self._run_miss(queries, miss_ids, embs, responses, max_new_tokens)
+
+        self.stats.total += n
+        if collect_meta:
+            return responses, meta
+        return responses
+
+    # ------------------------------------------------------------- paths
+    def _decode_cached(self, slot: int) -> str:
+        toks = np.asarray(self.state["r_tokens"][slot])
+        mask = np.asarray(self.state["r_mask"][slot])
+        return self.tok.decode_ids([int(t) for t, m in zip(toks, mask) if m > 0])
+
+    def _run_tweak(self, queries, ids, top1_idx, responses, max_new_tokens):
+        slots = [int(top1_idx[i]) for i in ids]
+        cached = [self._text_store.get(s, ("", "")) for s in slots]
+        texts = [tweak_lib.build_tweak_text(queries[i], cq, cr)
+                 for i, (cq, cr) in zip(ids, cached)]
+        toks, mask = self.tok.encode_batch(
+            texts, self.small.model.cfg.max_seq_len - max_new_tokens - 1)
+        toks, mask, b = pad_to_buckets(toks, mask)
+        out = self.small.generate({"tokens": jnp.asarray(toks)},
+                                  max_new_tokens=max_new_tokens)[:b]
+        self.state = cache_lib.touch(self.state, self.cache_cfg,
+                                     jnp.asarray(slots, jnp.int32))
+        for j, i in enumerate(ids):
+            responses[i] = self.tok.decode_ids(out[j].tolist())
+            self.stats.small_tokens += out.shape[1]
+            self.stats.tweak += 1
+
+    def _run_miss(self, queries, ids, embs, responses, max_new_tokens):
+        texts = [queries[i] for i in ids]
+        toks, mask = self.tok.encode_batch(texts, self.max_query_len)
+        toks, mask, b = pad_to_buckets(toks, mask)
+        out = self.big.generate({"tokens": jnp.asarray(toks)},
+                                max_new_tokens=max_new_tokens)[:b]
+        qtoks, qmask = self.tok.encode_batch(texts, self.cache_cfg.max_query_tokens)
+        for j, i in enumerate(ids):
+            resp_text = self.tok.decode_ids(out[j].tolist())
+            responses[i] = resp_text
+            rt = np.zeros((self.cache_cfg.max_response_tokens,), np.int32)
+            rm = np.zeros((self.cache_cfg.max_response_tokens,), np.float32)
+            rl = min(out.shape[1], self.cache_cfg.max_response_tokens)
+            rt[:rl] = out[j][:rl]
+            rm[:rl] = 1.0
+            slot = int(np.asarray(cache_lib._victim_slot(self.state, self.cache_cfg)))
+            self.state = cache_lib.insert(
+                self.state, self.cache_cfg, embs[i],
+                jnp.asarray(qtoks[j]), jnp.asarray(qmask[j]),
+                jnp.asarray(rt), jnp.asarray(rm))
+            self._text_store[slot] = (texts[j], resp_text)
+            self.stats.big_tokens += out.shape[1]
+            self.stats.miss += 1
+
+    # ------------------------------------------------- offline population
+    def populate(self, queries: List[str], responses: List[str]):
+        """Bulk-insert known (query, response) pairs (dataset simulation)."""
+        queries = [tweak_lib.preprocess_query(q) for q in queries]
+        embs = self.embed_texts(queries)
+        qt, qm = self.tok.encode_batch(queries, self.cache_cfg.max_query_tokens)
+        rt, rm = self.tok.encode_batch(responses, self.cache_cfg.max_response_tokens,
+                                       add_bos=False)
+        for i in range(len(queries)):
+            slot = int(np.asarray(cache_lib._victim_slot(self.state, self.cache_cfg)))
+            self.state = cache_lib.insert(
+                self.state, self.cache_cfg, embs[i], jnp.asarray(qt[i]),
+                jnp.asarray(qm[i]), jnp.asarray(rt[i]), jnp.asarray(rm[i]))
+            self._text_store[slot] = (queries[i], responses[i])

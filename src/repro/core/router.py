@@ -1,0 +1,40 @@
+"""Threshold-based routing — the decision layer of TweakLLM (§3.1).
+
+Routes each query by its top-1 cache similarity:
+  sim >= exact_threshold  -> EXACT  (return cached response verbatim, §6.1)
+  sim >= tweak_threshold  -> TWEAK  (Small LLM refines the cached response)
+  otherwise               -> MISS   (Big LLM generates; result is cached)
+
+Also reports the paper's cosine-similarity bands (0.7-0.8, 0.8-0.9,
+0.9-1.0) used throughout the evaluation figures.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+MISS, TWEAK, EXACT = 0, 1, 2
+BANDS = ((0.7, 0.8), (0.8, 0.9), (0.9, 1.01))
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    tweak_threshold: float = 0.7   # paper Table 1 initial threshold
+    exact_threshold: float = 0.9999
+
+
+def route(scores, cfg: RouterConfig):
+    """scores: (B,) top-1 cosine similarity -> decisions (B,) int32."""
+    d = jnp.zeros(scores.shape, jnp.int32)
+    d = jnp.where(scores >= cfg.tweak_threshold, TWEAK, d)
+    d = jnp.where(scores >= cfg.exact_threshold, EXACT, d)
+    return d
+
+
+def band_of(scores):
+    """Similarity band index per query: -1 below 0.7, else 0/1/2."""
+    b = jnp.full(scores.shape, -1, jnp.int32)
+    for i, (lo, hi) in enumerate(BANDS):
+        b = jnp.where((scores >= lo) & (scores < hi), i, b)
+    return b

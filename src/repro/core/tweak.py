@@ -1,0 +1,60 @@
+"""Tweak-prompt construction (paper Appendix A).
+
+Builds the Small LLM's input: instructions + current prompt + cached prompt
++ cached response, token-level, with fixed-shape padding so batched tweak
+prefills jit cleanly.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.tokenizer import HashWordTokenizer
+
+# Condensed Appendix-A instruction (token budget matters at our scales; the
+# full prompt text is reproduced in the paper — semantics preserved).
+TWEAK_INSTRUCTION = (
+    "you are part of a caching architecture . tailor the cached response to "
+    "the current user prompt for relevance accuracy precision and clarity . "
+    "do not reference the cached question . reflect the nuances and intent "
+    "of the new prompt .")
+
+# The paper appends this to every user query (Table 1, query preprocessing).
+QUERY_SUFFIX = " answer briefly"
+
+
+def preprocess_query(text: str) -> str:
+    return text.strip() + QUERY_SUFFIX
+
+
+def build_tweak_text(new_query: str, cached_query: str, cached_response: str) -> str:
+    return (f"{TWEAK_INSTRUCTION} user's current prompt : {new_query} . "
+            f"cached prompt : {cached_query} . cached response : "
+            f"{cached_response} . adapted response :")
+
+
+def build_tweak_batch(tokenizer: HashWordTokenizer, new_queries: List[str],
+                      cached_queries: List[str], cached_responses: List[str],
+                      max_len: int) -> Tuple[np.ndarray, np.ndarray]:
+    texts = [build_tweak_text(n, c, r) for n, c, r in
+             zip(new_queries, cached_queries, cached_responses)]
+    return tokenizer.encode_batch(texts, max_len)
+
+
+def build_tweak_batch_tokens(instr_tokens, new_q, new_q_mask, cached_q,
+                             cached_q_mask, cached_r, cached_r_mask):
+    """Fully-jittable token-level assembly (no text round-trip).
+
+    All inputs are fixed-shape (B, L_*) arrays; output is their fixed-shape
+    concatenation [instr | cached_q | cached_r | new_q] with combined mask.
+    Padding stays in place (attention masks handle it).
+    """
+    import jax.numpy as jnp
+    b = new_q.shape[0]
+    instr = jnp.broadcast_to(instr_tokens[None, :], (b, instr_tokens.shape[0]))
+    instr_mask = jnp.ones(instr.shape, jnp.float32)
+    tokens = jnp.concatenate([instr, cached_q, cached_r, new_q], axis=1)
+    mask = jnp.concatenate([instr_mask, cached_q_mask, cached_r_mask,
+                            new_q_mask], axis=1)
+    return tokens, mask

@@ -1,0 +1,3 @@
+from .judge import make_loglik_scorer, PERSONAS, persona_score
+from .debate import run_debate, debate_batch, verdict_shares, DebateResult
+from .metrics import precision_recall, pr_curve

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: tiled cosine-similarity scan with running top-k.
+
+The semantic-cache lookup hot loop.  The (N, D) embedding shard streams
+through VMEM in (block_n, D) tiles; each tile's (B, block_n) score panel is
+one MXU matmul; a per-query running top-k lives in VMEM scratch across the
+sequential grid.  Top-k update is k rounds of masked max (k is small — a
+sort network is a poor fit for the VPU).
+
+Grid: (N // block_n,) — sequential on TPU, so scratch persists across steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30  # python float: jnp constants get captured as kernel consts
+
+
+def _kernel(q_ref, db_ref, valid_ref, out_s_ref, out_i_ref,
+            run_s, run_i, *, k: int, block_n: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        run_s[...] = jnp.full_like(run_s, NEG)
+        run_i[...] = jnp.full_like(run_i, -1)
+
+    q = q_ref[...].astype(jnp.float32)              # (B, D)
+    db = db_ref[...].astype(jnp.float32)            # (block_n, D)
+    scores = jax.lax.dot_general(
+        q, db, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (B, block_n)
+    base = step * block_n
+    col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1) + base
+    scores = jnp.where(valid_ref[...][None, :] != 0, scores, NEG)
+
+    rs, ri = run_s[...], run_i[...]                  # (B, k), sorted desc
+    s, idx = scores, col
+    for j in range(k):
+        # best remaining candidate in the tile pool (VPU-friendly: no gather)
+        best = jnp.max(s, axis=1, keepdims=True)                    # (B,1)
+        bidx = jnp.argmax(s, axis=1)                                # (B,)
+        consumed = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) == bidx[:, None]
+        bcol = jnp.sum(jnp.where(consumed, idx, 0), axis=1, keepdims=True)
+        # compare with the j-th running slot: larger wins the slot, the
+        # loser is re-injected into the pool to compete for slot j+1
+        slot_s = rs[:, j:j + 1]
+        slot_i = ri[:, j:j + 1]
+        take_new = best > slot_s
+        rs = jax.lax.dynamic_update_slice(
+            rs, jnp.where(take_new, best, slot_s), (0, j))
+        ri = jax.lax.dynamic_update_slice(
+            ri, jnp.where(take_new, bcol, slot_i), (0, j))
+        # when the candidate wins, the demoted slot value takes its pool spot;
+        # when it loses it simply stays in the pool.
+        s = jnp.where(consumed & take_new, jnp.broadcast_to(slot_s, s.shape), s)
+        idx = jnp.where(consumed & take_new, jnp.broadcast_to(slot_i, idx.shape), idx)
+    run_s[...] = rs
+    run_i[...] = ri
+
+    @pl.when(step == pl.num_programs(0) - 1)
+    def _final():
+        out_s_ref[...] = run_s[...]
+        out_i_ref[...] = run_i[...]
+
+
+def cosine_topk_pallas(queries, db, k: int, valid=None, *,
+                       block_n: int = 1024, interpret: bool = True):
+    b, d = queries.shape
+    n = db.shape[0]
+    block_n = min(block_n, n)
+    assert n % block_n == 0, f"N={n} not divisible by block_n={block_n}"
+    if valid is None:
+        valid = jnp.ones((n,), jnp.int32)
+    else:
+        valid = valid.astype(jnp.int32)
+    grid = (n // block_n,)
+    out_s, out_i = pl.pallas_call(
+        functools.partial(_kernel, k=k, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, k), lambda i: (0, 0)),
+            pl.BlockSpec((b, k), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((b, k), jnp.float32),
+            pltpu.VMEM((b, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, db, valid)
+    return out_s, out_i

@@ -1,0 +1,27 @@
+"""Jit'd public wrapper for the cosine top-k lookup.
+
+Dispatches to the Pallas kernel on TPU (or interpret mode for validation)
+and to the XLA reference elsewhere.  This is the op the semantic cache
+calls; ``repro.core.distributed`` shards it with shard_map.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import cosine_topk_pallas
+from .ref import cosine_topk_ref
+
+
+@functools.partial(jax.jit, static_argnames=("k", "impl", "block_n"))
+def cosine_topk(queries, db, valid=None, *, k: int = 4, impl: str = "xla",
+                block_n: int = 1024):
+    """queries (B,D) x db (N,D) -> (scores (B,k), indices (B,k))."""
+    if impl == "pallas":
+        s, i = cosine_topk_pallas(queries, db, k, valid, block_n=block_n,
+                                  interpret=jax.default_backend() != "tpu")
+        # kernel reports NEG for sub-k matches; normalize to -inf like ref
+        return jnp.where(i >= 0, s, -jnp.inf), i
+    return cosine_topk_ref(queries, db, k, valid)

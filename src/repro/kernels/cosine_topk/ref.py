@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the cosine top-k cache-lookup kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def cosine_topk_ref(queries, db, k: int, valid=None):
+    """queries: (B, D) unit vectors; db: (N, D) unit vectors.
+
+    Returns (scores (B, k) f32 desc-sorted, indices (B, k) i32).
+    ``valid``: optional (N,) bool; invalid entries score -inf.
+    """
+    scores = jnp.einsum("bd,nd->bn", queries.astype(jnp.float32),
+                        db.astype(jnp.float32))
+    if valid is not None:
+        scores = jnp.where(valid[None, :], scores, -jnp.inf)
+    top_s, top_i = jax.lax.top_k(scores, k)
+    return top_s, top_i.astype(jnp.int32)

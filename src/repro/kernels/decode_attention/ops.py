@@ -1,0 +1,20 @@
+"""Jit'd public wrapper for the decode-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import decode_attention_pallas
+from .ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "impl"))
+def decode_attention(q, k, v, cache_len, *, block_t: int = 1024,
+                     impl: str = "pallas"):
+    """q (B,H,dh) vs cache k/v (B,T,Hk,dh), valid prefix cache_len (B,)."""
+    if impl == "pallas":
+        return decode_attention_pallas(
+            q, k, v, cache_len, block_t=block_t,
+            interpret=jax.default_backend() != "tpu")
+    return decode_attention_ref(q, k, v, cache_len)

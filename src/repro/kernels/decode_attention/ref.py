@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, cache_len):
+    """q: (B,H,dh); k/v: (B,T,Hk,dh); cache_len: (B,) valid prefix lengths.
+
+    Returns (B,H,dh).  Slots >= cache_len are masked out.
+    """
+    b, h, dh = q.shape
+    t, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    qg = q.reshape(b, hk, g, dh)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (dh ** -0.5)
+    valid = jnp.arange(t)[None, :] < cache_len[:, None]       # (B,T)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, dh).astype(q.dtype)

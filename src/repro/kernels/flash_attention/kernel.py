@@ -1,0 +1,109 @@
+"""Pallas TPU flash attention (prefill): blockwise softmax in VMEM.
+
+Grid: (B * H, Sq/block_q, Sk/block_k) — the KV axis is innermost and
+sequential on TPU, so the running (m, l, acc) state lives in VMEM scratch
+across KV steps.  GQA is handled in the index map: q-head h reads kv-head
+h // (H / Hk), so each KV block is fetched once per q-head group.
+
+Causal/window masking is computed from block offsets (prefill positions are
+contiguous from 0).  Block shapes default to (512, 512) — (block_q + 2 *
+block_k) * dh * 4B of VMEM working set, MXU-aligned for dh >= 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            block_q: int, block_k: int, causal: bool, window: int, sk: int):
+    kv_step = pl.program_id(2)
+    q_step = pl.program_id(1)
+
+    @pl.when(kv_step == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)        # (block_q, dh)
+    k = k_ref[0].astype(jnp.float32)        # (block_k, dh)
+    v = v_ref[0].astype(jnp.float32)
+    dh = q.shape[-1]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * (dh ** -0.5)
+    qp = q_step * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kp = kv_step * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kp < sk
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= kp > qp - window
+    s = jnp.where(mask, s, NEG)
+
+    m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_new = acc_prev * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...], l_scr[...], acc_scr[...] = m_new, l_new, acc_new
+
+    @pl.when(kv_step == pl.num_programs(2) - 1)
+    def _final():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           block_q: int = 512, block_k: int = 512,
+                           interpret: bool = True):
+    """q: (B,Sq,H,dh), k/v: (B,Sk,Hk,dh) -> (B,Sq,H,dh)."""
+    b, sq, h, dh = q.shape
+    sk, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    pq = (-sq) % block_q
+    pk = (-sk) % block_k
+    qt = jnp.moveaxis(q, 2, 1).reshape(b * h, sq, dh)
+    kt = jnp.moveaxis(k, 2, 1).reshape(b * hk, sk, dh)
+    vt = jnp.moveaxis(v, 2, 1).reshape(b * hk, sk, dh)
+    if pq:
+        qt = jnp.pad(qt, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        kt = jnp.pad(kt, ((0, 0), (0, pk), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, pk), (0, 0)))
+    nq = (sq + pq) // block_q
+    nk = (sk + pk) // block_k
+    grid = (b * h, nq, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_q=block_q, block_k=block_k,
+                          causal=causal, window=window, sk=sk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda bh, i, j: (bh, i, 0)),
+            # GQA: flat q index bh = bi*H + hi maps to kv index bi*Hk + hi//g
+            pl.BlockSpec((1, block_k, dh),
+                         lambda bh, i, j: ((bh // h) * hk + (bh % h) // g, j, 0)),
+            pl.BlockSpec((1, block_k, dh),
+                         lambda bh, i, j: ((bh // h) * hk + (bh % h) // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq + pq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out[:, :sq].reshape(b, h, sq, dh)
+    return jnp.moveaxis(out, 1, 2)

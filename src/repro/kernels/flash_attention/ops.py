@@ -1,0 +1,23 @@
+"""Jit'd public wrapper for the flash-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention_pallas
+from .ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "impl"))
+def flash_attention(q, k, v, q_pos=None, k_pos=None, *, causal: bool = True,
+                    window: int = 0, block_q: int = 512, block_k: int = 512,
+                    impl: str = "pallas"):
+    """Prefill attention (contiguous positions from 0).  GQA via head ratio."""
+    del q_pos, k_pos  # contiguous-prefill layout; kept for API parity
+    if impl == "pallas":
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, block_q=block_q,
+            block_k=block_k, interpret=jax.default_backend() != "tpu")
+    return flash_attention_ref(q, k, v, causal=causal, window=window)

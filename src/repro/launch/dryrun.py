@@ -1,0 +1,296 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST run before any jax import (device count locks at first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+For each combination this:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. lowers the right step (train_step / prefill_step / serve_step) with
+     FSDPxTP in_shardings against ShapeDtypeStruct inputs (no allocation),
+  3. compiles, records memory_analysis() + cost_analysis() + collective
+     bytes parsed from the post-SPMD HLO,
+  4. writes experiments/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both] [--skip-existing]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_config, skip_reason
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import (INPUT_SHAPES, abstract_params, decode_inputs,
+                                 make_step_fn, prefill_inputs, train_inputs)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]))\S*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str, loop_trip_count: int = 1) -> Dict[str, int]:
+    """Per-device collective bytes from post-SPMD HLO.
+
+    XLA HLO lists a while-loop body ONCE regardless of trip count, so
+    collectives inside loop bodies (the scan-over-layers!) are scaled by
+    ``loop_trip_count`` (= pattern periods for the layer scan).  Bodies are
+    identified via the ``body=%name`` operands of while ops.
+    """
+    bodies = set(re.findall(r"body=%?([\w.\-]+)", hlo_text))
+    out: Dict[str, int] = {}
+    cur: str = ""
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace():
+            m = re.match(r"%?([\w.\-]+)\s*(?:\(|=)", line.replace("ENTRY ", ""))
+            cur = m.group(1) if m else ""
+        m = _COLL_RE.search(line)
+        if m:
+            mult = loop_trip_count if cur in bodies else 1
+            kind = m.group(2)
+            out[kind] = out.get(kind, 0) + _shape_bytes(m.group(1)) * mult
+    return out
+
+
+def _mem_analysis(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes", "host_argument_size_in_bytes",
+              "host_output_size_in_bytes", "host_temp_size_in_bytes"):
+        v = getattr(ma, f, None)
+        if v is not None:
+            out[f] = int(v)
+    return out
+
+
+def _cost_analysis(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and (
+                "flops" in k or "bytes" in k or "utilization" in k.lower())}
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, *,
+            microbatches: int = 0, donate: bool = True,
+            zero1: bool = False, grad_sync_once: bool = False) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    microbatches = microbatches or cfg.train_microbatches
+    # microbatches must divide the per-device batch slice
+    _, _batch, _kind = INPUT_SHAPES[shape_name]
+    if _kind == "train":
+        per_dev = max(_batch // (16 * (2 if multi_pod else 1)), 1)
+        microbatches = max(1, min(microbatches, per_dev))
+        while per_dev % microbatches:
+            microbatches -= 1
+    seq, batch, kind = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "kind": kind,
+        "seq_len": seq, "global_batch": batch,
+        "params_exact": cfg.param_count(),
+        "params_active": cfg.param_count(active_only=True),
+    }
+    reason = skip_reason(arch, shape_name)
+    if reason:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+
+    t0 = time.time()
+    params_abs = abstract_params(cfg)
+    p_mode = "serve" if (kind == "decode"
+                         or ((zero1 or grad_sync_once) and kind == "train")) \
+        else "train"
+    p_specs = shd.param_specs(mesh, params_abs, mode=p_mode)
+
+    with jax.set_mesh(mesh):
+        if kind == "train":
+            from repro.training import init_opt_state
+            opt_abs = jax.eval_shape(init_opt_state, params_abs)
+            inputs = train_inputs(cfg, seq, batch)
+            b_specs = shd.batch_spec(mesh, cfg)
+            if grad_sync_once:
+                from repro.launch.zero_trainer import make_zero_train_step
+                from repro.models.model import build_model
+                from repro.training import AdamWConfig
+                step = make_zero_train_step(build_model(cfg), AdamWConfig(),
+                                            mesh, microbatches=microbatches)
+                o_specs = shd.opt_state_specs(mesh, opt_abs, p_specs)
+            else:
+                step = make_step_fn(cfg, "train", microbatches=microbatches)
+                o_base = shd.param_specs(mesh, params_abs) if zero1 else p_specs
+                o_specs = shd.opt_state_specs(mesh, opt_abs, o_base)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_specs, o_specs, b_specs),
+                out_shardings=(p_specs, o_specs, None),
+                donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(params_abs, opt_abs, inputs)
+        elif kind == "prefill":
+            step = make_step_fn(cfg, "prefill")
+            b_specs = {k: v for k, v in shd.batch_spec(mesh, cfg).items()}
+            inputs = prefill_inputs(cfg, seq, batch)
+            b_specs = {k: b_specs[k] for k in inputs}
+            cache_abs = jax.eval_shape(step, params_abs, inputs)[1]
+            c_specs = shd.cache_specs(mesh, cache_abs, batch)
+            jitted = jax.jit(step, in_shardings=(p_specs, b_specs),
+                             out_shardings=(None, c_specs))
+            lowered = jitted.lower(params_abs, inputs)
+        else:  # decode
+            step = make_step_fn(cfg, "decode")
+            inputs = decode_inputs(cfg, seq, batch)
+            c_specs = shd.cache_specs(mesh, inputs["caches"], batch)
+            t_spec = shd.token_spec(mesh, batch)
+            jitted = jax.jit(
+                step, in_shardings=(p_specs, t_spec, c_specs),
+                out_shardings=(None, c_specs),
+                donate_argnums=(2,) if donate else ())
+            lowered = jitted.lower(params_abs, inputs["token"], inputs["caches"])
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    rec["memory"] = _mem_analysis(compiled)
+    if kind == "train" and cfg.remat and cfg.dtype == "bfloat16":
+        # Known XLA:CPU artifact (see EXPERIMENTS.md §Dry-run): the bwd loop's
+        # elementwise reads of remat-saved bf16 residuals are emulated via
+        # f32, and XLA hoists the convert across the whole stacked buffer —
+        # an f32 shadow copy (2x the bf16 stack) that native-bf16 TPUs don't
+        # allocate.  Reported so the roofline can quote adjusted memory.
+        dshard = 16  # data axis
+        b_local = max(batch // (dshard * (2 if multi_pod else 1)), 1)
+        stack = cfg.pattern_periods * b_local * seq * cfg.d_model
+        rec["memory"]["cpu_f32_shadow_bytes_est"] = int(stack * 4)
+    rec["cost"] = _cost_analysis(compiled)
+    try:
+        hlo = compiled.as_text()
+        trips = max(cfg.pattern_periods, cfg.num_layers if cfg.enc_layers else 1,
+                    1) * max(microbatches, 1)
+        rec["collectives"] = collective_bytes(hlo, loop_trip_count=trips)
+        rec["collectives_body_once"] = collective_bytes(hlo, loop_trip_count=1)
+        rec["loop_trip_count"] = trips
+        rec["hlo_lines"] = hlo.count("\n")
+    except Exception as e:  # pragma: no cover
+        rec["collectives"] = {"error": str(e)}
+    rec["status"] = "ok"
+    return rec
+
+
+def out_path(arch: str, shape: str, mesh_name: str, out_dir: str = None) -> str:
+    d = out_dir or OUT_DIR
+    os.makedirs(d, exist_ok=True)
+    safe = arch.replace("/", "_")
+    return os.path.join(d, f"{safe}__{shape}__{mesh_name}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="0 = use each config's train_microbatches")
+    ap.add_argument("--out-dir", default=None,
+                    help="write records here (hillclimb variants) instead of "
+                         "experiments/dryrun")
+    ap.add_argument("--zero1", action="store_true",
+                    help="ZeRO-1: params TP-resident, optimizer FSDP-sharded "
+                         "(kills per-microbatch weight re-gathers)")
+    ap.add_argument("--grad-sync-once", action="store_true",
+                    help="shard_map local grad accumulation, one psum/step")
+    args = ap.parse_args()
+
+    archs = list(ASSIGNED_ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                mesh_name = "2x16x16" if multi else "16x16"
+                path = out_path(arch, shape, mesh_name, args.out_dir)
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[cached] {arch} {shape} {mesh_name}")
+                    continue
+                print(f"[dryrun] {arch} {shape} {mesh_name} ...", flush=True)
+                try:
+                    rec = run_one(arch, shape, multi,
+                                  microbatches=args.microbatches,
+                                  zero1=args.zero1,
+                                  grad_sync_once=args.grad_sync_once)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "fail", "error": str(e),
+                           "traceback": traceback.format_exc()}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=2)
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_fail += st == "fail"
+                msg = rec.get("reason", rec.get("error", ""))
+                extra = ""
+                if st == "ok":
+                    mem = rec.get("memory", {})
+                    tot = sum(mem.get(k, 0) for k in
+                              ("argument_size_in_bytes", "temp_size_in_bytes",
+                               "output_size_in_bytes"))
+                    extra = (f" flops/dev={rec['cost'].get('flops', 0):.3e}"
+                             f" mem/dev={tot/2**30:.2f}GiB"
+                             f" lower={rec['lower_s']}s compile={rec['compile_s']}s")
+                print(f"[{st}] {arch} {shape} {mesh_name} {msg}{extra}", flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} fail={n_fail}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production mesh construction (TPU v5e pods).
+
+A FUNCTION, not a module constant — importing this module must never touch
+jax device state (smoke tests run on 1 CPU device; only dryrun.py forces
+512 host devices).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes the batch dimension shards over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,99 @@
+"""Assigned input shapes + ShapeDtypeStruct stand-ins for the dry-run.
+
+``input_specs(cfg, shape_name)`` returns (step_kind, abstract inputs): no
+device allocation ever happens — everything is jax.ShapeDtypeStruct /
+jax.eval_shape, per the multi-pod dry-run contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.model import build_model
+
+INPUT_SHAPES = {
+    # name: (seq_len, global_batch, kind)
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_inputs(cfg: ModelConfig, seq: int, batch: int) -> Dict[str, Any]:
+    out = {
+        "tokens": _sds((batch, seq), jnp.int32),
+        "targets": _sds((batch, seq), jnp.int32),
+        "mask": _sds((batch, seq), jnp.float32),
+    }
+    if cfg.family in ("audio", "encdec"):
+        out["frames"] = _sds((batch, cfg.enc_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.frontend == "vision_stub":
+        out["prefix_embeds"] = _sds((batch, cfg.num_prefix_tokens, cfg.frontend_dim),
+                                    jnp.dtype(cfg.dtype))
+    return out
+
+
+def prefill_inputs(cfg: ModelConfig, seq: int, batch: int) -> Dict[str, Any]:
+    out = {"tokens": _sds((batch, seq), jnp.int32)}
+    if cfg.family in ("audio", "encdec"):
+        out["frames"] = _sds((batch, cfg.enc_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.frontend == "vision_stub":
+        out["prefix_embeds"] = _sds((batch, cfg.num_prefix_tokens, cfg.frontend_dim),
+                                    jnp.dtype(cfg.dtype))
+    return out
+
+
+def decode_capacity(seq: int) -> int:
+    """Cache capacity: seq + decode slack, padded so the 16-way model axis
+    divides the sequence dim (otherwise KV caches lose their seq sharding)."""
+    return ((seq + 8 + 255) // 256) * 256
+
+
+def decode_inputs(cfg: ModelConfig, seq: int, batch: int) -> Dict[str, Any]:
+    """token + abstract KV/state caches sized for a `seq`-long context."""
+    model = build_model(cfg)
+    caches = jax.eval_shape(lambda: model.init_caches(batch, decode_capacity(seq)))
+    return {"token": _sds((batch,), jnp.int32), "caches": caches}
+
+
+def abstract_params(cfg: ModelConfig):
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def make_step_fn(cfg: ModelConfig, kind: str, *, with_optimizer: bool = True,
+                 microbatches: int = 1):
+    """Returns (fn, input_builder) for lowering."""
+    model = build_model(cfg)
+    if kind == "train":
+        if with_optimizer:
+            from repro.training import AdamWConfig, make_train_step
+            step = make_train_step(model, AdamWConfig(),
+                                   microbatches=microbatches)
+            return step
+        def loss_step(params, batch):
+            loss, metrics = model.loss(params, batch)
+            return loss
+        return loss_step
+    if kind == "prefill":
+        def prefill_step(params, batch):
+            # capacity: full prompt (incl. multimodal prefix) + decode slack,
+            # padded for model-axis divisibility of the cache seq dim
+            cap = decode_capacity(batch["tokens"].shape[1] + cfg.num_prefix_tokens)
+            return model.prefill(params, batch, cap)
+        return prefill_step
+    if kind == "decode":
+        def serve_step(params, token, caches):
+            return model.decode_step(params, token, caches)
+        return serve_step
+    raise ValueError(kind)

@@ -1,0 +1,267 @@
+"""Sharding rules: param/optimizer/cache/batch PartitionSpecs per mesh.
+
+2D FSDP x TP scheme (DESIGN.md §4): weight matrices shard over both 'data'
+(FSDP) and 'model' (TP) axes; attention shards heads over 'model' when the
+head count divides the axis, otherwise falls back to embed-dim (row
+parallel) sharding — divisibility-checked per tensor, so whisper's 6 heads
+and deepseek's 56 heads both lower cleanly on a 16-way model axis.
+
+KV caches shard batch over ('pod','data') and the *sequence* dim over
+'model' (kv-head counts never divide 16): the flash-decoding style layout.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _fits(mesh: Mesh, shape, spec) -> bool:
+    for dim, axis in zip(shape, spec):
+        if axis is None:
+            continue
+        if dim % _axis_size(mesh, axis) != 0:
+            return False
+    return True
+
+
+def best_spec(mesh: Mesh, shape, candidates, uneven_dims=()) -> P:
+    """First candidate whose named axes divide the dims; else replicated.
+
+    Dims listed in ``uneven_dims`` may shard unevenly (GSPMD pads): used for
+    head counts that don't divide the 16-way model axis (56, 6 heads) where
+    padded head-sharding (<=14% waste) beats row-parallel fallback's
+    per-layer activation resharding (§Perf H3 iteration 2).
+    """
+    for cand in candidates:
+        cand = tuple(cand) + (None,) * (len(shape) - len(cand))
+        ok = True
+        for i, (dim, axis) in enumerate(zip(shape, cand)):
+            if axis is None or i in uneven_dims:
+                continue
+            if dim % _axis_size(mesh, axis) != 0:
+                ok = False
+                break
+        if ok:
+            return P(*cand)
+    return P()
+
+
+def _param_spec(mesh: Mesh, pathstr: str, shape, mode: str = "train") -> P:
+    mdl, dat = "model", "data"
+    name = pathstr.split("/")[-1]
+    scanned = pathstr.startswith("scan/") or "_scan/" in pathstr or \
+        pathstr.startswith("enc_scan/") or pathstr.startswith("dec_scan/")
+    core = shape[1:] if scanned else shape
+
+    def wrap(spec: P) -> P:
+        return P(None, *spec) if scanned else spec
+
+    if name in ("embed",):
+        return wrap(best_spec(mesh, core, [(mdl, dat), (mdl, None), (None, mdl)]))
+    if name == "lm_head":
+        return wrap(best_spec(mesh, core, [(dat, mdl), (None, mdl)]))
+    if name == "frontend_proj":
+        return wrap(best_spec(mesh, core, [(None, mdl)]))
+    if name in ("w_q", "w_k", "w_v"):  # (d, H, dh)
+        # NOTE §Perf H3-iter2 (refuted): uneven head sharding (56 heads
+        # padded to 64 over the 16-way axis) is rejected by pjit for input
+        # shardings — argument dims must divide the axis.  Head-parallel is
+        # only possible when H % axis == 0; otherwise row-parallel.
+        return wrap(best_spec(mesh, core, [
+            (dat, mdl, None), ((dat, mdl), None, None), (mdl, None, None)]))
+    if name == "w_o" and len(core) == 3:  # (H, dh, d)
+        return wrap(best_spec(mesh, core, [
+            (mdl, None, dat), (None, None, (dat, mdl)), (None, None, mdl)]))
+    if name in ("b_q", "b_k", "b_v"):  # (H, dh)
+        return wrap(best_spec(mesh, core, [(mdl, None)]))
+    if name in ("w_gate", "w_up"):
+        if len(core) == 3:  # MoE experts (E, d, f)
+            # serve: 2D expert parallelism — experts over 'data', d over
+            # 'model'; weights stay RESIDENT and the few decode tokens
+            # all-to-all to their experts (H2 iter 2: arctic decode
+            # all-gather 94 -> 2 GiB/token).  train/prefill: EP over 'data'
+            # makes GSPMD replicate the (huge) token activations instead —
+            # measured 35x collective blowup — so experts keep expert-dim
+            # over 'model' + FSDP over d there.
+            cands = ([(dat, mdl, None), (mdl, dat, None)] if mode == "serve"
+                     else [(mdl, dat, None)]) + [(mdl, None, None)]
+            return wrap(best_spec(mesh, core, cands))
+        return wrap(best_spec(mesh, core, [(dat, mdl), (None, mdl), (mdl, None)]))
+    if name == "w_down":
+        if len(core) == 3:  # MoE (E, f, d)
+            cands = ([(dat, None, mdl), (mdl, None, dat)] if mode == "serve"
+                     else [(mdl, None, dat)]) + [(mdl, None, None)]
+            return wrap(best_spec(mesh, core, cands))
+        return wrap(best_spec(mesh, core, [(mdl, dat), (mdl, None), (None, dat)]))
+    if name == "router":  # (d, E)
+        return wrap(best_spec(mesh, core, [(dat, mdl), (None, mdl)]))
+    if name == "w_in":  # mamba (d, big)
+        return wrap(best_spec(mesh, core, [(dat, mdl), (mdl, None)]))
+    if name in ("w_y", "w_x"):  # rglru (d, w)
+        return wrap(best_spec(mesh, core, [(dat, mdl), (None, mdl), (mdl, None)]))
+    if name in ("w_a", "w_i"):  # rglru (w, w)
+        return wrap(best_spec(mesh, core, [(dat, mdl), (None, mdl)]))
+    if name == "w_out" or (name == "w_o" and len(core) == 2):  # (inner, d)
+        return wrap(best_spec(mesh, core, [(mdl, dat), (mdl, None), (None, dat)]))
+    if name == "score_head":
+        return wrap(P())
+    # norms, conv kernels, gates, scalars: replicated
+    return wrap(P())
+
+
+def _strip_axis(spec: P, axis: str) -> P:
+    out = []
+    for entry in spec:
+        if entry == axis:
+            out.append(None)
+        elif isinstance(entry, tuple):
+            kept = tuple(a for a in entry if a != axis)
+            out.append(kept[0] if len(kept) == 1 else (kept or None))
+        else:
+            out.append(entry)
+    return P(*out)
+
+
+def param_specs(mesh: Mesh, params, mode: str = "train") -> "jax.tree":
+    """mode='train': 2D FSDP x TP.  mode='serve': TP-only when the model
+    fits (params/TP <= 12 GiB/dev) — decode re-gathers FSDP-sharded weights
+    on EVERY token, which dominates the serving roofline (§Perf H2); models
+    too big for TP-only (nemotron-4-340b) keep FSDP and stay
+    collective-bound by necessity.
+    """
+    def one(path, leaf):
+        pathstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+        return _param_spec(mesh, pathstr, leaf.shape, mode)
+    specs = jax.tree_util.tree_map_with_path(one, params)
+    if mode == "serve":
+        # Expert weights (rank>=3 excluding the scan dim) are EP-resident
+        # already; only the dense/attention weights pay a per-token FSDP
+        # gather.  Strip 'data' from those when the TP-only residency fits.
+        def is_expert(path, leaf):
+            name = str(getattr(path[-1], "key", path[-1]))
+            pathstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                               for p in path)
+            scanned = pathstr.startswith("scan/")
+            return (name in ("w_gate", "w_up", "w_down")
+                    and leaf.ndim >= (4 if scanned else 3))
+
+        flat = jax.tree_util.tree_flatten_with_path(params)[0]
+        nonexp = sum(l.size * jnp.dtype(l.dtype).itemsize
+                     for p, l in flat if not is_expert(p, l))
+        if nonexp / mesh.shape["model"] <= 12 * 2 ** 30:
+            def strip(path, s, leaf):
+                return s if is_expert(path, leaf) else _strip_axis(s, "data")
+            specs = jax.tree_util.tree_map_with_path(
+                strip, specs, params,
+                is_leaf=lambda x: isinstance(x, P))
+    return specs
+
+
+def opt_state_specs(mesh: Mesh, opt_state, p_specs):
+    return {
+        "m": p_specs,
+        "v": p_specs,
+        "step": P(),
+    }
+
+
+def batch_spec(mesh: Mesh, cfg: ModelConfig):
+    """Specs for a training/prefill batch dict."""
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = ba if len(ba) > 1 else (ba[0] if ba else None)
+    out = {
+        "tokens": P(bspec, None),
+        "targets": P(bspec, None),
+        "mask": P(bspec, None),
+    }
+    if cfg.family in ("audio", "encdec"):
+        out["frames"] = P(bspec, None, None)
+    if cfg.frontend == "vision_stub":
+        out["prefix_embeds"] = P(bspec, None, None)
+    return out
+
+
+def _cache_entry_spec(mesh: Mesh, entry, batch_size: int, scanned: bool,
+                      batch_axis):
+    """Spec tree for one layer's cache entry (KV dict or state dict)."""
+    mdl = "model"
+
+    def leaf_spec(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        shape = leaf.shape[1:] if scanned else leaf.shape
+        if name in ("k", "v"):
+            # (B, T, Hk, dh): batch over data axes, sequence over model
+            cand = [(batch_axis, mdl, None, None), (batch_axis, None, None, None),
+                    (None, mdl, None, None)]
+            spec = best_spec(mesh, shape, cand)
+        elif name == "slot_pos":
+            spec = best_spec(mesh, shape, [(batch_axis, mdl), (batch_axis, None),
+                                           (None, mdl)])
+        elif name == "ssm":  # (B, H, P, N)
+            spec = best_spec(mesh, shape, [(batch_axis, mdl, None, None),
+                                           (batch_axis, None, None, None)])
+        elif name == "h":  # rglru (B, W)
+            spec = best_spec(mesh, shape, [(batch_axis, mdl), (batch_axis, None),
+                                           (None, mdl)])
+        elif name == "conv":  # (B, w-1, C)
+            spec = best_spec(mesh, shape, [(batch_axis, None, mdl),
+                                           (batch_axis, None, None)])
+        elif name == "pos":
+            spec = P()
+        else:
+            spec = P()
+        return P(None, *spec) if scanned else spec
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, entry)
+
+
+def cache_specs(mesh: Mesh, caches, batch_size: int):
+    """Spec tree matching transformer.init_caches / encdec.init_decode_caches."""
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    batch_axis = ba if len(ba) > 1 else (ba[0] if ba else None)
+    if batch_size == 1:
+        batch_axis = None  # can't shard batch 1; sequence/model sharding carries
+
+    out = {}
+    if "scan" in caches:  # decoder-only layout
+        out["scan"] = tuple(
+            _cache_entry_spec(mesh, e, batch_size, True, batch_axis)
+            for e in caches["scan"])
+        out["rem"] = tuple(
+            _cache_entry_spec(mesh, e, batch_size, False, batch_axis)
+            for e in caches["rem"])
+        out["pos"] = P()
+        return out
+    # enc-dec layout
+    out["self"] = _cache_entry_spec(mesh, caches["self"], batch_size, True,
+                                    batch_axis)
+    mdl = "model"
+    ck = caches["cross_k"].shape[1:]
+    out["cross_k"] = P(None, *best_spec(
+        mesh, ck, [(batch_axis, mdl, None, None), (batch_axis, None, None, None),
+                   (None, mdl, None, None)]))
+    out["cross_v"] = out["cross_k"]
+    out["pos"] = P()
+    return out
+
+
+def token_spec(mesh: Mesh, batch_size: int):
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if batch_size == 1 or not ba:
+        return P(None)
+    return P(ba if len(ba) > 1 else ba[0])

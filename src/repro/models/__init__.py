@@ -1,0 +1,2 @@
+from .config import ModelConfig, ATTN, LOCAL_ATTN, MOE, MAMBA2, RGLRU
+from .model import Model, build_model

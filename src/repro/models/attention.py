@@ -1,0 +1,264 @@
+"""GQA attention: naive, blockwise-XLA-flash, and (via kernels/) Pallas impls.
+
+Three entry points used by transformer.py / encdec.py:
+
+* ``self_attention``  — full-sequence (train / prefill); returns output and
+  the rotary-applied (k, v) for KV-cache construction.
+* ``decode_attention`` — one new token against a KV cache (ring-buffered for
+  sliding-window archs).
+* ``cross_attention``  — decoder-over-encoder-memory (whisper).
+
+The ``xla_flash`` implementation is a lax.scan over KV blocks with running
+max/sum-exp (flash semantics expressed in XLA) so 32k-token prefill never
+materialises an (S, S) score tensor.  The Pallas kernel in
+``repro.kernels.flash_attention`` is the TPU-target version of the same
+algorithm; ``attention_impl='pallas'`` dispatches to it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_rope, dense_init, truncated_normal
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig):
+    d, h, hk, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "w_q": dense_init(ks[0], d, h * dh, dt).reshape(d, h, dh),
+        "w_k": dense_init(ks[1], d, hk * dh, dt).reshape(d, hk, dh),
+        "w_v": dense_init(ks[2], d, hk * dh, dt).reshape(d, hk, dh),
+        "w_o": dense_init(ks[3], h * dh, d, dt).reshape(h, dh, d),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((h, dh), dt)
+        p["b_k"] = jnp.zeros((hk, dh), dt)
+        p["b_v"] = jnp.zeros((hk, dh), dt)
+    return p
+
+
+def _project_qkv(params, x, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["w_k"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["w_v"])
+    if cfg.qkv_bias:
+        q = q + params["b_q"]
+        k = k + params["b_k"]
+        v = v + params["b_v"]
+    return q, k, v
+
+
+def _mask(q_pos, k_pos, causal: bool, window: int):
+    """(..., Sq, Sk) boolean allowed-mask from position vectors."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        m &= kp <= qp
+    if window > 0:
+        m &= kp > qp - window
+    return m
+
+
+def _attend_naive(q, k, v, q_pos, k_pos, causal, window, extra_mask=None):
+    """q: (B,Sq,H,dh), k/v: (B,Sk,Hk,dh) -> (B,Sq,H,dh). fp32 softmax."""
+    b, sq, h, dh = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    qg = q.reshape(b, sq, hk, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores * (dh ** -0.5)
+    m = _mask(q_pos, k_pos, causal, window)[:, None, None]  # (B,1,1,Sq,Sk)
+    if extra_mask is not None:
+        m = m & extra_mask[:, None, None, None, :]
+    scores = jnp.where(m, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w.astype(v.dtype), v)
+    return out.reshape(b, sq, h, dh)
+
+
+def _attend_xla_flash(q, k, v, q_pos, k_pos, causal, window, block_q, block_k,
+                      extra_mask=None):
+    """Blockwise flash attention in pure XLA: scan over KV blocks per Q block."""
+    b, sq, h, dh = q.shape
+    sk, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    # Pad sequence dims to block multiples.
+    pq = (-sq) % bq
+    pk = (-sk) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pq)), constant_values=-1)
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pk)), constant_values=2 ** 30)
+        if extra_mask is not None:
+            extra_mask = jnp.pad(extra_mask, ((0, 0), (0, pk)))
+    nq, nk = q.shape[1] // bq, k.shape[1] // bk
+    qg = q.reshape(b, nq, bq, hk, g, dh)
+    kb = k.reshape(b, nk, bk, hk, dh)
+    vb = v.reshape(b, nk, bk, hk, dh)
+    kpb = k_pos.reshape(b, nk, bk)
+    emb = None if extra_mask is None else extra_mask.reshape(b, nk, bk)
+    qpb = q_pos.reshape(b, nq, bq)
+    scale = dh ** -0.5
+
+    def q_block(qi, qp):
+        # qi: (b, bq, hk, g, dh); qp: (b, bq)
+        def kv_step(carry, inp):
+            m_run, l_run, acc = carry
+            ki, vi, kp, em = inp  # (b,bk,hk,dh), (b,bk,hk,dh), (b,bk), (b,bk)|None
+            s = jnp.einsum("bskgd,btkd->bkgst", qi, ki).astype(jnp.float32) * scale
+            allowed = _mask(qp, kp, causal, window)[:, None, None]
+            if em is not None:
+                allowed = allowed & em[:, None, None, None, :]
+            s = jnp.where(allowed, s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgst,btkd->bkgsd", p, vi.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, hk, g, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hk, g, bq), jnp.float32)
+        a0 = jnp.zeros((b, hk, g, bq, dh), jnp.float32)
+        xs = (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), jnp.moveaxis(kpb, 1, 0),
+              None if emb is None else jnp.moveaxis(emb, 1, 0))
+        if emb is None:
+            (mf, lf, accf), _ = jax.lax.scan(
+                lambda c, i: kv_step(c, (*i, None)), (m0, l0, a0), xs[:3])
+        else:
+            (mf, lf, accf), _ = jax.lax.scan(kv_step, (m0, l0, a0), xs)
+        out = accf / jnp.maximum(lf[..., None], 1e-30)
+        return jnp.einsum("bkgsd->bskgd", out)  # (b,bq,hk,g,dh)
+
+    outb = jax.lax.map(
+        lambda i: q_block(qg[:, i], qpb[:, i]), jnp.arange(nq))  # (nq,b,bq,hk,g,dh)
+    out = jnp.moveaxis(outb, 0, 1).reshape(b, nq * bq, h, dh)
+    return out[:, :sq].astype(q.dtype)
+
+
+def _attend_pallas(q, k, v, q_pos, k_pos, causal, window, block_q, block_k):
+    from repro.kernels.flash_attention import ops as flash_ops
+    return flash_ops.flash_attention(
+        q, k, v, q_pos, k_pos, causal=causal, window=window,
+        block_q=block_q, block_k=block_k)
+
+
+def attend(q, k, v, q_pos, k_pos, *, causal: bool, window: int, impl: str,
+           block_q: int = 512, block_k: int = 512, extra_mask=None):
+    sq, sk = q.shape[1], k.shape[1]
+    if impl == "auto":
+        impl = "xla_flash" if max(sq, sk) > 2048 else "naive"
+    if impl == "naive":
+        return _attend_naive(q, k, v, q_pos, k_pos, causal, window, extra_mask)
+    if impl == "pallas":
+        if extra_mask is not None:
+            raise NotImplementedError("pallas path has no extra_mask")
+        return _attend_pallas(q, k, v, q_pos, k_pos, causal, window, block_q, block_k)
+    return _attend_xla_flash(q, k, v, q_pos, k_pos, causal, window,
+                             block_q, block_k, extra_mask)
+
+
+# ------------------------------------------------------------- entry points
+
+def self_attention(params, x, positions, cfg: ModelConfig, *, causal=True,
+                   window: int = 0, use_rope=True):
+    """Full-sequence self attention.  Returns (out, (k, v)) — k/v post-rope."""
+    q, k, v = _project_qkv(params, x, cfg)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    ctx = attend(q, k, v, positions, positions, causal=causal, window=window,
+                 impl=cfg.attention_impl, block_q=cfg.flash_block_q,
+                 block_k=cfg.flash_block_k)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, params["w_o"])
+    return out, (k, v)
+
+
+def init_kv_cache(batch, capacity, cfg: ModelConfig, dtype=None):
+    dt = jnp.dtype(dtype or cfg.dtype)
+    hk, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, capacity, hk, dh), dt),
+        "v": jnp.zeros((batch, capacity, hk, dh), dt),
+        "pos": jnp.zeros((), jnp.int32),        # total tokens seen so far
+        "slot_pos": jnp.zeros((batch, capacity), jnp.int32) - 1,  # abs position per slot
+    }
+
+
+def fill_kv_cache(cache, k, v, positions):
+    """Write a prefill's k/v (B,S,hk,dh) into slots [0, S) (S <= capacity)."""
+    s = k.shape[1]
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+    cache["slot_pos"] = jax.lax.dynamic_update_slice(
+        cache["slot_pos"], positions.astype(jnp.int32), (0, 0))
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    return cache
+
+
+def decode_attention(params, x, cache, cfg: ModelConfig, *, window: int = 0,
+                     use_rope=True):
+    """One-token decode: x (B,1,d) against ring-buffered KV cache."""
+    b = x.shape[0]
+    capacity = cache["k"].shape[1]
+    pos = cache["pos"]  # scalar: number of tokens already in cache
+    q, k, v = _project_qkv(params, x, cfg)
+    cur = jnp.full((b, 1), pos, jnp.int32)
+    if use_rope:
+        q = apply_rope(q, cur, cfg.rope_theta)
+        k = apply_rope(k, cur, cfg.rope_theta)
+    slot = jnp.where(window > 0, pos % capacity, jnp.minimum(pos, capacity - 1))
+    # One-hot masked write instead of dynamic_update_slice: elementwise over
+    # the (possibly model-axis-sharded) sequence dim, so GSPMD never has to
+    # all-gather the cache to place the new token (the donated buffer makes
+    # it an in-place masked store).
+    hot = (jnp.arange(capacity, dtype=jnp.int32) == slot)          # (T,)
+    hot_kv = hot[None, :, None, None]
+    new_cache = dict(cache)
+    new_cache["k"] = jnp.where(hot_kv, k.astype(cache["k"].dtype), cache["k"])
+    new_cache["v"] = jnp.where(hot_kv, v.astype(cache["v"].dtype), cache["v"])
+    new_cache["slot_pos"] = jnp.where(hot[None, :], pos, cache["slot_pos"])
+    new_cache["pos"] = pos + 1
+    k_pos = new_cache["slot_pos"]  # (B, capacity); -1 = never written
+    valid = k_pos >= 0
+    ctx = attend(q, new_cache["k"], new_cache["v"], cur, k_pos,
+                 causal=True, window=window, impl="naive", extra_mask=valid)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, params["w_o"])
+    return out, new_cache
+
+
+# ------------------------------------------------------------- cross attn
+
+def init_cross_attention(key, cfg: ModelConfig):
+    return init_attention(key, cfg)
+
+
+def cross_attention(params, x, memory, cfg: ModelConfig):
+    """Decoder query over encoder memory (no rope, no mask)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"])
+    k = jnp.einsum("btd,dhk->bthk", memory, params["w_k"])
+    v = jnp.einsum("btd,dhk->bthk", memory, params["w_v"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["b_q"], k + params["b_k"], v + params["b_v"]
+    b, sq = x.shape[0], x.shape[1]
+    t = memory.shape[1]
+    qp = jnp.zeros((b, sq), jnp.int32)
+    kp = jnp.zeros((b, t), jnp.int32)
+    ctx = attend(q, k, v, qp, kp, causal=False, window=0, impl="naive")
+    return jnp.einsum("bshk,hkd->bsd", ctx, params["w_o"])

@@ -1,0 +1,72 @@
+"""MiniLM-class sentence embedder (the paper's all-MiniLM-L6-v2 analogue).
+
+6-layer bidirectional encoder, mean pooling over valid tokens, L2
+normalisation — emits 384-dim unit vectors so cosine similarity is a plain
+dot product, exactly as the TweakLLM cache consumes it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_lib
+from .config import ModelConfig
+from .layers import apply_mlp, apply_norm, init_mlp, init_norm, truncated_normal
+
+MINILM_CONFIG = ModelConfig(
+    name="embedder-minilm", family="encoder", num_layers=6, d_model=384,
+    num_heads=12, num_kv_heads=12, d_ff=1536, vocab_size=32768,
+    mlp_type="gelu", norm_type="layernorm", rope_theta=10_000.0,
+    dtype="float32", max_seq_len=512,
+)
+
+
+def tiny_embedder_config(vocab_size: int = 4096) -> ModelConfig:
+    return MINILM_CONFIG.replace(num_layers=2, d_model=64, num_heads=4,
+                                 num_kv_heads=4, d_ff=128, vocab_size=vocab_size)
+
+
+def init_embedder(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2 + cfg.num_layers)
+    dt = jnp.dtype(cfg.dtype)
+    layers = []
+    for i in range(cfg.num_layers):
+        lk = jax.random.split(ks[2 + i], 2)
+        layers.append({
+            "norm1": init_norm(cfg.d_model, cfg.norm_type),
+            "attn": attn_lib.init_attention(lk[0], cfg),
+            "norm2": init_norm(cfg.d_model, cfg.norm_type),
+            "mlp": init_mlp(lk[1], cfg.d_model, cfg.d_ff, cfg.mlp_type, dt),
+        })
+    stacked = jax.tree.map(lambda *ts: jnp.stack(ts), *layers)
+    return {
+        "embed": truncated_normal(ks[0], (cfg.padded_vocab, cfg.d_model), 0.02, dt),
+        "scan": stacked,
+        "final_norm": init_norm(cfg.d_model, cfg.norm_type),
+    }
+
+
+def encode(params, tokens, mask, cfg: ModelConfig):
+    """tokens (B,S) int32, mask (B,S) {0,1} -> unit embeddings (B, d)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    valid = mask.astype(bool)
+
+    def body(x, lp):
+        h = apply_norm(lp["norm1"], x, cfg.norm_type)
+        q, k, v = attn_lib._project_qkv(lp["attn"], h, cfg)
+        q = attn_lib.apply_rope(q, positions, cfg.rope_theta)
+        k = attn_lib.apply_rope(k, positions, cfg.rope_theta)
+        ctx = attn_lib.attend(q, k, v, positions, positions, causal=False,
+                              window=0, impl="naive", extra_mask=valid)
+        x = x + jnp.einsum("bshk,hkd->bsd", ctx, lp["attn"]["w_o"])
+        h2 = apply_norm(lp["norm2"], x, cfg.norm_type)
+        return x + apply_mlp(lp["mlp"], h2, cfg.mlp_type), None
+
+    x, _ = jax.lax.scan(body, x, params["scan"])
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    m = mask.astype(jnp.float32)[..., None]
+    pooled = jnp.sum(x.astype(jnp.float32) * m, axis=1) / jnp.maximum(
+        jnp.sum(m, axis=1), 1.0)
+    return pooled / jnp.maximum(jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-8)

@@ -1,0 +1,102 @@
+"""Primitive layers: norms, MLP variants, rotary embeddings, init helpers.
+
+All layers are functional: ``init_*`` returns a param pytree (nested dicts of
+jnp arrays), ``apply`` functions are pure.  Param dtype follows the config;
+norm/scale params stay fp32 for stability and are cast at use.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal(key, shape, stddev, dtype):
+    return (stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, stddev=None):
+    stddev = stddev if stddev is not None else d_in ** -0.5
+    return truncated_normal(key, (d_in, d_out), stddev, dtype)
+
+
+# ----------------------------------------------------------------- norms
+
+def init_norm(d, norm_type: str):
+    if norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def apply_norm(params, x, norm_type: str, eps: float = 1e-6):
+    # Statistics via fp32-accumulator reductions, elementwise path in the
+    # input dtype.  Never converts the full activation to fp32: that convert
+    # gets hoisted across the remat-saved residual stack by XLA and doubles
+    # activation memory on the big configs (f32 copy of every bf16 save).
+    if norm_type == "layernorm":
+        mu = jnp.mean(x, axis=-1, keepdims=True, dtype=jnp.float32)
+        xc = x - mu.astype(x.dtype)
+        var = jnp.mean(jnp.square(xc), axis=-1, keepdims=True, dtype=jnp.float32)
+        inv = jax.lax.rsqrt(var + eps)
+        y = (xc * (inv.astype(x.dtype) * params["scale"].astype(x.dtype))
+             + params["bias"].astype(x.dtype))
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True, dtype=jnp.float32)
+        inv = jax.lax.rsqrt(ms + eps)
+        y = x * (inv.astype(x.dtype) * params["scale"].astype(x.dtype))
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- MLPs
+
+def init_mlp(key, d, d_ff, mlp_type: str, dtype):
+    ks = jax.random.split(key, 3)
+    if mlp_type == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], d, d_ff, dtype),
+            "w_up": dense_init(ks[1], d, d_ff, dtype),
+            "w_down": dense_init(ks[2], d_ff, d, dtype, stddev=d_ff ** -0.5),
+        }
+    return {
+        "w_up": dense_init(ks[0], d, d_ff, dtype),
+        "w_down": dense_init(ks[1], d_ff, d, dtype, stddev=d_ff ** -0.5),
+    }
+
+
+def apply_mlp(params, x, mlp_type: str):
+    if mlp_type == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, params["w_up"])
+        h = jax.nn.silu(g) * u
+    elif mlp_type == "squared_relu":
+        h = jnp.square(jax.nn.relu(jnp.einsum("...d,df->...f", x, params["w_up"])))
+    else:  # gelu
+        h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, params["w_up"]))
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+# ----------------------------------------------------------------- rotary
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(dh, theta))  # (dh/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    cos = jnp.cos(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, d: int):
+    pos = np.arange(length)[:, None]
+    div = np.exp(-np.log(10000.0) * np.arange(0, d, 2) / d)
+    pe = np.zeros((length, d), np.float32)
+    pe[:, 0::2] = np.sin(pos * div)
+    pe[:, 1::2] = np.cos(pos * div)
+    return jnp.asarray(pe)

@@ -1,0 +1,74 @@
+"""Unified model facade: one interface over decoder-only and enc-dec stacks.
+
+``Model`` bundles (cfg, init, forward/loss, prefill, decode_step) so the
+serving engine, trainer and dry-run treat every architecture uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec as encdec_lib
+from . import transformer as tf_lib
+from .config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.cfg.enc_layers > 0
+
+    def init(self, key):
+        if self.is_encdec:
+            return encdec_lib.init_encdec(key, self.cfg)
+        return tf_lib.init_lm(key, self.cfg)
+
+    # --- training -----------------------------------------------------
+    def loss(self, params, batch):
+        """batch keys: tokens, targets, mask [+ frames | prefix_embeds]."""
+        cfg = self.cfg
+        if self.is_encdec:
+            logits, aux = encdec_lib.forward(params, batch["frames"],
+                                             batch["tokens"], cfg)
+            ce = tf_lib.cross_entropy(logits, batch["targets"], batch["mask"],
+                                      cfg.vocab_size)
+            return ce + aux, {"ce": ce, "aux": aux}
+        loss, metrics = tf_lib.loss_fn(
+            params, batch["tokens"], batch["targets"], batch["mask"], cfg,
+            prefix_embeds=batch.get("prefix_embeds"))
+        return loss, metrics
+
+    def forward(self, params, batch):
+        if self.is_encdec:
+            return encdec_lib.forward(params, batch["frames"], batch["tokens"],
+                                      self.cfg)
+        return tf_lib.forward(params, batch["tokens"], self.cfg,
+                              prefix_embeds=batch.get("prefix_embeds"))
+
+    # --- inference ----------------------------------------------------
+    def prefill(self, params, batch, capacity: int):
+        if self.is_encdec:
+            return encdec_lib.prefill(params, batch["frames"], batch["tokens"],
+                                      self.cfg, capacity)
+        return tf_lib.prefill(params, batch["tokens"], self.cfg, capacity,
+                              prefix_embeds=batch.get("prefix_embeds"))
+
+    def init_caches(self, batch_size: int, capacity: int):
+        if self.is_encdec:
+            return encdec_lib.init_decode_caches(batch_size, capacity, self.cfg)
+        return tf_lib.init_caches(None, batch_size, capacity, self.cfg)
+
+    def decode_step(self, params, token, caches):
+        if self.is_encdec:
+            return encdec_lib.decode_step(params, token, caches, self.cfg)
+        return tf_lib.decode_step(params, token, caches, self.cfg)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg=cfg)

@@ -1,0 +1,118 @@
+"""GShard-style top-k Mixture-of-Experts with capacity dispatch.
+
+TPU-native formulation: the dispatch/combine tensors are einsummed so GSPMD
+turns expert-sharded contractions into all-to-alls.  Experts are sharded on
+the ``model`` mesh axis (expert parallelism); Arctic's parallel dense-FFN
+residual is supported via ``moe_dense_residual``.
+
+The einsum-dispatch FLOPs overhead is the known GShard cost; the sort-based
+dispatch in ``dispatch_impl='sort'`` is the beyond-paper optimization lane
+(see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    dt = jnp.dtype(cfg.dtype)
+    std_in, std_out = d ** -0.5, f ** -0.5
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "w_gate": (std_in * jax.random.truncated_normal(ks[1], -2, 2, (e, d, f))).astype(dt),
+        "w_up": (std_in * jax.random.truncated_normal(ks[2], -2, 2, (e, d, f))).astype(dt),
+        "w_down": (std_out * jax.random.truncated_normal(ks[3], -2, 2, (e, f, d))).astype(dt),
+    }
+    if cfg.moe_dense_residual:
+        from .layers import init_mlp
+        p["dense"] = init_mlp(ks[4], d, cfg.d_ff, "swiglu", dt)
+    return p
+
+
+def _capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    c = int(cfg.capacity_factor * cfg.experts_per_token * tokens_per_group
+            / cfg.num_experts)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def router_topk(params, x, cfg: ModelConfig):
+    """x: (G,S,d) -> (probs (G,S,k), idx (G,S,k), aux_loss scalar)."""
+    logits = jnp.einsum("gsd,de->gse", x.astype(jnp.float32), params["router"])
+    k = cfg.experts_per_token
+    topv, topi = jax.lax.top_k(logits, k)
+    probs = jax.nn.softmax(topv, axis=-1)
+    # Load-balance auxiliary loss (Switch-style): mean_prob * mean_assign * E
+    all_probs = jax.nn.softmax(logits, axis=-1)
+    me = jnp.mean(all_probs, axis=(0, 1))                       # (E,)
+    assign = jax.nn.one_hot(topi[..., 0], cfg.num_experts)      # top-1 assignment share
+    ce = jnp.mean(assign, axis=(0, 1))
+    aux = cfg.num_experts * jnp.sum(me * ce)
+    return probs, topi, aux
+
+
+def apply_moe(params, x, cfg: ModelConfig):
+    """x: (B,S,d) -> (out (B,S,d), aux_loss).  GShard capacity dispatch.
+
+    Tokens are re-grouped into fixed-size dispatch groups (moe_group_size):
+    the (G, S_g, E, C) dispatch tensor and its einsum cost scale with the
+    GROUP length, not the full sequence — at 32k tokens per group the
+    dispatch einsum would dwarf the expert matmuls (see EXPERIMENTS.md
+    §Perf H1).
+    """
+    b, s, d = x.shape
+    n = b * s
+    gsz = min(cfg.moe_group_size, n)
+    pad = (-n) % gsz
+    xf = x.reshape(n, d)
+    if pad:
+        xf = jnp.concatenate([xf, jnp.zeros((pad, d), x.dtype)], axis=0)
+    xg = xf.reshape((n + pad) // gsz, gsz, d)
+    # re-seed the batch sharding on the group dim: GSPMD loses it through
+    # the (B,S)->(G,gsz) reshape and would replicate activations per layer
+    from . import sharding_utils as shu
+    xg = shu.constrain(xg, shu.BATCH, None, None)
+    g_, s_ = xg.shape[0], gsz
+    probs, topi, aux = router_topk(params, xg, cfg)
+    e, k = cfg.num_experts, cfg.experts_per_token
+    cap = _capacity(cfg, s_)
+
+    # Position of each (token, choice) within its expert's capacity buffer.
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.int32)            # (G,S,k,E)
+    flat = onehot.reshape(g_, s_ * k, e)
+    pos_in_e = jnp.cumsum(flat, axis=1) - 1                      # (G,S*k,E)
+    pos = jnp.sum(pos_in_e * flat, axis=-1).reshape(g_, s_, k)   # (G,S,k)
+    keep = pos < cap
+    wts = probs * keep                                            # drop overflow
+
+    # dispatch: (G,S,E,C) one-hot over (expert, slot)
+    disp = jnp.einsum(
+        "gske,gskc->gsec",
+        jax.nn.one_hot(topi, e, dtype=x.dtype) * keep[..., None].astype(x.dtype),
+        jax.nn.one_hot(pos, cap, dtype=x.dtype))
+    # combine: like dispatch but carrying the routing probabilities
+    comb = jnp.einsum(
+        "gske,gskc,gsk->gsec",
+        jax.nn.one_hot(topi, e, dtype=jnp.float32) * keep[..., None],
+        jax.nn.one_hot(pos, cap, dtype=jnp.float32),
+        wts).astype(x.dtype)
+
+    # to experts: (E,G,C,d)
+    ex_in = jnp.einsum("gsec,gsd->egcd", disp, xg)
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", ex_in, params["w_gate"]))
+    h = h * jnp.einsum("egcd,edf->egcf", ex_in, params["w_up"])
+    ex_out = jnp.einsum("egcf,efd->egcd", h, params["w_down"])
+    out = jnp.einsum("egcd,gsec->gsd", ex_out, comb)
+
+    if cfg.moe_dense_residual:
+        from .layers import apply_mlp
+        out = out + apply_mlp(params["dense"], xg, "swiglu")
+    out = out.reshape(g_ * s_, d)
+    if pad:
+        out = out[:n]
+    return out.reshape(b, s, d), aux * cfg.router_aux_coef

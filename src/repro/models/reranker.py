@@ -1,0 +1,61 @@
+"""Cross-encoder re-ranker — the GPTCache baseline's second stage.
+
+Scores a (query, candidate-query) pair jointly: both sequences are
+concatenated with a separator, run through a small bidirectional encoder,
+and a scalar duplicate-probability head reads the pooled state.  Plays the
+role of ``albert-duplicate-onnx`` / ``quora-distilroberta-base`` in Fig 2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import embedder as emb_lib
+from .config import ModelConfig
+from .layers import dense_init
+
+
+def tiny_reranker_config(vocab_size: int = 4096) -> ModelConfig:
+    return emb_lib.MINILM_CONFIG.replace(
+        name="reranker", num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=vocab_size)
+
+
+def init_reranker(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    params = emb_lib.init_embedder(k1, cfg)
+    params["score_head"] = dense_init(k2, cfg.d_model, 1, jnp.float32)
+    return params
+
+
+def score_pairs(params, tokens_a, mask_a, tokens_b, mask_b, cfg: ModelConfig,
+                sep_token: int = 3):
+    """Joint encoding of pairs -> duplicate logit (B,)."""
+    b, sa = tokens_a.shape
+    sep = jnp.full((b, 1), sep_token, jnp.int32)
+    tokens = jnp.concatenate([tokens_a, sep, tokens_b], axis=1)
+    mask = jnp.concatenate([mask_a, jnp.ones((b, 1), mask_a.dtype), mask_b], axis=1)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    s = tokens.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    valid = mask.astype(bool)
+    from .layers import apply_mlp, apply_norm
+    from . import attention as attn_lib
+
+    def body(x, lp):
+        h = apply_norm(lp["norm1"], x, cfg.norm_type)
+        q, k, v = attn_lib._project_qkv(lp["attn"], h, cfg)
+        q = attn_lib.apply_rope(q, positions, cfg.rope_theta)
+        k = attn_lib.apply_rope(k, positions, cfg.rope_theta)
+        ctx = attn_lib.attend(q, k, v, positions, positions, causal=False,
+                              window=0, impl="naive", extra_mask=valid)
+        x = x + jnp.einsum("bshk,hkd->bsd", ctx, lp["attn"]["w_o"])
+        h2 = apply_norm(lp["norm2"], x, cfg.norm_type)
+        return x + apply_mlp(lp["mlp"], h2, cfg.mlp_type), None
+
+    x, _ = jax.lax.scan(body, x, params["scan"])
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    m = mask.astype(jnp.float32)[..., None]
+    pooled = jnp.sum(x.astype(jnp.float32) * m, axis=1) / jnp.maximum(
+        jnp.sum(m, axis=1), 1.0)
+    return jnp.einsum("bd,do->bo", pooled, params["score_head"])[:, 0]

@@ -1,0 +1,104 @@
+"""RG-LRU recurrent block (RecurrentGemma, arXiv:2402.19427).
+
+Block = two parallel branches over the normed input:
+  gate branch   : GeLU(W_y x)
+  temporal branch: W_x x -> causal depthwise conv1d -> RG-LRU
+merged elementwise, then projected back to d_model.
+
+The RG-LRU diagonal recurrence
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * u_t),
+  a_t = exp(c * r_t * log sigmoid(lambda))
+runs as a jax.lax.associative_scan over the sequence (log-depth on TPU);
+decode is a single fused step over the carried (B, W) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+
+
+def init_rglru(key, cfg: ModelConfig):
+    d, w = cfg.d_model, cfg.resolved_rnn_width
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    # init lambda so that a ~ uniform(0.9, 0.999) at r=1 (standard LRU init)
+    u = jax.random.uniform(ks[4], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(u / (1 - u))  # sigmoid^-1
+    return {
+        "w_y": dense_init(ks[0], d, w, dt),
+        "w_x": dense_init(ks[1], d, w, dt),
+        "conv_w": (0.1 * jax.random.normal(ks[2], (w, cfg.rglru_conv_width))).astype(dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "w_a": dense_init(ks[3], w, w, jnp.float32, stddev=w ** -0.5),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": dense_init(ks[5], w, w, jnp.float32, stddev=w ** -0.5),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lam": lam.astype(jnp.float32),
+        "w_o": dense_init(jax.random.fold_in(key, 7), w, d, dt, stddev=w ** -0.5),
+    }
+
+
+def _gates(params, u, cfg: ModelConfig):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", uf, params["w_a"]) + params["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", uf, params["w_i"]) + params["b_i"])
+    log_a = cfg.rglru_c * r * jax.nn.log_sigmoid(params["lam"])  # (B,S,W) negative
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-8)) * (i * uf)
+    return a, gated
+
+
+def _conv(params, x, conv_state=None):
+    w = params["conv_w"].astype(jnp.float32)
+    width = w.shape[1]
+    xf = x.astype(jnp.float32)
+    pad = (jnp.zeros((xf.shape[0], width - 1, xf.shape[2]), xf.dtype)
+           if conv_state is None else conv_state.astype(jnp.float32))
+    xp = jnp.concatenate([pad, xf], axis=1)
+    y = sum(xp[:, i:i + xf.shape[1], :] * w[:, i] for i in range(width))
+    return (y + params["conv_b"].astype(jnp.float32)).astype(x.dtype), \
+        xp[:, -(width - 1):, :].astype(x.dtype)
+
+
+def rglru_forward(params, x, cfg: ModelConfig):
+    """x: (B,S,d) -> (out (B,S,d), state dict)."""
+    y_branch = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["w_y"]))
+    u = jnp.einsum("bsd,dw->bsw", x, params["w_x"])
+    u, conv_state = _conv(params, u)
+    a, b = _gates(params, u, cfg)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = hh.astype(x.dtype)                                # (B,S,W)
+    merged = y_branch * h
+    out = jnp.einsum("bsw,wd->bsd", merged, params["w_o"])
+    state = {"h": hh[:, -1].astype(jnp.float32), "conv": conv_state}
+    return out, state
+
+
+def init_rglru_state(batch, cfg: ModelConfig, dtype=None):
+    dt = jnp.dtype(dtype or cfg.dtype)
+    w = cfg.resolved_rnn_width
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.rglru_conv_width - 1, w), dt),
+    }
+
+
+def rglru_decode(params, x, state, cfg: ModelConfig):
+    """Single step.  x: (B,1,d)."""
+    y_branch = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["w_y"]))
+    u = jnp.einsum("bsd,dw->bsw", x, params["w_x"])
+    u, conv_state = _conv(params, u, conv_state=state["conv"])
+    a, b = _gates(params, u, cfg)                          # (B,1,W)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    merged = y_branch * h[:, None, :].astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", merged, params["w_o"])
+    return out, {"h": h, "conv": conv_state}

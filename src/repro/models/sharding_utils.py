@@ -1,0 +1,67 @@
+"""Mesh-aware sharding constraints that degrade to no-ops off-mesh.
+
+``constrain(x, *axes)`` applies with_sharding_constraint only for axes that
+exist in the ambient (abstract) mesh AND divide the corresponding dim —
+so model code runs unchanged on a single CPU device (tests), on the host
+mesh (examples) and on the 512-device production mesh (dry-run).
+
+The BATCH sentinel expands to ('pod','data') / 'data' as available.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+BATCH = "__batch__"
+
+
+def _mesh_axes():
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return {}
+    if am is None:
+        return {}
+    try:
+        axes = dict(zip(am.axis_names, am.axis_sizes))
+        # Inside shard_map, manual axes must not appear in sharding
+        # constraints — keep only Auto axes.
+        types = getattr(am, "axis_types", None)
+        if types is not None:
+            axes = {n: s for (n, s), t in zip(axes.items(), types)
+                    if "auto" in str(t).lower()}
+        return axes
+    except Exception:
+        return {}
+
+
+def constrain(x, *spec):
+    axes = _mesh_axes()
+    if not axes:
+        return x
+    resolved = []
+    for dim, a in zip(x.shape, spec):
+        if a == BATCH:
+            a = tuple(n for n in ("pod", "data") if n in axes) or None
+            if isinstance(a, tuple) and len(a) == 1:
+                a = a[0]
+        if a is None:
+            resolved.append(None)
+            continue
+        names = a if isinstance(a, tuple) else (a,)
+        size = 1
+        ok = True
+        for n in names:
+            if n not in axes:
+                ok = False
+                break
+            size *= axes[n]
+        if not ok or dim % size != 0:
+            resolved.append(None)
+        else:
+            resolved.append(a)
+    resolved += [None] * (x.ndim - len(resolved))
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*resolved))
+    except Exception:
+        return x

@@ -1,0 +1,179 @@
+"""Mamba-2 SSD (state-space duality) mixer — chunked scan formulation.
+
+Follows arXiv:2405.21060: the intra-chunk term is the masked-matmul "dual"
+form (MXU-friendly), inter-chunk states propagate through a lax.scan over
+chunk boundaries, so the materialised state is O(S/chunk) not O(S).
+
+Decode is a single-step recurrence over the (H, P, N) state plus a rolling
+depthwise-conv state — O(1) per token, which is what makes the ``long_500k``
+shape servable for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init, init_norm, apply_norm
+
+
+def _conv_dim(cfg: ModelConfig) -> int:
+    return cfg.ssm_d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di, ns, nh, g = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_groups
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    in_dim = 2 * di + 2 * g * ns + nh
+    return {
+        "w_in": dense_init(ks[0], d, in_dim, dt),
+        "conv_w": (0.1 * jax.random.normal(ks[1], (_conv_dim(cfg), cfg.ssm_conv_width))).astype(dt),
+        "conv_b": jnp.zeros((_conv_dim(cfg),), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gate_norm": init_norm(di, "rmsnorm"),
+        "w_out": dense_init(ks[2], di, d, dt, stddev=di ** -0.5),
+    }
+
+
+def _split_proj(params, x, cfg: ModelConfig):
+    di, ns, nh, g = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_groups
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + _conv_dim(cfg)], axis=-1)
+    return z, xbc, dt  # dt: (B,S,nh)
+
+
+def _causal_conv(params, xbc, conv_state=None):
+    """Depthwise causal conv, width W.  xbc: (B,S,C).  Returns (y, new_state)."""
+    w = params["conv_w"].astype(jnp.float32)  # (C, W)
+    width = w.shape[1]
+    xf = xbc.astype(jnp.float32)
+    if conv_state is None:
+        pad = jnp.zeros((xf.shape[0], width - 1, xf.shape[2]), xf.dtype)
+    else:
+        pad = conv_state.astype(jnp.float32)  # (B, W-1, C)
+    xp = jnp.concatenate([pad, xf], axis=1)
+    y = sum(xp[:, i:i + xf.shape[1], :] * w[:, i] for i in range(width))
+    y = jax.nn.silu(y + params["conv_b"].astype(jnp.float32))
+    new_state = xp[:, -(width - 1):, :]
+    return y.astype(xbc.dtype), new_state.astype(xbc.dtype)
+
+
+def _ssd_chunked(x, a_log, b, c, dt, cfg: ModelConfig, h0=None):
+    """x: (B,S,H,P); a_log:(B,S,H) log-decay; b,c:(B,S,G,N); dt:(B,S,H).
+
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    L = min(cfg.ssm_chunk, s)
+    pad = (-s) % L
+    if pad:
+        # Front-pad to a chunk multiple: exact because h0 == 0 (padded tokens
+        # have x = 0 so they contribute nothing, and there is no prior state
+        # for their decay to corrupt).
+        assert h0 is None, "front-padding requires zero initial state"
+        zf = lambda t: jnp.pad(t, ((0, 0), (pad, 0)) + ((0, 0),) * (t.ndim - 2))
+        y, h_last = _ssd_chunked(zf(x), zf(a_log), zf(b), zf(c), zf(dt), cfg)
+        return y[:, pad:], h_last
+    assert s % L == 0, f"seq {s} not divisible by chunk {L}"
+    nc = s // L
+    rep = h // g
+
+    def ch(t):  # (B,S,...) -> (B,nc,L,...)
+        return t.reshape(bsz, nc, L, *t.shape[2:])
+
+    xc, ac, dtc = ch(x.astype(jnp.float32)), ch(a_log), ch(dt)
+    bc_ = ch(b.astype(jnp.float32))
+    cc_ = ch(c.astype(jnp.float32))
+    la = jnp.cumsum(ac, axis=2)                      # (B,nc,L,H) cumulative log decay
+    # Intra-chunk (dual / matmul form)
+    bh = jnp.repeat(bc_, rep, axis=3) if g != h else bc_  # (B,nc,L,H,N)
+    chh = jnp.repeat(cc_, rep, axis=3) if g != h else cc_
+    gmat = jnp.einsum("bclhn,bcshn->bchls", chh, bh)
+    seg = la[..., :, None, :] - la[..., None, :, :]  # (B,nc,L,L,H) la_t - la_s
+    seg = jnp.moveaxis(seg, -1, 2)                   # (B,nc,H,L,L)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    # mask BEFORE exp: future positions have seg -> +inf, and exp(+inf)
+    # poisons the VJP with 0*inf = NaN even under where().
+    seg = jnp.where(mask, seg, -1e9)
+    dec = jnp.exp(seg)
+    m = gmat * dec
+    xdt = xc * dtc[..., None]                        # (B,nc,L,H,P)
+    y_intra = jnp.einsum("bchls,bcshp->bclhp", m, xdt)
+    # Chunk states: S_c = sum_s exp(la_L - la_s) xdt_s B_s
+    decay_to_end = jnp.exp(la[:, :, -1:, :] - la)    # (B,nc,L,H)
+    s_chunk = jnp.einsum("bcshn,bcshp,bcsh->bchpn", bh, xdt, decay_to_end)
+    chunk_decay = jnp.exp(la[:, :, -1, :])           # (B,nc,H)
+
+    def scan_fn(hprev, inp):
+        s_c, d_c = inp  # (B,H,P,N), (B,H)
+        hnew = hprev * d_c[:, :, None, None] + s_c
+        return hnew, hprev
+
+    hinit = jnp.zeros((bsz, h, p, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    hlast, hprevs = jax.lax.scan(
+        scan_fn, hinit,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    hprevs = jnp.moveaxis(hprevs, 0, 1)              # (B,nc,H,P,N) state entering chunk
+    y_inter = jnp.einsum("bclhn,bchpn,bclh->bclhp", chh, hprevs, jnp.exp(la))
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y.astype(x.dtype), hlast
+
+
+def mamba2_forward(params, x, cfg: ModelConfig):
+    """Full-sequence SSD.  x: (B,S,d) -> (y (B,S,d), final_state dict)."""
+    di, ns, nh, g = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_groups
+    p_hd = cfg.ssm_head_dim
+    z, xbc, dt_raw = _split_proj(params, x, cfg)
+    xbc, conv_state = _causal_conv(params, xbc)
+    xin, b, c = jnp.split(xbc, [di, di + g * ns], axis=-1)
+    bsz, s = x.shape[0], x.shape[1]
+    xin = xin.reshape(bsz, s, nh, p_hd)
+    b = b.reshape(bsz, s, g, ns)
+    c = c.reshape(bsz, s, g, ns)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a_log = -jnp.exp(params["a_log"]) * dt          # (B,S,H) log decay
+    y, h_last = _ssd_chunked(xin, a_log, b, c, dt, cfg)
+    y = y + xin.astype(jnp.float32) * params["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = apply_norm(params["gate_norm"], y * jax.nn.silu(z), "rmsnorm")
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    state = {"ssm": h_last.astype(jnp.float32), "conv": conv_state}
+    return out, state
+
+
+def init_mamba2_state(batch, cfg: ModelConfig, dtype=None):
+    dt = jnp.dtype(dtype or cfg.dtype)
+    return {
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, _conv_dim(cfg)), dt),
+    }
+
+
+def mamba2_decode(params, x, state, cfg: ModelConfig):
+    """Single-token step.  x: (B,1,d) -> (y (B,1,d), new_state)."""
+    di, ns, nh, g = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_groups
+    p_hd = cfg.ssm_head_dim
+    z, xbc, dt_raw = _split_proj(params, x, cfg)
+    xbc, conv_state = _causal_conv(params, xbc, conv_state=state["conv"])
+    xin, b, c = jnp.split(xbc, [di, di + g * ns], axis=-1)
+    bsz = x.shape[0]
+    xin = xin.reshape(bsz, nh, p_hd).astype(jnp.float32)
+    b = b.reshape(bsz, g, ns).astype(jnp.float32)
+    c = c.reshape(bsz, g, ns).astype(jnp.float32)
+    rep = nh // g
+    bh = jnp.repeat(b, rep, axis=1) if g != nh else b   # (B,H,N)
+    chh = jnp.repeat(c, rep, axis=1) if g != nh else c
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = jnp.exp(-jnp.exp(params["a_log"]) * dt)          # (B,H)
+    h = state["ssm"] * a[:, :, None, None] + jnp.einsum(
+        "bhp,bhn,bh->bhpn", xin, bh, dt)
+    y = jnp.einsum("bhpn,bhn->bhp", h, chh) + xin * params["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = apply_norm(params["gate_norm"], y * jax.nn.silu(z), "rmsnorm")
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    return out, {"ssm": h, "conv": conv_state}

@@ -1,0 +1,379 @@
+"""Decoder-only LM assembled from ``ModelConfig``.
+
+Layer stacks run as a ``lax.scan`` over *pattern periods* (so heterogeneous
+stacks like RecurrentGemma's RG-RG-ATTN period still scan); the remainder
+``num_layers % len(pattern)`` layers are applied unscanned.  Three entry
+points:
+
+  forward(params, tokens)            -> logits            (training)
+  prefill(params, tokens, capacity)  -> (logits, caches)  (inference, full seq)
+  decode_step(params, token, caches) -> (logits, caches)  (one token)
+
+Caches are pytrees mirroring the scan structure: ``caches['scan'][j]`` holds
+the stacked (leading dim = periods) per-layer state for pattern position j,
+``caches['rem'][i]`` the remainder layers'.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_lib
+from . import moe as moe_lib
+from . import rglru as rglru_lib
+from . import ssm as ssm_lib
+from . import sharding_utils as shu
+from .config import ATTN, LOCAL_ATTN, MAMBA2, MOE, RGLRU, ModelConfig
+from .layers import apply_mlp, apply_norm, init_mlp, init_norm, truncated_normal
+
+
+# ----------------------------------------------------------------- init
+
+def _init_block(key, kind: str, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind in (ATTN, LOCAL_ATTN):
+        return {
+            "norm1": init_norm(d, cfg.norm_type),
+            "attn": attn_lib.init_attention(ks[0], cfg),
+            "norm2": init_norm(d, cfg.norm_type),
+            "mlp": init_mlp(ks[1], d, cfg.d_ff, cfg.mlp_type, jnp.dtype(cfg.dtype)),
+        }
+    if kind == MOE:
+        return {
+            "norm1": init_norm(d, cfg.norm_type),
+            "attn": attn_lib.init_attention(ks[0], cfg),
+            "norm2": init_norm(d, cfg.norm_type),
+            "moe": moe_lib.init_moe(ks[1], cfg),
+        }
+    if kind == MAMBA2:
+        return {
+            "norm1": init_norm(d, cfg.norm_type),
+            "mixer": ssm_lib.init_mamba2(ks[0], cfg),
+        }
+    if kind == RGLRU:
+        return {
+            "norm1": init_norm(d, cfg.norm_type),
+            "rec": rglru_lib.init_rglru(ks[0], cfg),
+            "norm2": init_norm(d, cfg.norm_type),
+            "mlp": init_mlp(ks[1], d, cfg.d_ff, cfg.mlp_type, jnp.dtype(cfg.dtype)),
+        }
+    raise ValueError(kind)
+
+
+def init_lm(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4 + len(cfg.block_pattern) + len(cfg.pattern_remainder))
+    dt = jnp.dtype(cfg.dtype)
+    params: Dict[str, Any] = {
+        "embed": truncated_normal(ks[0], (cfg.padded_vocab, cfg.d_model), 0.02, dt),
+        "final_norm": init_norm(cfg.d_model, cfg.norm_type),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = truncated_normal(
+            ks[1], (cfg.d_model, cfg.padded_vocab), cfg.d_model ** -0.5, dt)
+    if cfg.frontend != "none":
+        params["frontend_proj"] = truncated_normal(
+            ks[2], (cfg.frontend_dim, cfg.d_model), cfg.frontend_dim ** -0.5, dt)
+    # Scanned stacks: one stacked tree per pattern position.
+    periods = cfg.pattern_periods
+    scan_params = []
+    for j, kind in enumerate(cfg.block_pattern):
+        kj = jax.random.split(ks[3 + j], periods)
+        stacked = jax.vmap(lambda k: _init_block(k, kind, cfg))(kj)
+        scan_params.append(stacked)
+    params["scan"] = tuple(scan_params)
+    rem = []
+    for i, kind in enumerate(cfg.pattern_remainder):
+        rem.append(_init_block(ks[3 + len(cfg.block_pattern) + i], kind, cfg))
+    params["rem"] = tuple(rem)
+    return params
+
+
+# ----------------------------------------------------------------- blocks
+
+def _block_train(kind: str, p, x, positions, cfg: ModelConfig):
+    """Full-seq block without cache emission.  Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(p["norm1"], x, cfg.norm_type)
+    if kind in (ATTN, LOCAL_ATTN, MOE):
+        window = cfg.sliding_window if (kind == LOCAL_ATTN or cfg.sliding_window > 0) else 0
+        a, _ = attn_lib.self_attention(p["attn"], h, positions, cfg, causal=True, window=window)
+        x = x + a
+        h2 = apply_norm(p["norm2"], x, cfg.norm_type)
+        if kind == MOE:
+            m, aux = moe_lib.apply_moe(p["moe"], h2, cfg)
+        else:
+            m = apply_mlp(p["mlp"], h2, cfg.mlp_type)
+        return x + m, aux
+    if kind == MAMBA2:
+        y, _ = ssm_lib.mamba2_forward(p["mixer"], h, cfg)
+        return x + y, aux
+    if kind == RGLRU:
+        y, _ = rglru_lib.rglru_forward(p["rec"], h, cfg)
+        x = x + y
+        h2 = apply_norm(p["norm2"], x, cfg.norm_type)
+        return x + apply_mlp(p["mlp"], h2, cfg.mlp_type), aux
+    raise ValueError(kind)
+
+
+def _cache_capacity(kind: str, cfg: ModelConfig, capacity: int) -> int:
+    if kind == LOCAL_ATTN or (cfg.sliding_window > 0 and kind in (ATTN, MOE)):
+        return min(capacity, cfg.sliding_window)
+    return capacity
+
+
+def _init_block_cache(kind: str, batch: int, capacity: int, cfg: ModelConfig):
+    if kind in (ATTN, LOCAL_ATTN, MOE):
+        return attn_lib.init_kv_cache(batch, _cache_capacity(kind, cfg, capacity), cfg)
+    if kind == MAMBA2:
+        return ssm_lib.init_mamba2_state(batch, cfg)
+    if kind == RGLRU:
+        st = rglru_lib.init_rglru_state(batch, cfg)
+        return st
+    raise ValueError(kind)
+
+
+def _block_prefill(kind: str, p, x, positions, cache, cfg: ModelConfig):
+    """Full-seq block, emits updated cache.  Returns (x, aux, cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(p["norm1"], x, cfg.norm_type)
+    if kind in (ATTN, LOCAL_ATTN, MOE):
+        window = cfg.sliding_window if (kind == LOCAL_ATTN or cfg.sliding_window > 0) else 0
+        a, (k, v) = attn_lib.self_attention(
+            p["attn"], h, positions, cfg, causal=True, window=window)
+        s = k.shape[1]
+        cap = cache["k"].shape[1]
+        if s <= cap:
+            cache = attn_lib.fill_kv_cache(cache, k, v, positions)
+        else:
+            # windowed cache smaller than the prefill: keep last `cap` tokens
+            # laid out in ring order slot = pos % cap.
+            start = s - cap
+            slot_of = (start + (jnp.arange(cap) - start) % cap)  # token index per slot
+            cache = dict(cache)
+            cache["k"] = jnp.take(k, slot_of, axis=1).astype(cache["k"].dtype)
+            cache["v"] = jnp.take(v, slot_of, axis=1).astype(cache["v"].dtype)
+            cache["slot_pos"] = jnp.take(positions, slot_of, axis=1).astype(jnp.int32)
+            cache["pos"] = jnp.asarray(s, jnp.int32)
+        x = x + a
+        h2 = apply_norm(p["norm2"], x, cfg.norm_type)
+        if kind == MOE:
+            m, aux = moe_lib.apply_moe(p["moe"], h2, cfg)
+        else:
+            m = apply_mlp(p["mlp"], h2, cfg.mlp_type)
+        return x + m, aux, cache
+    if kind == MAMBA2:
+        y, st = ssm_lib.mamba2_forward(p["mixer"], h, cfg)
+        return x + y, aux, {"ssm": st["ssm"], "conv": st["conv"]}
+    if kind == RGLRU:
+        y, st = rglru_lib.rglru_forward(p["rec"], h, cfg)
+        x = x + y
+        h2 = apply_norm(p["norm2"], x, cfg.norm_type)
+        return x + apply_mlp(p["mlp"], h2, cfg.mlp_type), aux, st
+    raise ValueError(kind)
+
+
+def _block_decode(kind: str, p, x, cache, cfg: ModelConfig):
+    h = apply_norm(p["norm1"], x, cfg.norm_type)
+    if kind in (ATTN, LOCAL_ATTN, MOE):
+        window = cfg.sliding_window if (kind == LOCAL_ATTN or cfg.sliding_window > 0) else 0
+        a, cache = attn_lib.decode_attention(p["attn"], h, cache, cfg, window=window)
+        x = x + a
+        h2 = apply_norm(p["norm2"], x, cfg.norm_type)
+        if kind == MOE:
+            m, _ = moe_lib.apply_moe(p["moe"], h2, cfg)
+        else:
+            m = apply_mlp(p["mlp"], h2, cfg.mlp_type)
+        return x + m, cache
+    if kind == MAMBA2:
+        y, cache = ssm_lib.mamba2_decode(p["mixer"], h, cache, cfg)
+        return x + y, cache
+    if kind == RGLRU:
+        y, cache = rglru_lib.rglru_decode(p["rec"], h, cache, cfg)
+        x = x + y
+        h2 = apply_norm(p["norm2"], x, cfg.norm_type)
+        return x + apply_mlp(p["mlp"], h2, cfg.mlp_type), cache
+    raise ValueError(kind)
+
+
+# ----------------------------------------------------------------- stacks
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat:
+        # prevent_cse=False: safe under scan (the standard remat-of-scan-body
+        # setting) and avoids optimization-barrier artifacts that break
+        # XLA's in-place dynamic-update-slice on the residual stack.
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable,
+                              prevent_cse=False)
+    return fn
+
+
+def _run_stack_train(params, x, positions, cfg: ModelConfig):
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def period_body(carry, period_params):
+        x, aux = carry
+        for j, kind in enumerate(cfg.block_pattern):
+            x, a = _block_train(kind, period_params[j], x, positions, cfg)
+            aux = aux + a
+        return (x, aux), None
+
+    body = _maybe_remat(period_body, cfg)
+    if cfg.pattern_periods > 0:
+        if cfg.scan_layers:
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["scan"])
+        else:
+            for i in range(cfg.pattern_periods):
+                pp = jax.tree.map(lambda t: t[i], params["scan"])
+                (x, aux_total), _ = period_body((x, aux_total), pp)
+    for i, kind in enumerate(cfg.pattern_remainder):
+        x, a = _block_train(kind, params["rem"][i], x, positions, cfg)
+        aux_total = aux_total + a
+    return x, aux_total
+
+
+def init_caches(params, batch: int, capacity: int, cfg: ModelConfig):
+    del params
+    scan_caches = []
+    for j, kind in enumerate(cfg.block_pattern):
+        one = _init_block_cache(kind, batch, capacity, cfg)
+        stacked = jax.tree.map(
+            lambda t: jnp.broadcast_to(t, (cfg.pattern_periods,) + t.shape).copy(), one)
+        scan_caches.append(stacked)
+    rem = tuple(_init_block_cache(kind, batch, capacity, cfg)
+                for kind in cfg.pattern_remainder)
+    return {"scan": tuple(scan_caches), "rem": rem, "pos": jnp.zeros((), jnp.int32)}
+
+
+def _run_stack_prefill(params, caches, x, positions, cfg: ModelConfig):
+    def period_body(x, period_in):
+        pp, pc = period_in
+        new_c = []
+        for j, kind in enumerate(cfg.block_pattern):
+            x, _, c = _block_prefill(kind, pp[j], x, positions, pc[j], cfg)
+            new_c.append(c)
+        return x, tuple(new_c)
+
+    if cfg.pattern_periods > 0:
+        x, new_scan = jax.lax.scan(period_body, x, (params["scan"], caches["scan"]))
+    else:
+        new_scan = caches["scan"]
+    new_rem = []
+    for i, kind in enumerate(cfg.pattern_remainder):
+        x, _, c = _block_prefill(kind, params["rem"][i], x, positions,
+                                 caches["rem"][i], cfg)
+        new_rem.append(c)
+    new_caches = {"scan": new_scan, "rem": tuple(new_rem),
+                  "pos": positions[0, -1].astype(jnp.int32) + 1}
+    return x, new_caches
+
+
+def _run_stack_decode(params, caches, x, cfg: ModelConfig):
+    def period_body(x, period_in):
+        pp, pc = period_in
+        new_c = []
+        for j, kind in enumerate(cfg.block_pattern):
+            x, c = _block_decode(kind, pp[j], x, pc[j], cfg)
+            new_c.append(c)
+        return x, tuple(new_c)
+
+    if cfg.pattern_periods > 0:
+        x, new_scan = jax.lax.scan(period_body, x, (params["scan"], caches["scan"]))
+    else:
+        new_scan = caches["scan"]
+    new_rem = []
+    for i, kind in enumerate(cfg.pattern_remainder):
+        x, c = _block_decode(kind, params["rem"][i], x, caches["rem"][i], cfg)
+        new_rem.append(c)
+    return x, {"scan": new_scan, "rem": tuple(new_rem), "pos": caches["pos"] + 1}
+
+
+# ----------------------------------------------------------------- heads
+
+def _embed_inputs(params, tokens, cfg: ModelConfig, prefix_embeds=None):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if prefix_embeds is not None:
+        pe = jnp.einsum("bpe,ed->bpd", prefix_embeds.astype(x.dtype),
+                        params["frontend_proj"])
+        x = jnp.concatenate([pe, x], axis=1)
+    # Seed GSPMD with batch-sharded activations: the embedding gather would
+    # otherwise propagate the table's sharding (d over 'data') and replicate
+    # the batch dim across the whole mesh.
+    x = shu.constrain(x, shu.BATCH, None, None)
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    return x, positions
+
+
+def _logits(params, x, cfg: ModelConfig):
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    logits = shu.constrain(logits, shu.BATCH, None, "model")
+    logits = logits.astype(jnp.float32)
+    if cfg.logits_softcap > 0:
+        c = cfg.logits_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def forward(params, tokens, cfg: ModelConfig, prefix_embeds=None):
+    """Training forward.  Returns (logits (B,S_total,V_padded), aux_loss)."""
+    x, positions = _embed_inputs(params, tokens, cfg, prefix_embeds)
+    x, aux = _run_stack_train(params, x, positions, cfg)
+    return _logits(params, x, cfg), aux
+
+
+def prefill(params, tokens, cfg: ModelConfig, capacity: int, prefix_embeds=None):
+    """Inference prefill.  Returns (last-token logits (B,V), caches)."""
+    x, positions = _embed_inputs(params, tokens, cfg, prefix_embeds)
+    caches = init_caches(params, x.shape[0], capacity, cfg)
+    x, caches = _run_stack_prefill(params, caches, x, positions, cfg)
+    logits = _logits(params, x[:, -1:], cfg)
+    return logits[:, 0], caches
+
+
+def decode_step(params, token, caches, cfg: ModelConfig):
+    """token: (B,) int32.  Returns (logits (B,V), caches)."""
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    x = shu.constrain(x, shu.BATCH, None, None)
+    x, caches = _run_stack_decode(params, caches, x, cfg)
+    logits = _logits(params, x, cfg)
+    return logits[:, 0], caches
+
+
+def cross_entropy(logits, targets, mask, vocab_size: int):
+    """CE that stays efficient when the vocab dim is model-axis sharded.
+
+    No take_along_axis over the (padded, sharded) vocab dim — GSPMD would
+    all-gather the full (B,S,V) logits for the gather.  Instead the target
+    logit is read through an iota-compare masked reduction and the padded
+    vocab tail is masked out of the logsumexp; both are elementwise +
+    reduce, which GSPMD partitions with a small all-reduce.
+    """
+    v = logits.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (v,), 0)
+    vocab_ok = iota < vocab_size                                   # (V,)
+    neg = jnp.asarray(-1e30, logits.dtype)
+    masked = jnp.where(vocab_ok, logits, neg)
+    m = jax.lax.stop_gradient(jnp.max(masked, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(masked - m), axis=-1)) + m[..., 0]
+    tgt = jnp.sum(jnp.where(iota == targets[..., None], logits, 0.0), axis=-1)
+    nll = lse - tgt
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / denom
+
+
+def loss_fn(params, tokens, targets, mask, cfg: ModelConfig, prefix_embeds=None):
+    """Next-token CE in fp32 over the exact (unpadded) vocab."""
+    logits, aux = forward(params, tokens, cfg, prefix_embeds)
+    if prefix_embeds is not None:
+        logits = logits[:, prefix_embeds.shape[1]:]
+    ce = cross_entropy(logits, targets, mask, cfg.vocab_size)
+    return ce + aux, {"ce": ce, "aux": aux,
+                      "tokens": jnp.sum(mask).astype(jnp.int32)}

@@ -1,0 +1,3 @@
+from .sampler import SamplerConfig, sample
+from .generate import GenerateConfig, Generator
+from .batcher import pad_to_buckets, bucket_batch, bucket_len

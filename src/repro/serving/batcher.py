@@ -1,0 +1,45 @@
+"""Request batching: pad-to-bucket grouping so jit re-compiles are bounded.
+
+The TweakLLM engine splits each incoming batch into MISS / TWEAK / EXACT
+sub-batches with different prompt shapes; the batcher pads each sub-batch to
+the nearest (batch, length) bucket so the number of compiled specializations
+stays small under production traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+BATCH_BUCKETS = (1, 2, 4, 8, 16, 32, 64)
+LEN_BUCKETS = (16, 32, 64, 128, 256, 512, 1024)
+
+
+def bucket_batch(n: int) -> int:
+    for b in BATCH_BUCKETS:
+        if n <= b:
+            return b
+    return ((n + BATCH_BUCKETS[-1] - 1) // BATCH_BUCKETS[-1]) * BATCH_BUCKETS[-1]
+
+
+def bucket_len(n: int) -> int:
+    for b in LEN_BUCKETS:
+        if n <= b:
+            return b
+    return ((n + LEN_BUCKETS[-1] - 1) // LEN_BUCKETS[-1]) * LEN_BUCKETS[-1]
+
+
+def pad_to_buckets(tokens: np.ndarray, mask: np.ndarray,
+                   pad_id: int = 0) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Pad (B, L) token/mask arrays up to bucket sizes.  Returns real B."""
+    b, l = tokens.shape
+    bb, lb = bucket_batch(b), bucket_len(l)
+    out_t = np.full((bb, lb), pad_id, tokens.dtype)
+    out_m = np.zeros((bb, lb), mask.dtype)
+    out_t[:b, :l] = tokens
+    out_m[:b, :l] = mask
+    if bb > b:  # pad rows must still be valid model input: repeat row 0
+        out_t[b:] = out_t[0]
+        out_m[b:] = out_m[0]
+    return out_t, out_m, b

@@ -1,0 +1,70 @@
+"""Batched generation loop: jitted prefill + jitted decode steps.
+
+Host drives the loop (early-exit when every sequence hit EOS); the compiled
+artifacts are cached per (batch, prompt_len) bucket by jax.jit itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from .sampler import SamplerConfig, sample
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerateConfig:
+    max_new_tokens: int = 32
+    eos_id: int = 2
+    sampler: SamplerConfig = SamplerConfig()
+
+
+class Generator:
+    """Wraps a Model with jitted prefill/decode for repeated serving calls."""
+
+    def __init__(self, model: Model, params, gen_cfg: GenerateConfig):
+        self.model = model
+        self.params = params
+        self.cfg = gen_cfg
+
+        @functools.partial(jax.jit, static_argnames=("capacity",))
+        def _prefill(params, batch, capacity):
+            return model.prefill(params, batch, capacity)
+
+        @jax.jit
+        def _step(params, token, caches, key):
+            logits, caches = model.decode_step(params, token, caches)
+            nxt = sample(key, logits, gen_cfg.sampler)
+            return nxt, caches
+
+        self._prefill = _prefill
+        self._step = _step
+
+    def generate(self, batch: Dict[str, jnp.ndarray], *,
+                 max_new_tokens: Optional[int] = None, seed: int = 0) -> np.ndarray:
+        """batch: {tokens (B,S), [frames|prefix_embeds]} -> (B, T_new) ids."""
+        mnt = max_new_tokens or self.cfg.max_new_tokens
+        b, s = batch["tokens"].shape
+        capacity = s + mnt + 1
+        if self.model.cfg.num_prefix_tokens:
+            capacity += self.model.cfg.num_prefix_tokens
+        logits, caches = self._prefill(self.params, batch, capacity)
+        key = jax.random.PRNGKey(seed)
+        tok = sample(key, logits, self.cfg.sampler)
+        out = [np.asarray(tok)]
+        done = np.asarray(tok) == self.cfg.eos_id
+        for i in range(mnt - 1):
+            if done.all():
+                break
+            key, sub = jax.random.split(key)
+            tok, caches = self._step(self.params, tok, caches, sub)
+            t = np.asarray(tok)
+            t = np.where(done, self.cfg.eos_id, t)
+            out.append(t)
+            done |= t == self.cfg.eos_id
+        return np.stack(out, axis=1)  # (B, T_new)

@@ -1,0 +1,29 @@
+"""Token samplers: greedy / temperature / top-k, fp32 logits in, id out."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0   # 0 => greedy
+    top_k: int = 0             # 0 => full softmax
+    vocab_size: int = 0        # mask padded logits above this (0 = off)
+
+
+def sample(key, logits, cfg: SamplerConfig):
+    """logits (B, V) -> token ids (B,) int32."""
+    if cfg.vocab_size:
+        v = logits.shape[-1]
+        mask = jnp.arange(v) < cfg.vocab_size
+        logits = jnp.where(mask[None, :], logits, -jnp.inf)
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / cfg.temperature
+    if cfg.top_k > 0:
+        kth = jax.lax.top_k(logits, cfg.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

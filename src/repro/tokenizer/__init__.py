@@ -1,0 +1,1 @@
+from .tokenizer import HashWordTokenizer, SPECIAL_TOKENS

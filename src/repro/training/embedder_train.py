@@ -1,0 +1,65 @@
+"""Contrastive training for the sentence embedder (MiniLM analogue).
+
+InfoNCE over generated paraphrase pairs: duplicates are positives,
+in-batch others + hard negatives (polarity flips / entity swaps) are
+negatives.  This gives the semantic cache an embedding space where
+"duplicate" actually means cosine-close — the property the paper buys
+off-the-shelf from all-MiniLM-L6-v2 and we must train ourselves offline.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.questions import QuestionPairGenerator
+from repro.models.embedder import encode as embed_encode
+from repro.tokenizer import HashWordTokenizer
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def info_nce_loss(params, cfg, ta, ma, tb, mb, tn, mn, temp: float = 0.07,
+                  neg_margin: float = 0.4):
+    """Bidirectional InfoNCE over duplicate pairs + margin push on HARD
+    negatives (polarity flips / entity swaps — the paper's §6 failure mode
+    for embedding-only caches)."""
+    za = embed_encode(params, ta, ma, cfg)     # (B, D) unit
+    zb = embed_encode(params, tb, mb, cfg)
+    logits = za @ zb.T / temp                  # (B, B)
+    labels = jnp.arange(za.shape[0])
+    lab = -jnp.take_along_axis(jax.nn.log_softmax(logits, 1), labels[:, None], 1).mean()
+    lba = -jnp.take_along_axis(jax.nn.log_softmax(logits.T, 1), labels[:, None], 1).mean()
+    zn = embed_encode(params, tn, mn, cfg)     # hard negative of each anchor
+    neg_sim = jnp.sum(za * zn, axis=-1)
+    hard = jnp.mean(jax.nn.relu(neg_sim - (1.0 - neg_margin)))
+    return 0.5 * (lab + lba) + hard
+
+
+def train_embedder(params, cfg, tokenizer: HashWordTokenizer, *,
+                   steps: int = 200, batch: int = 32, max_len: int = 32,
+                   lr: float = 1e-3, seed: int = 0):
+    """Returns trained params.  CPU-friendly at tiny configs."""
+    gen = QuestionPairGenerator(seed=seed)
+    opt_cfg = AdamWConfig(lr=lr, weight_decay=0.0)
+    opt = init_opt_state(params)
+
+    @jax.jit
+    def step(params, opt, ta, ma, tb, mb, tn, mn):
+        loss, grads = jax.value_and_grad(info_nce_loss)(
+            params, cfg, ta, ma, tb, mb, tn, mn)
+        params, opt = adamw_update(params, grads, opt, opt_cfg)
+        return params, opt, loss
+
+    losses = []
+    for s in range(steps):
+        triples = [gen.triple() for _ in range(batch)]
+        ta, ma = tokenizer.encode_batch([a.text for a, b, n in triples], max_len)
+        tb, mb = tokenizer.encode_batch([b.text for a, b, n in triples], max_len)
+        tn, mn = tokenizer.encode_batch([n.text for a, b, n in triples], max_len)
+        params, opt, loss = step(params, opt, jnp.asarray(ta), jnp.asarray(ma),
+                                 jnp.asarray(tb), jnp.asarray(mb),
+                                 jnp.asarray(tn), jnp.asarray(mn))
+        losses.append(float(loss))
+    return params, losses

@@ -1,0 +1,66 @@
+"""Training step builders: plain and gradient-accumulation (microbatched).
+
+``make_train_step`` returns a jit-able (params, opt_state, batch) ->
+(params, opt_state, metrics) function.  With ``microbatches > 1`` the batch
+axis is split and gradients accumulate through a lax.scan — the memory lever
+for the >=300B dry-run configs (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from .optimizer import AdamWConfig, adamw_update, cosine_schedule, init_opt_state
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, *,
+                    microbatches: int = 1, warmup: int = 100,
+                    total_steps: int = 10_000):
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, micro):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, micro)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(acc_body, (g0, jnp.zeros(())), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics = {}
+        lr_scale = cosine_schedule(opt_state["step"], warmup=warmup,
+                                   total=total_steps)
+        params, opt_state = adamw_update(params, grads, opt_state, opt_cfg,
+                                         lr_scale=lr_scale)
+        metrics = dict(metrics or {})
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return {"loss": loss, **metrics}
+    return eval_step

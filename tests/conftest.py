@@ -1,0 +1,6 @@
+import os
+import sys
+
+# src/ layout import without install (+ repo root for benchmarks/)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

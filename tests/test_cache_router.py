@@ -1,0 +1,115 @@
+"""Semantic cache + router invariants (unit + hypothesis property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cache as cache_lib
+from repro.core import router as router_lib
+
+
+def _cfg(**kw):
+    d = dict(capacity=16, dim=8, max_query_tokens=4, max_response_tokens=4,
+             topk=4)
+    d.update(kw)
+    return cache_lib.CacheConfig(**d)
+
+
+def _rand_entry(key, cfg):
+    e = jax.random.normal(key, (cfg.dim,))
+    qt = jnp.zeros((cfg.max_query_tokens,), jnp.int32)
+    qm = jnp.ones((cfg.max_query_tokens,), jnp.float32)
+    rt = jnp.zeros((cfg.max_response_tokens,), jnp.int32)
+    rm = jnp.ones((cfg.max_response_tokens,), jnp.float32)
+    return e, qt, qm, rt, rm
+
+
+def test_insert_then_lookup_exact():
+    cfg = _cfg()
+    st_ = cache_lib.init_cache(cfg)
+    e, *rest = _rand_entry(jax.random.PRNGKey(0), cfg)
+    st_ = cache_lib.insert(st_, cfg, e, *rest)
+    q = (e / jnp.linalg.norm(e))[None]
+    scores, idx = cache_lib.lookup(st_, cfg, q)
+    assert int(idx[0, 0]) == 0
+    np.testing.assert_allclose(float(scores[0, 0]), 1.0, atol=1e-5)
+
+
+def test_empty_cache_no_hits():
+    cfg = _cfg()
+    st_ = cache_lib.init_cache(cfg)
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, cfg.dim))
+    scores, idx = cache_lib.lookup(st_, cfg, q)
+    assert np.all(np.asarray(scores) == -np.inf)
+
+
+def test_fifo_eviction_order():
+    cfg = _cfg(capacity=4, policy="fifo")
+    st_ = cache_lib.init_cache(cfg)
+    embs = []
+    for i in range(6):  # two past capacity
+        e, *rest = _rand_entry(jax.random.PRNGKey(i), cfg)
+        embs.append(e / jnp.linalg.norm(e))
+        st_ = cache_lib.insert(st_, cfg, e, *rest)
+    # entries 0,1 evicted; 2..5 present at slots 2,3,0,1
+    s, i = cache_lib.lookup(st_, cfg, jnp.stack(embs))
+    top = np.asarray(s)[:, 0]
+    assert top[0] < 0.999 and top[1] < 0.999  # evicted
+    np.testing.assert_allclose(top[2:], 1.0, atol=1e-5)
+
+
+def test_lru_eviction_keeps_touched():
+    cfg = _cfg(capacity=2, policy="lru")
+    st_ = cache_lib.init_cache(cfg)
+    es = []
+    for i in range(2):
+        e, *rest = _rand_entry(jax.random.PRNGKey(i), cfg)
+        es.append(e / jnp.linalg.norm(e))
+        st_ = cache_lib.insert(st_, cfg, e, *rest)
+    st_ = cache_lib.touch(st_, cfg, jnp.asarray([0]))  # entry 0 recently used
+    e, *rest = _rand_entry(jax.random.PRNGKey(99), cfg)
+    st_ = cache_lib.insert(st_, cfg, e, *rest)  # should evict slot 1
+    s, i = cache_lib.lookup(st_, cfg, jnp.stack(es))
+    assert float(s[0, 0]) > 0.999   # kept
+    assert float(s[1, 0]) < 0.999   # evicted
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 12), seed=st.integers(0, 2 ** 16))
+def test_size_never_exceeds_capacity(n, seed):
+    cfg = _cfg(capacity=8)
+    st_ = cache_lib.init_cache(cfg)
+    for i in range(n):
+        e, *rest = _rand_entry(jax.random.PRNGKey(seed + i), cfg)
+        st_ = cache_lib.insert(st_, cfg, e, *rest)
+    assert int(st_["size"]) == min(n, 8)
+    assert int(jnp.sum(st_["valid"])) == min(n, 8)
+
+
+# ------------------------------------------------------------------ router
+
+def test_route_thresholds():
+    cfg = router_lib.RouterConfig(tweak_threshold=0.7, exact_threshold=0.999)
+    s = jnp.asarray([0.2, 0.69, 0.7, 0.9, 0.999, 1.0])
+    d = np.asarray(router_lib.route(s, cfg))
+    assert list(d) == [router_lib.MISS, router_lib.MISS, router_lib.TWEAK,
+                       router_lib.TWEAK, router_lib.EXACT, router_lib.EXACT]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(-1, 1.0), min_size=1, max_size=32),
+       st.floats(0.3, 0.95))
+def test_router_monotone_in_threshold(scores, t):
+    """Raising the threshold never increases the number of hits."""
+    s = jnp.asarray(scores, jnp.float32)
+    lo = router_lib.route(s, router_lib.RouterConfig(tweak_threshold=t))
+    hi = router_lib.route(s, router_lib.RouterConfig(tweak_threshold=min(t + 0.1, 1.0)))
+    hits_lo = int(jnp.sum(lo != router_lib.MISS))
+    hits_hi = int(jnp.sum(hi != router_lib.MISS))
+    assert hits_hi <= hits_lo
+
+
+def test_band_of():
+    b = np.asarray(router_lib.band_of(jnp.asarray([0.5, 0.7, 0.85, 0.95, 1.0])))
+    assert list(b) == [-1, 0, 1, 2, 2]

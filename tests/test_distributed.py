@@ -1,0 +1,117 @@
+"""Distributed-cache and sharding tests.
+
+These need >1 device, so they spawn a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (the main test process
+must keep seeing 1 device — smoke tests rely on it).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.core import cache as cache_lib
+    from repro.core.distributed import make_distributed_lookup, shard_cache_state
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    cfg = cache_lib.CacheConfig(capacity=64, dim=16, topk=4)
+    state = cache_lib.init_cache(cfg)
+    key = jax.random.PRNGKey(0)
+    for i in range(40):
+        e = jax.random.normal(jax.random.fold_in(key, i), (cfg.dim,))
+        z = jnp.zeros((cfg.max_query_tokens,), jnp.int32)
+        m = jnp.ones((cfg.max_query_tokens,), jnp.float32)
+        z2 = jnp.zeros((cfg.max_response_tokens,), jnp.int32)
+        m2 = jnp.ones((cfg.max_response_tokens,), jnp.float32)
+        state = cache_lib.insert(state, cfg, e, z, m, z2, m2)
+    q = jax.random.normal(jax.random.PRNGKey(7), (5, cfg.dim))
+    q = q / jnp.linalg.norm(q, axis=-1, keepdims=True)
+    # single-device reference
+    ref_s, ref_i = cache_lib.lookup(state, cfg, q)
+    # sharded lookup
+    sstate = shard_cache_state(state, mesh)
+    lookup = make_distributed_lookup(mesh, cfg)
+    ds, di = lookup(sstate, q)
+    ok_scores = bool(np.allclose(np.asarray(ds), np.asarray(ref_s), atol=1e-5))
+    ok_idx = bool(np.array_equal(np.sort(np.asarray(di)), np.sort(np.asarray(ref_i))))
+    print(json.dumps({"ok_scores": ok_scores, "ok_idx": ok_idx,
+                      "n_dev": len(jax.devices())}))
+""")
+
+
+def test_distributed_lookup_matches_single_device():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["n_dev"] == 8
+    assert res["ok_scores"], res
+    assert res["ok_idx"], res
+
+
+_MESH_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import json
+    import jax
+    from repro.launch.mesh import make_production_mesh
+    m1 = make_production_mesh()
+    m2 = make_production_mesh(multi_pod=True)
+    print(json.dumps({
+        "single": [list(m1.axis_names), [int(m1.shape[a]) for a in m1.axis_names]],
+        "multi": [list(m2.axis_names), [int(m2.shape[a]) for a in m2.axis_names]],
+    }))
+""")
+
+
+def test_production_mesh_shapes():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", _MESH_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["single"] == [["data", "model"], [16, 16]]
+    assert res["multi"] == [["pod", "data", "model"], [2, 16, 16]]
+
+
+def test_sharding_specs_divisibility():
+    """Every generated spec must divide the production mesh axes."""
+    import jax
+    from repro.configs import ASSIGNED_ARCHS, get_config
+    from repro.launch import sharding as shd
+    from repro.launch.shapes import abstract_params
+
+    class FakeMesh:
+        shape = {"pod": 2, "data": 16, "model": 16}
+        axis_names = ("pod", "data", "model")
+
+    mesh = FakeMesh()
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        params = abstract_params(cfg)
+        specs = shd.param_specs(mesh, params)
+        from jax.sharding import PartitionSpec
+        flat_p = jax.tree.leaves(params)
+        flat_s = jax.tree.leaves(specs,
+                                 is_leaf=lambda x: isinstance(x, PartitionSpec))
+        import numpy as np
+        for p, s in zip(flat_p, flat_s):
+            for dim, ax in zip(p.shape, tuple(s)):
+                if ax is None:
+                    continue
+                names = ax if isinstance(ax, tuple) else (ax,)
+                size = int(np.prod([mesh.shape[n] for n in names]))
+                assert dim % size == 0, (arch, p.shape, tuple(s))

@@ -1,0 +1,70 @@
+"""Dry-run analysis machinery: HLO collective parser + roofline formulas.
+
+These run WITHOUT the 512-device env (pure text/arithmetic)."""
+import pytest
+
+from repro.launch.dryrun import collective_bytes, _shape_bytes
+from repro.configs import get_config
+from benchmarks.roofline import (analytic_fwd_flops, analytic_step_flops,
+                                 model_flops)
+
+HLO = """
+HloModule jit_step
+
+%region_0.1 (arg: (f32[8,128], s32[])) -> (f32[8,128], s32[]) {
+  %ag.1 = bf16[64,128]{1,0} all-gather(%p0), replica_groups={}
+  %ar.1 = f32[8,128]{1,0} all-reduce(%p1), to_apply=%add
+  ROOT %t = tuple(...)
+}
+
+ENTRY %main (p: f32[8,128]) -> f32[8,128] {
+  %w = (f32[8,128], s32[]) while(%init), condition=%region_1.2, body=%region_0.1
+  %ag.2 = f32[4,4]{1,0} all-gather(%x)
+  %a2a = bf16[2,8]{1,0} all-to-all(%y)
+  ROOT %r = f32[8,128] get-tuple-element(%w), index=0
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[8,128]") == 8 * 128 * 4
+    assert _shape_bytes("bf16[64,128]") == 64 * 128 * 2
+    assert _shape_bytes("(f32[2,2], bf16[4])") == 16 + 8
+    assert _shape_bytes("pred[10]") == 10
+
+
+def test_collective_parser_trip_count_scaling():
+    once = collective_bytes(HLO, loop_trip_count=1)
+    scaled = collective_bytes(HLO, loop_trip_count=10)
+    ag_body = 64 * 128 * 2
+    ar_body = 8 * 128 * 4
+    ag_main = 4 * 4 * 4
+    a2a = 2 * 8 * 2
+    assert once["all-gather"] == ag_body + ag_main
+    assert once["all-reduce"] == ar_body
+    assert once["all-to-all"] == a2a
+    # only the while-BODY collectives scale with the trip count
+    assert scaled["all-gather"] == 10 * ag_body + ag_main
+    assert scaled["all-reduce"] == 10 * ar_body
+    assert scaled["all-to-all"] == a2a
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "mamba2-130m",
+                                  "qwen3-moe-235b-a22b", "whisper-tiny",
+                                  "recurrentgemma-9b"])
+@pytest.mark.parametrize("shape", ["train_4k", "prefill_32k", "decode_32k"])
+def test_analytic_flops_sane(arch, shape):
+    cfg = get_config(arch)
+    fwd = analytic_fwd_flops(cfg, shape)
+    step = analytic_step_flops(cfg, shape)
+    mf = model_flops(cfg, shape)
+    assert fwd > 0 and step >= fwd
+    # 6*N*D should be within ~2 orders of the analytic number: catches
+    # dimension mix-ups in either formula.
+    assert 0.01 < mf / step < 3.0, (arch, shape, mf, step)
+
+
+def test_decode_flops_much_smaller_than_prefill():
+    cfg = get_config("qwen2.5-3b")
+    assert (analytic_fwd_flops(cfg, "decode_32k")
+            < analytic_fwd_flops(cfg, "prefill_32k") / 50)

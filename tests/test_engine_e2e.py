@@ -1,0 +1,105 @@
+"""End-to-end TweakLLM behaviour tests (paper Figure-1 pipeline)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CacheConfig, RouterConfig, TweakLLMEngine, router)
+from repro.core.baseline import BaselineConfig, GPTCacheBaseline
+from repro.data import QuestionPairGenerator
+from repro.models import ModelConfig, build_model
+from repro.models.embedder import init_embedder, tiny_embedder_config
+from repro.models.reranker import init_reranker, tiny_reranker_config
+from repro.serving import GenerateConfig, Generator, SamplerConfig
+from repro.tokenizer import HashWordTokenizer
+
+VOCAB = 4096
+
+
+@pytest.fixture(scope="module")
+def stack():
+    tok = HashWordTokenizer(VOCAB)
+    ecfg = tiny_embedder_config(VOCAB)
+    eparams = init_embedder(jax.random.PRNGKey(0), ecfg)
+    lm = ModelConfig(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                     d_ff=128, vocab_size=VOCAB, max_seq_len=512,
+                     dtype="float32")
+    gc = GenerateConfig(max_new_tokens=6, sampler=SamplerConfig(vocab_size=VOCAB))
+    big_m = build_model(lm)
+    small_m = build_model(lm.replace(num_layers=1))
+    big = Generator(big_m, big_m.init(jax.random.PRNGKey(1)), gc)
+    small = Generator(small_m, small_m.init(jax.random.PRNGKey(2)), gc)
+    return tok, ecfg, eparams, big, small
+
+
+def _engine(stack, **router_kw):
+    tok, ecfg, eparams, big, small = stack
+    return TweakLLMEngine(
+        tokenizer=tok, embedder_params=eparams, embedder_cfg=ecfg,
+        big=big, small=small,
+        cache_cfg=CacheConfig(capacity=64, dim=ecfg.d_model, topk=4),
+        router_cfg=RouterConfig(**router_kw))
+
+
+def test_miss_then_exact_hit(stack):
+    eng = _engine(stack)
+    r1 = eng.handle_batch(["how do i learn python setup"], max_new_tokens=4)
+    assert eng.stats.miss == 1 and eng.stats.exact == 0
+    assert isinstance(r1[0], str) and len(r1[0]) > 0
+    r2, meta = eng.handle_batch(["how do i learn python setup"],
+                                max_new_tokens=4, collect_meta=True)
+    assert eng.stats.exact == 1
+    assert meta[0]["decision"] == router.EXACT
+    assert meta[0]["sim"] > 0.999
+
+
+def test_tweak_path_uses_small_llm(stack):
+    eng = _engine(stack, tweak_threshold=0.3)  # aggressive for tiny embedder
+    eng.handle_batch(["why is keto diet good"], max_new_tokens=4)
+    _, meta = eng.handle_batch(["what makes keto diet worthwhile"],
+                               max_new_tokens=4, collect_meta=True)
+    assert meta[0]["decision"] in (router.TWEAK, router.EXACT)
+    assert eng.stats.tweak >= 1 or eng.stats.exact >= 1
+    assert eng.stats.small_tokens > 0 or eng.stats.exact >= 1
+
+
+def test_cost_accounting(stack):
+    eng = _engine(stack)
+    eng.handle_batch(["a unique question about rust installation"],
+                     max_new_tokens=4)
+    eng.handle_batch(["a unique question about rust installation"],
+                     max_new_tokens=4)
+    s = eng.stats
+    assert s.total == 2
+    assert s.cost < s.baseline_cost or s.exact > 0
+    assert 0.0 <= s.hit_rate <= 1.0
+
+
+def test_batch_routing_split(stack):
+    """A mixed batch must route per-request, not per-batch."""
+    eng = _engine(stack)
+    eng.handle_batch(["how do i learn guitar practice"], max_new_tokens=4)
+    rs, meta = eng.handle_batch(
+        ["how do i learn guitar practice",   # exact repeat
+         "what is the price of solar installation"],  # fresh
+        max_new_tokens=4, collect_meta=True)
+    assert meta[0]["decision"] == router.EXACT
+    assert meta[1]["decision"] == router.MISS
+    assert all(isinstance(r, str) for r in rs)
+
+
+def test_gptcache_baseline_verbatim(stack):
+    tok, ecfg, eparams, big, small = stack
+    rcfg = tiny_reranker_config(VOCAB)
+    rparams = init_reranker(jax.random.PRNGKey(5), rcfg)
+    bl = GPTCacheBaseline(
+        tokenizer=tok, embedder_params=eparams, embedder_cfg=ecfg,
+        reranker_params=rparams, reranker_cfg=rcfg,
+        cache_cfg=CacheConfig(capacity=32, dim=ecfg.d_model, topk=4),
+        cfg=BaselineConfig(similarity_threshold=0.7))
+    bl.put("how do i learn chess strategy", "practice endgames daily")
+    cq, cr, score = bl.get("how do i learn chess strategy")
+    assert cr == "practice endgames daily"   # verbatim, no tweak
+    assert score > 0.999
+    cq2, cr2, s2 = bl.get("completely unrelated mortgage question")
+    assert cr2 is None

@@ -1,0 +1,62 @@
+"""Judge + multi-agent debate protocol tests."""
+import jax
+import numpy as np
+import pytest
+
+from repro.eval import (PERSONAS, debate_batch, make_loglik_scorer,
+                        persona_score, run_debate, verdict_shares)
+from repro.models import ModelConfig, build_model
+from repro.tokenizer import HashWordTokenizer
+
+
+def test_three_personas_match_paper_table2():
+    names = [p.name for p in PERSONAS]
+    assert names == ["factual_accuracy", "user_experience",
+                     "relevance_completeness"]
+
+
+def test_debate_blinding_symmetry():
+    """Swapping A and B must swap the verdict (protocol is order-fair)."""
+    rng1 = np.random.default_rng(0)
+    rng2 = np.random.default_rng(0)
+    q = "how do i learn piano practice"
+    good = "here is a detailed answer about piano practice: first learn scales"
+    bad = "it depends"
+    r1 = run_debate(q, good, bad, -1.0, -3.0, rng=rng1)
+    r2 = run_debate(q, bad, good, -3.0, -1.0, rng=rng2)
+    flip = {"A": "B", "B": "A", "AB": "AB"}
+    assert r1.verdict == flip[r2.verdict]
+
+
+def test_debate_prefers_clearly_better():
+    rng = np.random.default_rng(1)
+    q = "how do i learn piano practice"
+    good = ("here is a detailed answer about piano practice: first understand "
+            "the fundamentals then practice consistently track progress")
+    bad = "no idea"
+    wins = 0
+    for i in range(10):
+        r = run_debate(q, good, bad, -0.5, -4.0, rng=rng)
+        wins += r.verdict == "A"
+    assert wins >= 8
+
+
+def test_verdict_shares_sum_to_one():
+    rng = np.random.default_rng(2)
+    rs = debate_batch(["q"] * 10, ["resp a"] * 10, ["resp b"] * 10,
+                      [-1.0] * 10, [-1.0] * 10)
+    shares = verdict_shares(rs)
+    assert abs(sum(shares.values()) - 1.0) < 1e-9
+
+
+def test_loglik_scorer_ranks_real_text_higher():
+    vocab = 512
+    cfg = ModelConfig(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                      d_ff=128, vocab_size=vocab, dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = HashWordTokenizer(vocab)
+    score = make_loglik_scorer(model, params, tok, max_len=48)
+    out = score(["what is keto"], ["keto is a diet plan"])
+    assert out.shape == (1,)
+    assert np.isfinite(out[0])

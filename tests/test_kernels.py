@@ -1,0 +1,143 @@
+"""Pallas kernel validation: shape/dtype sweeps + hypothesis properties,
+always against the pure-jnp ref.py oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.cosine_topk.ops import cosine_topk
+from repro.kernels.cosine_topk.ref import cosine_topk_ref
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _unit(key, shape, dtype=jnp.float32):
+    x = jax.random.normal(key, shape, dtype)
+    return x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+
+
+# ------------------------------------------------------------ cosine_topk
+
+@pytest.mark.parametrize("b,n,d,k,bn", [
+    (1, 128, 16, 1, 64), (4, 256, 64, 4, 64), (2, 512, 384, 8, 128),
+    (3, 256, 32, 16, 256), (8, 1024, 128, 2, 512),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cosine_topk_matches_ref(b, n, d, k, bn, dtype):
+    q = _unit(jax.random.PRNGKey(0), (b, d)).astype(dtype)
+    db = _unit(jax.random.PRNGKey(1), (n, d)).astype(dtype)
+    valid = jax.random.bernoulli(jax.random.PRNGKey(2), 0.85, (n,))
+    s1, i1 = cosine_topk(q, db, valid, k=k, impl="pallas", block_n=bn)
+    s2, i2 = cosine_topk_ref(q, db, k, valid)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-5, atol=1e-5)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 4), logn=st.integers(6, 9), d=st.sampled_from([8, 32, 128]),
+       k=st.integers(1, 8), seed=st.integers(0, 2 ** 16))
+def test_cosine_topk_property(b, logn, d, k, seed):
+    n = 2 ** logn
+    q = _unit(jax.random.PRNGKey(seed), (b, d))
+    db = _unit(jax.random.PRNGKey(seed + 1), (n, d))
+    s1, i1 = cosine_topk(q, db, None, k=k, impl="pallas", block_n=min(n, 128))
+    s2, i2 = cosine_topk_ref(q, db, k, None)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-5, atol=1e-5)
+    # scores sorted descending; indices in range
+    s1 = np.asarray(s1)
+    assert np.all(np.diff(s1, axis=1) <= 1e-6)
+    assert np.all((np.asarray(i1) >= 0) & (np.asarray(i1) < n))
+
+
+def test_cosine_topk_self_retrieval():
+    """Property: a db vector queried against its own bank wins top-1."""
+    db = _unit(jax.random.PRNGKey(3), (64, 32))
+    s, i = cosine_topk(db[:8], db, None, k=1, impl="pallas", block_n=64)
+    assert np.array_equal(np.asarray(i)[:, 0], np.arange(8))
+    np.testing.assert_allclose(np.asarray(s)[:, 0], 1.0, atol=1e-5)
+
+
+# --------------------------------------------------------- flash attention
+
+@pytest.mark.parametrize("b,sq,sk,h,hk,dh,bq,bk,causal,win", [
+    (2, 64, 64, 4, 2, 32, 16, 16, True, 0),
+    (1, 48, 48, 6, 6, 16, 32, 16, True, 12),
+    (2, 33, 33, 4, 1, 8, 16, 16, True, 0),
+    (1, 16, 40, 2, 2, 16, 16, 8, False, 0),
+    (1, 128, 128, 8, 4, 64, 64, 32, True, 32),
+])
+def test_flash_matches_ref(b, sq, sk, h, hk, dh, bq, bk, causal, win):
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, sq, h, dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, sk, hk, dh))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, sk, hk, dh))
+    o1 = flash_attention(q, k, v, causal=causal, window=win,
+                         block_q=bq, block_k=bk)
+    o2 = flash_attention_ref(q, k, v, causal=causal, window=win)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.sampled_from([16, 32, 48]), h=st.sampled_from([2, 4]),
+       g=st.sampled_from([1, 2]), dh=st.sampled_from([8, 16]),
+       causal=st.booleans(), seed=st.integers(0, 2 ** 16))
+def test_flash_property(s, h, g, dh, causal, seed):
+    hk = h // g
+    q = jax.random.normal(jax.random.PRNGKey(seed), (1, s, h, dh))
+    k = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, s, hk, dh))
+    v = jax.random.normal(jax.random.PRNGKey(seed + 2), (1, s, hk, dh))
+    o1 = flash_attention(q, k, v, causal=causal, window=0, block_q=16, block_k=16)
+    o2 = flash_attention_ref(q, k, v, causal=causal, window=0)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_bf16():
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 32, 4, 16), jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 2, 16), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 32, 2, 16), jnp.bfloat16)
+    o1 = flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+    o2 = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), rtol=3e-2, atol=3e-2)
+
+
+# --------------------------------------------------------- decode attention
+
+@pytest.mark.parametrize("b,t,h,hk,dh,bt", [
+    (2, 128, 8, 2, 32, 32), (3, 100, 4, 4, 16, 64), (1, 64, 6, 1, 8, 16),
+    (4, 256, 16, 8, 64, 128),
+])
+def test_decode_matches_ref(b, t, h, hk, dh, bt):
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, h, dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, t, hk, dh))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, t, hk, dh))
+    cl = jax.random.randint(jax.random.PRNGKey(3), (b,), 1, t + 1)
+    o1 = decode_attention(q, k, v, cl, block_t=bt)
+    o2 = decode_attention_ref(q, k, v, cl)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(t=st.sampled_from([32, 64, 96]), g=st.sampled_from([1, 2, 4]),
+       seed=st.integers(0, 2 ** 16))
+def test_decode_property(t, g, seed):
+    b, hk, dh = 2, 2, 16
+    h = hk * g
+    q = jax.random.normal(jax.random.PRNGKey(seed), (b, h, dh))
+    k = jax.random.normal(jax.random.PRNGKey(seed + 1), (b, t, hk, dh))
+    v = jax.random.normal(jax.random.PRNGKey(seed + 2), (b, t, hk, dh))
+    cl = jnp.asarray([1, t])
+    o1 = decode_attention(q, k, v, cl, block_t=32)
+    o2 = decode_attention_ref(q, k, v, cl)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
+    # cache_len=1 row attends only to slot 0 -> output == v[:, 0] broadcast
+    np.testing.assert_allclose(
+        np.asarray(o1)[0], np.asarray(v)[0, 0].repeat(g, axis=0), rtol=1e-4)

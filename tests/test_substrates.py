@@ -1,0 +1,139 @@
+"""Tokenizer, data generators, training loop, checkpoint round-trip."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import load_checkpoint, latest_checkpoint, save_checkpoint
+from repro.data import (QuestionPairGenerator, WorkloadGenerator,
+                        synthesize_response, token_stream_batches)
+from repro.models import ModelConfig, build_model
+from repro.tokenizer import HashWordTokenizer
+from repro.training import AdamWConfig, init_opt_state, make_train_step
+
+
+# ------------------------------------------------------------- tokenizer
+
+def test_tokenizer_deterministic():
+    tok = HashWordTokenizer(4096)
+    a = tok.encode("How do I learn Python?")
+    b = tok.encode("how do i learn python ?")
+    assert a == b  # case/punct-spacing insensitive
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.text(alphabet=st.characters(codec="ascii"), max_size=64),
+       st.integers(256, 8192))
+def test_tokenizer_ids_in_range(text, vocab):
+    tok = HashWordTokenizer(vocab)
+    ids = tok.encode(text)
+    assert all(0 <= i < vocab for i in ids)
+
+
+def test_encode_batch_shapes_and_mask():
+    tok = HashWordTokenizer(4096)
+    toks, mask = tok.encode_batch(["one two three", "one"], 8)
+    assert toks.shape == (2, 8) and mask.shape == (2, 8)
+    assert mask[0].sum() == 4  # bos + 3 words
+    assert mask[1].sum() == 2
+    assert np.all(toks[mask == 0] == tok.pad)
+
+
+# ------------------------------------------------------------------ data
+
+def test_question_pairs_labels():
+    gen = QuestionPairGenerator(seed=0)
+    pairs = gen.generate(100, dup_frac=0.5, hard_frac=0.25)
+    dups = [p for p in pairs if p[2] == 1]
+    negs = [p for p in pairs if p[2] == 0]
+    assert len(dups) > 20 and len(negs) > 20
+    for a, b, l in dups:
+        assert a.topic == b.topic and a.intent == b.intent
+    for a, b, l in negs:
+        assert (a.topic, a.intent) != (b.topic, b.intent)
+
+
+def test_polarity_hard_negatives_share_topic():
+    gen = QuestionPairGenerator(seed=1)
+    found = False
+    for _ in range(50):
+        a, b = gen.hard_negative_pair()
+        if a.topic == b.topic:
+            assert {a.intent, b.intent} == {"why_good", "why_bad"}
+            found = True
+    assert found
+
+
+def test_workload_profiles_differ():
+    lm = WorkloadGenerator("lmsys", seed=0).sample(400)
+    wc = WorkloadGenerator("wildchat", seed=0).sample(400)
+    lm_repeat = 1 - len({q.text for q in lm}) / len(lm)
+    wc_repeat = 1 - len({q.text for q in wc}) / len(wc)
+    assert lm_repeat > wc_repeat  # lmsys-like repeats harder
+
+
+def test_pretrain_stream_shapes():
+    tok = HashWordTokenizer(4096)
+    it = token_stream_batches(tok, batch=2, seq_len=16)
+    b = next(it)
+    assert b["tokens"].shape == (2, 16)
+    assert np.array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+
+
+# -------------------------------------------------------------- training
+
+def test_loss_decreases_tiny_lm():
+    cfg = ModelConfig(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                      d_ff=128, vocab_size=512, dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = HashWordTokenizer(512)
+    step = jax.jit(make_train_step(model, AdamWConfig(lr=3e-3),
+                                   total_steps=30))
+    opt = init_opt_state(params)
+    losses = []
+    stream = token_stream_batches(tok, 4, 32)
+    for i in range(30):
+        batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses[::6]
+
+
+def test_microbatched_matches_plain_grads():
+    cfg = ModelConfig(num_layers=1, d_model=32, num_heads=2, num_kv_heads=2,
+                      d_ff=64, vocab_size=128, dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, 128)
+    batch = {"tokens": toks, "targets": toks,
+             "mask": jnp.ones((4, 16), jnp.float32)}
+    s1 = jax.jit(make_train_step(model, AdamWConfig(lr=1e-2)))
+    s4 = jax.jit(make_train_step(model, AdamWConfig(lr=1e-2), microbatches=4))
+    p1, _, m1 = s1(params, init_opt_state(params), batch)
+    p4, _, m4 = s4(params, init_opt_state(params), batch)
+    # same global batch -> same update (up to fp accumulation order)
+    d = max(float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)))
+    assert d < 5e-3, d
+
+
+# ------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = ModelConfig(num_layers=1, d_model=32, num_heads=2, num_kv_heads=1,
+                      d_ff=64, vocab_size=128, dtype="bfloat16")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 7, params, {"arch": "test"})
+    assert latest_checkpoint(d) == 7
+    restored, meta = load_checkpoint(d, 7, params)
+    assert meta["metadata"]["arch"] == "test"
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-2)

@@ -1,0 +1,111 @@
+"""End-to-end behaviour tests for the paper's system.
+
+Prefill+decode == full forward (the KV-cache/state invariant) for every
+architecture family, plus tweak-prompt construction protocol checks.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tweak
+from repro.models import (ATTN, LOCAL_ATTN, MAMBA2, MOE, RGLRU, ModelConfig,
+                          build_model)
+
+B, S, V = 2, 12, 256
+
+
+def _consistency(cfg, extra=None, atol=5e-3):
+    toks = jax.random.randint(jax.random.PRNGKey(0), (B, S + 3), 0, V)
+    m = build_model(cfg)
+    p = m.init(jax.random.PRNGKey(1))
+    bf = {"tokens": toks}
+    bp = {"tokens": toks[:, :S]}
+    if extra:
+        bf.update(extra)
+        bp.update(extra)
+    lf, _ = m.forward(p, bf)
+    off = cfg.num_prefix_tokens if cfg.frontend == "vision_stub" else 0
+    lp, caches = m.prefill(p, bp, capacity=S + 8 + off)
+    errs = [float(np.max(np.abs(lp - lf[:, off + S - 1])))]
+    for i in range(3):
+        lp, caches = m.decode_step(p, toks[:, S + i], caches)
+        if i < 2:
+            errs.append(float(np.max(np.abs(lp - lf[:, off + S + i]))))
+    assert max(errs) < atol, (cfg.name, errs)
+
+
+def test_decode_matches_forward_dense():
+    _consistency(ModelConfig(num_layers=3, d_model=64, num_heads=4,
+                             num_kv_heads=2, d_ff=128, vocab_size=V,
+                             dtype="float32", qkv_bias=True))
+
+
+def test_decode_matches_forward_swa():
+    _consistency(ModelConfig(num_layers=3, d_model=64, num_heads=4,
+                             num_kv_heads=2, d_ff=128, vocab_size=V,
+                             sliding_window=6, dtype="float32"))
+
+
+def test_decode_matches_forward_moe():
+    _consistency(ModelConfig(num_layers=2, d_model=64, num_heads=4,
+                             num_kv_heads=2, d_ff=96, vocab_size=V,
+                             block_pattern=(MOE,), num_experts=4,
+                             experts_per_token=2, moe_d_ff=96,
+                             capacity_factor=2.0, dtype="float32"))
+
+
+def test_decode_matches_forward_mamba2():
+    _consistency(ModelConfig(num_layers=2, d_model=64, num_heads=1,
+                             num_kv_heads=1, d_ff=0, vocab_size=V,
+                             block_pattern=(MAMBA2,), ssm_state=16,
+                             ssm_head_dim=16, ssm_chunk=4, dtype="float32"))
+
+
+def test_decode_matches_forward_hybrid():
+    _consistency(ModelConfig(num_layers=5, d_model=64, num_heads=4,
+                             num_kv_heads=1, d_ff=128, vocab_size=V,
+                             block_pattern=(RGLRU, RGLRU, LOCAL_ATTN),
+                             sliding_window=6, dtype="float32"))
+
+
+def test_decode_matches_forward_encdec():
+    cfg = ModelConfig(family="encdec", num_layers=2, enc_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=V,
+                      mlp_type="gelu", norm_type="layernorm", enc_frames=8,
+                      max_seq_len=64, tie_embeddings=True, dtype="float32")
+    frames = jax.random.normal(jax.random.PRNGKey(2), (B, 8, 64))
+    _consistency(cfg, extra={"frames": frames})
+
+
+def test_decode_matches_forward_vlm():
+    cfg = ModelConfig(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                      d_ff=128, vocab_size=V, frontend="vision_stub",
+                      num_prefix_tokens=4, frontend_dim=32, dtype="float32")
+    pe = jax.random.normal(jax.random.PRNGKey(3), (B, 4, 32))
+    _consistency(cfg, extra={"prefix_embeds": pe})
+
+
+# ------------------------------------------------------------ tweak prompt
+
+def test_tweak_prompt_contains_all_parts():
+    t = tweak.build_tweak_text("new q", "old q", "old resp")
+    assert "new q" in t and "old q" in t and "old resp" in t
+    assert t.index("old q") < t.index("old resp")
+
+
+def test_query_suffix_applied():
+    assert tweak.preprocess_query("hi  ").endswith("answer briefly")
+
+
+def test_tweak_batch_tokens_fixed_shape():
+    instr = jnp.arange(5, dtype=jnp.int32)
+    nq = jnp.ones((2, 4), jnp.int32)
+    nm = jnp.ones((2, 4), jnp.float32)
+    cq = jnp.ones((2, 3), jnp.int32)
+    cm = jnp.ones((2, 3), jnp.float32)
+    cr = jnp.ones((2, 6), jnp.int32)
+    crm = jnp.ones((2, 6), jnp.float32)
+    toks, mask = tweak.build_tweak_batch_tokens(instr, nq, nm, cq, cm, cr, crm)
+    assert toks.shape == (2, 5 + 3 + 6 + 4)
+    assert mask.shape == toks.shape
