@@ -1,0 +1,14 @@
+# Repro tooling. `make test` is the tier-1 verify command from ROADMAP.md.
+
+PYTHONPATH_PREFIX := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench dev-deps
+
+test:
+	$(PYTHONPATH_PREFIX) python -m pytest -x -q
+
+bench:
+	$(PYTHONPATH_PREFIX) python -m benchmarks.microbench
+
+dev-deps:
+	pip install -r requirements-dev.txt

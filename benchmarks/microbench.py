@@ -90,12 +90,56 @@ def bench_insert(capacity=4096, dim=384):
     csv_row("cache_insert", us, f"capacity={capacity};ring_fifo")
 
 
+def bench_insert_batch(capacities=(4096, 16384, 65536), batch=64, dim=384,
+                       policy="fifo", reps=5):
+    """Sequential per-entry inserts vs one fused insert_batch call.
+
+    Sequential pays one dispatch + host sync per entry (the seed engine's
+    write path); insert_batch commits the whole batch in a single jitted
+    step.  Reports the throughput ratio per capacity.
+    """
+    for cap in capacities:
+        cfg = cache_lib.CacheConfig(capacity=cap, dim=dim, policy=policy)
+        embs = jax.random.normal(jax.random.PRNGKey(0), (batch, dim))
+        qt = jnp.zeros((batch, cfg.max_query_tokens), jnp.int32)
+        qm = jnp.ones((batch, cfg.max_query_tokens), jnp.float32)
+        rt = jnp.zeros((batch, cfg.max_response_tokens), jnp.int32)
+        rm = jnp.ones((batch, cfg.max_response_tokens), jnp.float32)
+
+        seq = jax.jit(lambda st, e, i: cache_lib.insert(
+            st, cfg, e, qt[i], qm[i], rt[i], rm[i]))
+        st = cache_lib.init_cache(cfg)
+        st = seq(st, embs[0], 0)          # compile
+        jax.block_until_ready(st["emb"])
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            for i in range(batch):
+                st = seq(st, embs[i], i)
+                jax.block_until_ready(st["emb"])  # the per-entry host sync
+        us_seq = (time.perf_counter() - t0) / reps * 1e6
+
+        batched = cache_lib.make_insert_batch(cfg, donate=False)
+        st = cache_lib.init_cache(cfg)
+        st, slots = batched(st, embs, qt, qm, rt, rm, batch)   # compile
+        jax.block_until_ready(st["emb"])
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            st, slots = batched(st, embs, qt, qm, rt, rm, batch)
+            jax.block_until_ready(st["emb"])
+        us_bat = (time.perf_counter() - t0) / reps * 1e6
+
+        ratio = us_seq / max(us_bat, 1e-9)
+        csv_row(f"insert_batch_{cap}", us_bat,
+                f"seq_us={us_seq:.0f};batch={batch};speedup={ratio:.1f}x")
+
+
 def main():
     bench_lookup()
     bench_lookup_pallas_interpret()
     bench_embed()
     bench_route()
     bench_insert()
+    bench_insert_batch()
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
 # TweakLLM core: semantic cache + threshold router + tweak engine.
 from . import cache, router, tweak
-from .cache import CacheConfig, init_cache, insert, lookup, fetch
+from .cache import (CacheConfig, init_cache, insert, insert_batch,
+                    make_insert_batch, lookup, lookup_and_touch, fetch)
 from .router import RouterConfig, route, band_of, MISS, TWEAK, EXACT
 from .engine import TweakLLMEngine, EngineStats
 from .baseline import GPTCacheBaseline, BaselineConfig

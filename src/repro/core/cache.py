@@ -9,6 +9,12 @@ append-only until capacity); LRU and LFU are implemented as the
 Lookup dispatches to the Pallas ``cosine_topk`` kernel (TPU target) or its
 XLA reference; ``repro.core.distributed`` wraps it in shard_map for the
 sharded production cache.
+
+Write path (DESIGN.md §5): ``insert`` is the one-entry reference;
+``insert_batch`` commits a whole miss batch in a single jitted step (fixed
+shapes + a traced ``count``, so one compile serves every batch bucket) and
+``lookup_and_touch`` fuses lookup, routing, and hit accounting so a serve
+batch costs one host↔device round-trip instead of one per entry.
 """
 from __future__ import annotations
 
@@ -19,6 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.cosine_topk.ops import cosine_topk
+
+from . import router as router_lib
 
 POLICIES = ("fifo", "lru", "lfu")
 
@@ -63,10 +71,28 @@ def _victim_slot(state, cfg: CacheConfig):
     return jnp.where(full, evict.astype(jnp.int32), state["ptr"] % cfg.capacity)
 
 
+def _normalize(emb):
+    return emb / jnp.maximum(jnp.linalg.norm(emb), 1e-8)
+
+
+def _fifo_batch_plan(ptr, row, count, capacity: int):
+    """Slot plan for a FIFO batch: (slots, keep, active).
+
+    Entry i lands at ring slot ``(ptr + i) % capacity``; when the batch
+    laps the ring the later duplicate must win, so row i is dropped when
+    row ``i + capacity`` is also active.  Shared by the local and sharded
+    insert_batch so the semantics cannot drift.
+    """
+    active = row < count
+    slots = (ptr + row) % capacity
+    keep = active & (row + capacity >= count)
+    return slots, keep, active
+
+
 def insert(state, cfg: CacheConfig, emb, q_tokens, q_mask, r_tokens, r_mask):
     """Insert ONE entry (emb (D,), tokens already padded to cfg lengths)."""
     slot = _victim_slot(state, cfg)
-    emb = emb / jnp.maximum(jnp.linalg.norm(emb), 1e-8)
+    emb = _normalize(emb)
     upd = lambda buf, val: buf.at[slot].set(val.astype(buf.dtype))
     new = dict(state)
     new["emb"] = upd(state["emb"], emb)
@@ -83,6 +109,89 @@ def insert(state, cfg: CacheConfig, emb, q_tokens, q_mask, r_tokens, r_mask):
     return new
 
 
+def insert_batch(state, cfg: CacheConfig, embs, q_tokens, q_mask,
+                 r_tokens, r_mask, count=None):
+    """Insert up to B entries in one fused device step.
+
+    embs (B, D); q_tokens/q_mask (B, max_query_tokens); r_tokens/r_mask
+    (B, max_response_tokens).  Rows at index >= ``count`` are padding and
+    are ignored — ``count`` is a traced scalar, so one compiled artifact
+    serves every batch bucket of the same padded shape B.
+
+    State-equivalent to B sequential :func:`insert` calls for all three
+    policies.  Returns ``(new_state, slots)`` where ``slots`` (B,) int32
+    holds the ring/victim slot each active row landed in (-1 for padding).
+
+    FIFO places rows at consecutive ring slots, so victim selection is a
+    single vectorized scatter.  LRU/LFU victims depend on every preceding
+    insert in the batch, so those run as an on-device ``lax.scan`` — still
+    a single dispatch, no per-entry host sync.
+    """
+    b = embs.shape[0]
+    # clamp so ptr/clock/size never advance past the rows actually written
+    count = jnp.minimum(jnp.asarray(b if count is None else count, jnp.int32), b)
+    embs = jax.vmap(_normalize)(embs)
+    row = jnp.arange(b, dtype=jnp.int32)
+    active = row < count
+
+    if cfg.policy == "fifo":
+        # scatter target `capacity` is out-of-bounds; mode="drop" discards it
+        slots, keep, active = _fifo_batch_plan(state["ptr"], row, count,
+                                               cfg.capacity)
+        w = jnp.where(keep, slots, cfg.capacity)
+        upd = lambda buf, val: buf.at[w].set(val.astype(buf.dtype), mode="drop")
+        new = dict(state)
+        new["emb"] = upd(state["emb"], embs)
+        new["q_tokens"] = upd(state["q_tokens"], q_tokens)
+        new["q_mask"] = upd(state["q_mask"], q_mask)
+        new["r_tokens"] = upd(state["r_tokens"], r_tokens)
+        new["r_mask"] = upd(state["r_mask"], r_mask)
+        new["valid"] = state["valid"].at[w].set(True, mode="drop")
+        new["last_used"] = state["last_used"].at[w].set(
+            state["clock"] + row, mode="drop")
+        new["hits"] = state["hits"].at[w].set(0, mode="drop")
+        new["ptr"] = state["ptr"] + count
+        new["clock"] = state["clock"] + count
+        new["size"] = jnp.minimum(state["size"] + count, cfg.capacity)
+        return new, jnp.where(active, slots, -1)
+
+    def step(carry, x):
+        emb_i, qt_i, qm_i, rt_i, rm_i, on = x
+        slot = _victim_slot(carry, cfg)
+        w = jnp.where(on, slot, cfg.capacity)  # OOB -> dropped when padding
+        upd = lambda buf, val: buf.at[w].set(val.astype(buf.dtype), mode="drop")
+        new = dict(carry)
+        new["emb"] = upd(carry["emb"], emb_i)
+        new["q_tokens"] = upd(carry["q_tokens"], qt_i)
+        new["q_mask"] = upd(carry["q_mask"], qm_i)
+        new["r_tokens"] = upd(carry["r_tokens"], rt_i)
+        new["r_mask"] = upd(carry["r_mask"], rm_i)
+        new["valid"] = carry["valid"].at[w].set(True, mode="drop")
+        new["last_used"] = carry["last_used"].at[w].set(carry["clock"],
+                                                        mode="drop")
+        new["hits"] = carry["hits"].at[w].set(0, mode="drop")
+        inc = on.astype(jnp.int32)
+        new["ptr"] = carry["ptr"] + inc
+        new["clock"] = carry["clock"] + inc
+        new["size"] = jnp.minimum(carry["size"] + inc, cfg.capacity)
+        return new, jnp.where(on, slot, -1)
+
+    return jax.lax.scan(
+        step, dict(state),
+        (embs, q_tokens, q_mask, r_tokens, r_mask, active))
+
+
+def make_insert_batch(cfg: CacheConfig, donate: bool = True):
+    """Jit-compiled ``(state, embs, qt, qm, rt, rm, count) -> (state, slots)``.
+
+    Cache buffers are donated so the update happens in place on device —
+    the caller must drop its reference to the input state.
+    """
+    fn = lambda state, embs, qt, qm, rt, rm, count: insert_batch(
+        state, cfg, embs, qt, qm, rt, rm, count)
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
 def lookup(state, cfg: CacheConfig, q_embs):
     """q_embs (B, D) unit vectors -> (scores (B,k), indices (B,k))."""
     k = min(cfg.topk, cfg.capacity)
@@ -97,6 +206,28 @@ def touch(state, cfg: CacheConfig, indices):
     new["hits"] = state["hits"].at[indices].add(1)
     new["clock"] = state["clock"] + 1
     return new
+
+
+def lookup_and_touch(state, cfg: CacheConfig,
+                     router_cfg: "router_lib.RouterConfig", q_embs):
+    """Fused lookup + routing + hit accounting (one device round-trip).
+
+    Every row routed EXACT or TWEAK touches its top-1 entry (updating
+    ``last_used``/``hits`` exactly like :func:`touch` on the hit subset),
+    so LRU/LFU see every hit — including the EXACT fast path.
+
+    Returns ``(new_state, scores (B,k), indices (B,k), decisions (B,))``.
+    """
+    scores, idx = lookup(state, cfg, q_embs)
+    decisions = router_lib.route(scores[:, 0], router_cfg)
+    top1 = idx[:, 0]
+    hit = (decisions != router_lib.MISS) & (top1 >= 0)
+    w = jnp.where(hit, top1, cfg.capacity)  # OOB -> dropped for misses
+    new = dict(state)
+    new["last_used"] = state["last_used"].at[w].set(state["clock"], mode="drop")
+    new["hits"] = state["hits"].at[w].add(1, mode="drop")
+    new["clock"] = state["clock"] + 1
+    return new, scores, idx, decisions
 
 
 def fetch(state, indices):

@@ -82,3 +82,72 @@ def make_distributed_insert(mesh: Mesh, cfg: cache_lib.CacheConfig,
                                 r_tokens, r_mask)
 
     return insert
+
+
+def make_distributed_insert_batch(mesh: Mesh, cfg: cache_lib.CacheConfig,
+                                  axis: str = "data"):
+    """Batched sharded FIFO insert, shard-routed by global slot.
+
+    The globally rotating ring pointer assigns entry i the slot
+    ``(ptr + i) % capacity``; shard ``slot // local_capacity`` owns it —
+    the same row partitioning the sharded lookup scans.  Each shard
+    receives the (replicated, fixed-shape) entry batch, keeps only its own
+    rows, and scatters them locally: no cross-shard traffic at all, and
+    one dispatch for the whole batch.
+
+    Returns a jitted ``(state, embs, qt, qm, rt, rm, count) ->
+    (new_state, slots)`` with the same semantics as
+    :func:`repro.core.cache.insert_batch` (padding rows >= count ignored,
+    slots[i] = -1 for padding).
+    """
+    assert cfg.policy == "fifo", "sharded insert_batch is FIFO-only"
+    n_shards = mesh.shape[axis]
+    assert cfg.capacity % n_shards == 0, (cfg.capacity, n_shards)
+    local_c = cfg.capacity // n_shards
+
+    def local_insert(emb_buf, qt_buf, qm_buf, rt_buf, rm_buf, valid,
+                     last_used, hits, ptr, clock, size,
+                     embs, qt, qm, rt, rm, count):
+        shard = jax.lax.axis_index(axis)
+        row = jnp.arange(embs.shape[0], dtype=jnp.int32)
+        gslot, keep, active = cache_lib._fifo_batch_plan(
+            ptr, row, count, cfg.capacity)
+        mine = keep & (gslot // local_c == shard)
+        w = jnp.where(mine, gslot % local_c, local_c)  # OOB -> dropped
+        embs = jax.vmap(cache_lib._normalize)(embs)
+        upd = lambda buf, val: buf.at[w].set(val.astype(buf.dtype),
+                                             mode="drop")
+        out = (upd(emb_buf, embs), upd(qt_buf, qt), upd(qm_buf, qm),
+               upd(rt_buf, rt), upd(rm_buf, rm),
+               valid.at[w].set(True, mode="drop"),
+               last_used.at[w].set(clock + row, mode="drop"),
+               hits.at[w].set(0, mode="drop"),
+               ptr + count, clock + count,
+               jnp.minimum(size + count, cfg.capacity),
+               jnp.where(active, gslot, -1))
+        return out
+
+    sm = shard_map(
+        local_insert, mesh=mesh,
+        in_specs=(P(axis),) * 8 + (P(),) * 3 + (P(),) * 6,
+        out_specs=(P(axis),) * 8 + (P(),) * 4,
+        check_rep=False)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def insert_batch(state, embs, q_tokens, q_mask, r_tokens, r_mask,
+                     count):
+        count = jnp.minimum(jnp.asarray(count, jnp.int32), embs.shape[0])
+        (emb, qt, qm, rt, rm, valid, last_used, hits,
+         ptr, clock, size, slots) = sm(
+            state["emb"], state["q_tokens"], state["q_mask"],
+            state["r_tokens"], state["r_mask"], state["valid"],
+            state["last_used"], state["hits"],
+            state["ptr"], state["clock"], state["size"],
+            embs, q_tokens, q_mask, r_tokens, r_mask, count)
+        new = dict(state)
+        new.update(emb=emb, q_tokens=qt, q_mask=qm, r_tokens=rt, r_mask=rm,
+                   valid=valid, last_used=last_used, hits=hits,
+                   ptr=ptr, clock=clock, size=size)
+        return new, slots
+
+    return insert_batch

@@ -9,8 +9,15 @@ Per incoming batch of text queries:
      TWEAK -> Small LLM prefills the Appendix-A tweak prompt and decodes
      EXACT -> cached response returned verbatim (§6.1 fast path)
 
+Step 2/3 run as one fused ``lookup_and_touch`` device call (EXACT and
+TWEAK hits update LRU/LFU bookkeeping in the same step), and a miss batch
+commits to the cache through one jitted ``insert_batch`` call with donated
+buffers — O(1) host↔device syncs per serve batch (DESIGN.md §5).
+
 Cost accounting mirrors the paper's §5.2.3 analysis: per-token cost ratio
 ``big_cost_per_token`` : ``small_cost_per_token`` defaults to 25:1.
+Token counts are REAL generated tokens (up to and including each row's
+first EOS), never the padded bucket length.
 """
 from __future__ import annotations
 
@@ -23,7 +30,7 @@ import numpy as np
 
 from repro.models.embedder import encode as embed_encode
 from repro.models.model import Model
-from repro.serving.batcher import pad_to_buckets
+from repro.serving.batcher import bucket_batch, pad_to_buckets
 from repro.serving.generate import GenerateConfig, Generator
 from repro.tokenizer import HashWordTokenizer
 
@@ -81,8 +88,13 @@ class TweakLLMEngine:
 
         self._embed = jax.jit(
             lambda p, t, m: embed_encode(p, t, m, embedder_cfg))
-        self._lookup = jax.jit(
-            lambda s, q: cache_lib.lookup(s, cache_cfg, q))
+        # fused lookup + route + hit-accounting; cache state donated so the
+        # touch happens in place (DESIGN.md §5)
+        self._lookup_touch = jax.jit(
+            lambda s, q: cache_lib.lookup_and_touch(s, cache_cfg,
+                                                    router_cfg, q),
+            donate_argnums=(0,))
+        self._insert_batch = cache_lib.make_insert_batch(cache_cfg)
 
     # ------------------------------------------------------------- embed
     def embed_texts(self, texts: List[str]) -> jnp.ndarray:
@@ -97,15 +109,17 @@ class TweakLLMEngine:
         queries = [tweak_lib.preprocess_query(q) for q in queries]
         n = len(queries)
         embs = self.embed_texts(queries)
-        scores, idxs = self._lookup(self.state, embs)
+        self.state, scores, idxs, dec = self._lookup_touch(self.state, embs)
         top1 = np.asarray(scores[:, 0])
         top1_idx = np.asarray(idxs[:, 0])
-        decisions = np.asarray(router_lib.route(jnp.asarray(top1), self.router_cfg))
+        decisions = np.asarray(dec)
 
         responses: List[Optional[str]] = [None] * n
-        meta = [{"sim": float(top1[i]), "decision": int(decisions[i]),
-                 "band": int(np.asarray(router_lib.band_of(jnp.asarray([top1[i]])))[0])}
-                for i in range(n)]
+        meta = None
+        if collect_meta:
+            bands = np.asarray(router_lib.band_of(jnp.asarray(top1)))
+            meta = [{"sim": float(top1[i]), "decision": int(decisions[i]),
+                     "band": int(bands[i])} for i in range(n)]
 
         # EXACT: verbatim cached response
         for i in np.nonzero(decisions == router_lib.EXACT)[0]:
@@ -134,6 +148,20 @@ class TweakLLMEngine:
         mask = np.asarray(self.state["r_mask"][slot])
         return self.tok.decode_ids([int(t) for t, m in zip(toks, mask) if m > 0])
 
+    def _strip_generated(self, row: np.ndarray) -> Tuple[List[int], int]:
+        """Split a generated row at its first EOS.
+
+        Returns (visible ids — everything before EOS, n real generated
+        tokens — including the terminating EOS).  The generator pads
+        early-finished rows with EOS, so this also removes bucket padding.
+        """
+        ids = [int(t) for t in row]
+        eos = self.tok.eos
+        if eos in ids:
+            p = ids.index(eos)
+            return ids[:p], p + 1
+        return ids, len(ids)
+
     def _run_tweak(self, queries, ids, top1_idx, responses, max_new_tokens):
         slots = [int(top1_idx[i]) for i in ids]
         cached = [self._text_store.get(s, ("", "")) for s in slots]
@@ -144,12 +172,40 @@ class TweakLLMEngine:
         toks, mask, b = pad_to_buckets(toks, mask)
         out = self.small.generate({"tokens": jnp.asarray(toks)},
                                   max_new_tokens=max_new_tokens)[:b]
-        self.state = cache_lib.touch(self.state, self.cache_cfg,
-                                     jnp.asarray(slots, jnp.int32))
         for j, i in enumerate(ids):
-            responses[i] = self.tok.decode_ids(out[j].tolist())
-            self.stats.small_tokens += out.shape[1]
+            visible, n_gen = self._strip_generated(out[j])
+            responses[i] = self.tok.decode_ids(visible)
+            self.stats.small_tokens += n_gen
             self.stats.tweak += 1
+
+    def _insert_entries(self, texts, resp_tokens, resp_texts, embs):
+        """Commit entries to the cache in ONE jitted device call.
+
+        texts/resp_texts: host strings; resp_tokens: per-row visible ids;
+        embs (n, D) on device.  Pads to the batch bucket so compiles stay
+        bounded; the single ``slots`` pull is the only host sync.
+        """
+        n = len(texts)
+        ccfg = self.cache_cfg
+        qt, qm = self.tok.encode_batch(texts, ccfg.max_query_tokens)
+        rt = np.zeros((n, ccfg.max_response_tokens), np.int32)
+        rm = np.zeros((n, ccfg.max_response_tokens), np.float32)
+        for j, ids in enumerate(resp_tokens):
+            rl = min(len(ids), ccfg.max_response_tokens)
+            rt[j, :rl] = ids[:rl]
+            rm[j, :rl] = 1.0
+        nb = bucket_batch(n)
+        pad = lambda a: np.concatenate(
+            [a, np.zeros((nb - n,) + a.shape[1:], a.dtype)]) if nb > n else a
+        embs = jnp.concatenate(
+            [embs, jnp.zeros((nb - n, embs.shape[1]), embs.dtype)]) \
+            if nb > n else embs
+        self.state, slots = self._insert_batch(
+            self.state, embs, jnp.asarray(pad(qt)), jnp.asarray(pad(qm)),
+            jnp.asarray(pad(rt)), jnp.asarray(pad(rm)), n)
+        slots = np.asarray(slots)  # single device->host sync per batch
+        for j in range(n):
+            self._text_store[int(slots[j])] = (texts[j], resp_texts[j])
 
     def _run_miss(self, queries, ids, embs, responses, max_new_tokens):
         texts = [queries[i] for i in ids]
@@ -157,35 +213,25 @@ class TweakLLMEngine:
         toks, mask, b = pad_to_buckets(toks, mask)
         out = self.big.generate({"tokens": jnp.asarray(toks)},
                                 max_new_tokens=max_new_tokens)[:b]
-        qtoks, qmask = self.tok.encode_batch(texts, self.cache_cfg.max_query_tokens)
+        resp_tokens, resp_texts = [], []
         for j, i in enumerate(ids):
-            resp_text = self.tok.decode_ids(out[j].tolist())
+            visible, n_gen = self._strip_generated(out[j])
+            resp_text = self.tok.decode_ids(visible)
             responses[i] = resp_text
-            rt = np.zeros((self.cache_cfg.max_response_tokens,), np.int32)
-            rm = np.zeros((self.cache_cfg.max_response_tokens,), np.float32)
-            rl = min(out.shape[1], self.cache_cfg.max_response_tokens)
-            rt[:rl] = out[j][:rl]
-            rm[:rl] = 1.0
-            slot = int(np.asarray(cache_lib._victim_slot(self.state, self.cache_cfg)))
-            self.state = cache_lib.insert(
-                self.state, self.cache_cfg, embs[i],
-                jnp.asarray(qtoks[j]), jnp.asarray(qmask[j]),
-                jnp.asarray(rt), jnp.asarray(rm))
-            self._text_store[slot] = (texts[j], resp_text)
-            self.stats.big_tokens += out.shape[1]
+            resp_tokens.append(visible)
+            resp_texts.append(resp_text)
+            self.stats.big_tokens += n_gen
             self.stats.miss += 1
+        self._insert_entries(texts, resp_tokens, resp_texts,
+                             embs[np.asarray(ids)])
 
     # ------------------------------------------------- offline population
     def populate(self, queries: List[str], responses: List[str]):
         """Bulk-insert known (query, response) pairs (dataset simulation)."""
         queries = [tweak_lib.preprocess_query(q) for q in queries]
         embs = self.embed_texts(queries)
-        qt, qm = self.tok.encode_batch(queries, self.cache_cfg.max_query_tokens)
         rt, rm = self.tok.encode_batch(responses, self.cache_cfg.max_response_tokens,
                                        add_bos=False)
-        for i in range(len(queries)):
-            slot = int(np.asarray(cache_lib._victim_slot(self.state, self.cache_cfg)))
-            self.state = cache_lib.insert(
-                self.state, self.cache_cfg, embs[i], jnp.asarray(qt[i]),
-                jnp.asarray(qm[i]), jnp.asarray(rt[i]), jnp.asarray(rm[i]))
-            self._text_store[slot] = (queries[i], responses[i])
+        resp_tokens = [[int(t) for t, m in zip(rt[i], rm[i]) if m > 0]
+                       for i in range(len(queries))]
+        self._insert_entries(queries, resp_tokens, responses, embs)

@@ -1,6 +1,8 @@
 import os
 import sys
 
-# src/ layout import without install (+ repo root for benchmarks/)
+# src/ layout import without install (+ repo root for benchmarks/,
+# tests/ for the shared _hypothesis_shim helper)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core import cache as cache_lib
 from repro.core import router as router_lib
@@ -85,6 +85,111 @@ def test_size_never_exceeds_capacity(n, seed):
         st_ = cache_lib.insert(st_, cfg, e, *rest)
     assert int(st_["size"]) == min(n, 8)
     assert int(jnp.sum(st_["valid"])) == min(n, 8)
+
+
+def test_lfu_eviction_keeps_hit():
+    cfg = _cfg(capacity=2, policy="lfu")
+    st_ = cache_lib.init_cache(cfg)
+    es = []
+    for i in range(2):
+        e, *rest = _rand_entry(jax.random.PRNGKey(i), cfg)
+        es.append(e / jnp.linalg.norm(e))
+        st_ = cache_lib.insert(st_, cfg, e, *rest)
+    st_ = cache_lib.touch(st_, cfg, jnp.asarray([1]))  # entry 1 is hot
+    e, *rest = _rand_entry(jax.random.PRNGKey(99), cfg)
+    st_ = cache_lib.insert(st_, cfg, e, *rest)  # should evict cold slot 0
+    s, _ = cache_lib.lookup(st_, cfg, jnp.stack(es))
+    assert float(s[0, 0]) < 0.999   # evicted
+    assert float(s[1, 0]) > 0.999   # kept
+
+
+@pytest.mark.parametrize("policy", ["lru", "lfu"])
+def test_exact_hit_survives_eviction_via_fused_touch(policy):
+    """An entry hit through lookup_and_touch (the EXACT/TWEAK serve path)
+    must outlive untouched entries under eviction pressure."""
+    cfg = _cfg(capacity=3, policy=policy)
+    rcfg = router_lib.RouterConfig(tweak_threshold=0.7, exact_threshold=0.999)
+    st_ = cache_lib.init_cache(cfg)
+    es = []
+    for i in range(3):
+        e, *rest = _rand_entry(jax.random.PRNGKey(i), cfg)
+        es.append(e / jnp.linalg.norm(e))
+        st_ = cache_lib.insert(st_, cfg, e, *rest)
+    # exact-hit entry 0 (its own embedding -> sim 1.0 -> EXACT)
+    st_, scores, idx, dec = cache_lib.lookup_and_touch(st_, cfg, rcfg,
+                                                       es[0][None])
+    assert int(dec[0]) == router_lib.EXACT
+    assert int(st_["hits"][int(idx[0, 0])]) == 1
+    # inserts under pressure: untouched entries are the victims, never the
+    # hit one (LFU ties break to the first zero-hit slot, so the second
+    # pressure insert may evict the first — at least one original goes)
+    for i in (7, 8):
+        e, *rest = _rand_entry(jax.random.PRNGKey(100 + i), cfg)
+        st_ = cache_lib.insert(st_, cfg, e, *rest)
+    s, _ = cache_lib.lookup(st_, cfg, jnp.stack(es))
+    assert float(s[0, 0]) > 0.999            # the hit entry survived
+    assert sum(float(s[i, 0]) < 0.999 for i in (1, 2)) >= 1
+
+
+def test_lookup_and_touch_miss_does_not_touch():
+    cfg = _cfg(capacity=4)
+    rcfg = router_lib.RouterConfig(tweak_threshold=0.7, exact_threshold=0.999)
+    st_ = cache_lib.init_cache(cfg)
+    e, *rest = _rand_entry(jax.random.PRNGKey(0), cfg)
+    st_ = cache_lib.insert(st_, cfg, e, *rest)
+    far = jnp.ones((1, cfg.dim)) * jnp.asarray([1, -1] * (cfg.dim // 2))
+    far = far / jnp.linalg.norm(far)
+    new, scores, idx, dec = cache_lib.lookup_and_touch(st_, cfg, rcfg, far)
+    if int(dec[0]) == router_lib.MISS:
+        np.testing.assert_array_equal(np.asarray(new["hits"]),
+                                      np.asarray(st_["hits"]))
+        np.testing.assert_array_equal(np.asarray(new["last_used"]),
+                                      np.asarray(st_["last_used"]))
+
+
+@pytest.mark.parametrize("policy", ["fifo", "lru", "lfu"])
+def test_insert_batch_matches_sequential(policy):
+    """insert_batch must be state-identical to N sequential inserts,
+    including when the batch is padded past ``count`` and laps the ring."""
+    cfg = _cfg(capacity=8, policy=policy)
+    n, padded = 12, 16  # 12 real rows (laps capacity 8), 4 padding rows
+    key = jax.random.PRNGKey(42)
+    embs = jax.random.normal(key, (padded, cfg.dim))
+    qt = jnp.arange(padded * cfg.max_query_tokens, dtype=jnp.int32).reshape(
+        padded, cfg.max_query_tokens)
+    qm = jnp.ones((padded, cfg.max_query_tokens), jnp.float32)
+    rt = qt[:, :cfg.max_response_tokens] + 7
+    rm = jnp.ones((padded, cfg.max_response_tokens), jnp.float32)
+
+    ref = cache_lib.init_cache(cfg)
+    for i in range(n):
+        ref = cache_lib.insert(ref, cfg, embs[i], qt[i], qm[i], rt[i], rm[i])
+
+    jitted = cache_lib.make_insert_batch(cfg, donate=False)
+    got, slots = jitted(cache_lib.init_cache(cfg), embs, qt, qm, rt, rm, n)
+    for k in ref:
+        np.testing.assert_array_equal(np.asarray(ref[k]), np.asarray(got[k]),
+                                      err_msg=f"{policy}:{k}")
+    slots = np.asarray(slots)
+    assert np.all(slots[:n] >= 0) and np.all(slots[n:] == -1)
+
+
+def test_insert_batch_count_clamped_to_batch():
+    """count > B must not advance ptr/clock/size past the rows written."""
+    cfg = _cfg(capacity=8)
+    b = 4
+    embs = jax.random.normal(jax.random.PRNGKey(0), (b, cfg.dim))
+    qt = jnp.zeros((b, cfg.max_query_tokens), jnp.int32)
+    qm = jnp.ones((b, cfg.max_query_tokens), jnp.float32)
+    rt = jnp.zeros((b, cfg.max_response_tokens), jnp.int32)
+    rm = jnp.ones((b, cfg.max_response_tokens), jnp.float32)
+    ref, _ = cache_lib.insert_batch(cache_lib.init_cache(cfg), cfg,
+                                    embs, qt, qm, rt, rm, b)
+    got, _ = cache_lib.insert_batch(cache_lib.init_cache(cfg), cfg,
+                                    embs, qt, qm, rt, rm, 12)
+    for k in ref:
+        np.testing.assert_array_equal(np.asarray(ref[k]), np.asarray(got[k]),
+                                      err_msg=k)
 
 
 # ------------------------------------------------------------------ router

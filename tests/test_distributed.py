@@ -21,7 +21,9 @@ _SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp
     import numpy as np
     from repro.core import cache as cache_lib
-    from repro.core.distributed import make_distributed_lookup, shard_cache_state
+    from repro.core.distributed import (make_distributed_insert_batch,
+                                        make_distributed_lookup,
+                                        shard_cache_state)
 
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     cfg = cache_lib.CacheConfig(capacity=64, dim=16, topk=4)
@@ -44,7 +46,23 @@ _SCRIPT = textwrap.dedent("""
     ds, di = lookup(sstate, q)
     ok_scores = bool(np.allclose(np.asarray(ds), np.asarray(ref_s), atol=1e-5))
     ok_idx = bool(np.array_equal(np.sort(np.asarray(di)), np.sort(np.asarray(ref_i))))
+    # sharded insert_batch vs single-device insert_batch (48 rows, 40 real)
+    B = 48
+    embs = jax.random.normal(jax.random.PRNGKey(3), (B, cfg.dim))
+    qt = jnp.ones((B, cfg.max_query_tokens), jnp.int32)
+    qm = jnp.ones((B, cfg.max_query_tokens), jnp.float32)
+    rt = jnp.ones((B, cfg.max_response_tokens), jnp.int32)
+    rm = jnp.ones((B, cfg.max_response_tokens), jnp.float32)
+    ref_state, ref_slots = cache_lib.insert_batch(
+        cache_lib.init_cache(cfg), cfg, embs, qt, qm, rt, rm, 40)
+    dib = make_distributed_insert_batch(mesh, cfg)
+    dstate, dslots = dib(shard_cache_state(cache_lib.init_cache(cfg), mesh),
+                         embs, qt, qm, rt, rm, 40)
+    ok_ins = all(np.allclose(np.asarray(ref_state[k]), np.asarray(dstate[k]),
+                             atol=1e-6) for k in ref_state)
+    ok_slots = bool(np.array_equal(np.asarray(ref_slots), np.asarray(dslots)))
     print(json.dumps({"ok_scores": ok_scores, "ok_idx": ok_idx,
+                      "ok_ins": ok_ins, "ok_slots": ok_slots,
                       "n_dev": len(jax.devices())}))
 """)
 
@@ -59,6 +77,8 @@ def test_distributed_lookup_matches_single_device():
     assert res["n_dev"] == 8
     assert res["ok_scores"], res
     assert res["ok_idx"], res
+    assert res["ok_ins"], res
+    assert res["ok_slots"], res
 
 
 _MESH_SCRIPT = textwrap.dedent("""

@@ -88,6 +88,45 @@ def test_batch_routing_split(stack):
     assert all(isinstance(r, str) for r in rs)
 
 
+def test_exact_hit_updates_eviction_bookkeeping(stack):
+    """EXACT hits must touch last_used/hits (the seed dropped them, so
+    LRU/LFU evicted the hottest entries)."""
+    eng = _engine(stack)
+    eng.handle_batch(["how do i learn piano chords"], max_new_tokens=4)
+    hits_before = np.asarray(eng.state["hits"]).copy()
+    _, meta = eng.handle_batch(["how do i learn piano chords"],
+                               max_new_tokens=4, collect_meta=True)
+    assert meta[0]["decision"] == router.EXACT
+    hits_after = np.asarray(eng.state["hits"])
+    assert hits_after.sum() == hits_before.sum() + 1
+    slot = int(np.argmax(hits_after - hits_before))
+    assert int(eng.state["last_used"][slot]) == int(eng.state["clock"]) - 1
+
+
+def test_token_accounting_counts_real_tokens(stack):
+    """big/small_tokens must count EOS-stripped generated tokens, not the
+    padded bucket length, and decoded responses must stop at EOS."""
+    eng = _engine(stack)
+    rs = eng.handle_batch(["a question about quantum computing basics"],
+                          max_new_tokens=8)
+    assert 1 <= eng.stats.big_tokens <= 8
+    assert "<eos>" not in rs[0]
+    # cached copy must carry a mask covering only the stored tokens
+    rm = np.asarray(eng.state["r_mask"])
+    row = int(np.asarray(eng.state["valid"]).nonzero()[0][0])
+    assert rm[row].sum() <= 8
+
+
+def test_populate_batched(stack):
+    eng = _engine(stack)
+    qs = [f"unique population question number {i}" for i in range(5)]
+    eng.populate(qs, [f"answer {i}" for i in range(5)])
+    assert int(eng.state["size"]) == 5
+    r, meta = eng.handle_batch([qs[3]], max_new_tokens=4, collect_meta=True)
+    assert meta[0]["decision"] == router.EXACT
+    assert r[0] == "answer 3"
+
+
 def test_gptcache_baseline_verbatim(stack):
     tok, ecfg, eparams, big, small = stack
     rcfg = tiny_reranker_config(VOCAB)

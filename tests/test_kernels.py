@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.kernels.cosine_topk.ops import cosine_topk
 from repro.kernels.cosine_topk.ref import cosine_topk_ref
