@@ -2,13 +2,16 @@
 
 PYTHONPATH_PREFIX := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench dev-deps
+.PHONY: test bench bench-scheduler dev-deps
 
 test:
 	$(PYTHONPATH_PREFIX) python -m pytest -x -q
 
 bench:
 	$(PYTHONPATH_PREFIX) python -m benchmarks.microbench
+
+bench-scheduler:
+	$(PYTHONPATH_PREFIX) python -m benchmarks.bench_scheduler
 
 dev-deps:
 	pip install -r requirements-dev.txt

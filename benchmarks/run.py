@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig89_*     cache-hit distribution + cost analysis       (paper Figs 8-9)
   microbench  per-component latencies                      (paper Table 1)
   roofline_*  dry-run roofline terms per (arch x shape)    (§Roofline)
+  scheduler   coalesced-vs-per-request + latency sweeps    (DESIGN.md §6)
 
   PYTHONPATH=src python -m benchmarks.run [--only fig2,...]
 """
@@ -17,7 +18,7 @@ import sys
 import time
 import traceback
 
-SUITES = ("fig2", "fig34567", "fig89", "microbench", "roofline")
+SUITES = ("fig2", "fig34567", "fig89", "microbench", "roofline", "scheduler")
 
 
 def main() -> None:
@@ -27,7 +28,7 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else set(SUITES)
 
-    from . import (fig2_precision_recall, fig34567_quality,
+    from . import (bench_scheduler, fig2_precision_recall, fig34567_quality,
                    fig89_cost_analysis, microbench, roofline)
     mods = {
         "fig2": fig2_precision_recall,
@@ -35,6 +36,7 @@ def main() -> None:
         "fig89": fig89_cost_analysis,
         "microbench": microbench,
         "roofline": roofline,
+        "scheduler": bench_scheduler,
     }
     print("name,us_per_call,derived")
     failures = 0

@@ -1,10 +1,12 @@
 """End-to-end serving driver: a TweakLLM deployment with REAL generation.
 
 Pretrains tiny Big/Small LMs on the synthetic corpus (big deeper than
-small), trains the embedder contrastively, then serves a batched Zipfian
-workload through the full router: misses generate with the Big LM and
-populate the cache, paraphrase hits run the Appendix-A tweak prompt
-through the Small LM, exact repeats return verbatim.
+small), trains the embedder contrastively, then replays a Zipfian arrival
+trace through the continuous-batching scheduler (DESIGN.md §6) over the
+full router: misses generate with the Big LM and populate the cache,
+paraphrase hits run the Appendix-A tweak prompt through the Small LM,
+exact repeats return verbatim, and identical in-flight requests join one
+dispatch.
 
   PYTHONPATH=src python examples/serve_e2e.py [--queries 120]
 """
@@ -21,7 +23,9 @@ from repro.core import CacheConfig, RouterConfig, TweakLLMEngine
 from repro.data import WorkloadGenerator, token_stream_batches
 from repro.models import ModelConfig, build_model
 from repro.models.embedder import init_embedder, tiny_embedder_config
-from repro.serving import GenerateConfig, Generator, SamplerConfig
+from repro.serving import (GenerateConfig, Generator, SamplerConfig,
+                           Scheduler, SchedulerConfig, SimClock,
+                           poisson_trace, replay_trace)
 from repro.tokenizer import HashWordTokenizer
 from repro.training import AdamWConfig, init_opt_state, make_train_step
 from repro.training.embedder_train import train_embedder
@@ -79,18 +83,25 @@ def main():
         router_cfg=RouterConfig(tweak_threshold=0.7))
 
     wl = WorkloadGenerator(profile="lmsys", seed=0)
-    print(f"serving {args.queries} queries in batches of {args.batch}...")
+    texts = [q.text for q in wl.sample(args.queries)]
+    trace = poisson_trace(texts, rate=100.0, seed=0)
+    sched = Scheduler(
+        eng, SchedulerConfig(max_wait=0.1, max_batch=args.batch,
+                             max_new_tokens=12),
+        clock=SimClock())
+    print(f"replaying {args.queries} arrivals through the scheduler "
+          f"(max_batch={args.batch})...")
     t0 = time.time()
-    n = 0
-    while n < args.queries:
-        qs = [q.text for q in wl.sample(min(args.batch, args.queries - n))]
-        responses = eng.handle_batch(qs, max_new_tokens=12)
-        n += len(qs)
+    done = replay_trace(sched, trace)
     dt = time.time() - t0
+    assert len(done) == len(texts) - sched.stats.rejected
 
-    s = eng.stats
+    s, ss = eng.stats, sched.stats
     print(f"\n== serving report ==")
-    print(f"queries {s.total} in {dt:.1f}s ({dt/s.total*1e3:.0f} ms/q CPU)")
+    print(f"requests {ss.completed} in {dt:.1f}s "
+          f"({dt/max(ss.completed,1)*1e3:.0f} ms/req wall CPU)")
+    print(f"scheduler: batches={ss.batches} mean_batch={ss.mean_batch:.1f} "
+          f"dedup_joined={ss.joined}")
     print(f"routing: miss={s.miss} tweak={s.tweak} exact={s.exact} "
           f"(hit rate {s.hit_rate:.1%})")
     print(f"generated tokens: big={s.big_tokens} small={s.small_tokens}")

@@ -3,5 +3,5 @@ from . import cache, router, tweak
 from .cache import (CacheConfig, init_cache, insert, insert_batch,
                     make_insert_batch, lookup, lookup_and_touch, fetch)
 from .router import RouterConfig, route, band_of, MISS, TWEAK, EXACT
-from .engine import TweakLLMEngine, EngineStats
+from .engine import TweakLLMEngine, EngineStats, BatchResult
 from .baseline import GPTCacheBaseline, BaselineConfig

@@ -30,7 +30,8 @@ import numpy as np
 
 from repro.models.embedder import encode as embed_encode
 from repro.models.model import Model
-from repro.serving.batcher import bucket_batch, pad_to_buckets
+from repro.serving.batcher import (bucket_batch, bucket_len, floor_len_bucket,
+                                   pad_to_buckets)
 from repro.serving.generate import GenerateConfig, Generator
 from repro.tokenizer import HashWordTokenizer
 
@@ -63,6 +64,22 @@ class EngineStats:
     @property
     def hit_rate(self) -> float:
         return (self.tweak + self.exact) / max(self.total, 1)
+
+
+@dataclasses.dataclass
+class BatchResult:
+    """Per-batch serve result with per-request metadata.
+
+    The continuous-batching scheduler (serving/scheduler.py, DESIGN.md §6)
+    consumes this instead of the bare response list: ``meta`` rows carry
+    the routing decision, top-1 similarity, similarity band, and the REAL
+    generated-token count for each request, and the token deltas let the
+    caller attribute cost to a dispatch without diffing ``EngineStats``.
+    """
+    responses: List[str]
+    meta: List[dict]            # per row: sim, decision, band, gen_tokens
+    big_tokens: int = 0         # tokens the Big LLM generated for this batch
+    small_tokens: int = 0      # tokens the Small LLM generated for this batch
 
 
 class TweakLLMEngine:
@@ -106,8 +123,22 @@ class TweakLLMEngine:
     # ------------------------------------------------------------- serve
     def handle_batch(self, queries: List[str], *, max_new_tokens: int = 32,
                      collect_meta: bool = False):
+        res = self.handle_batch_result(queries, max_new_tokens=max_new_tokens)
+        if collect_meta:
+            return res.responses, res.meta
+        return res.responses
+
+    def handle_batch_result(self, queries: List[str], *,
+                            max_new_tokens: int = 32) -> BatchResult:
+        """Serve a batch and return responses plus per-request metadata."""
         queries = [tweak_lib.preprocess_query(q) for q in queries]
         n = len(queries)
+        if n == 0:
+            return BatchResult([], [])
+        # fail fast on an unservable max_new_tokens BEFORE any state
+        # mutation (lookup touches recency on device; EXACT rows bill
+        # stats) so a ValueError cannot leave half-served accounting
+        self._tweak_encode_len(max_new_tokens)
         embs = self.embed_texts(queries)
         self.state, scores, idxs, dec = self._lookup_touch(self.state, embs)
         top1 = np.asarray(scores[:, 0])
@@ -115,11 +146,7 @@ class TweakLLMEngine:
         decisions = np.asarray(dec)
 
         responses: List[Optional[str]] = [None] * n
-        meta = None
-        if collect_meta:
-            bands = np.asarray(router_lib.band_of(jnp.asarray(top1)))
-            meta = [{"sim": float(top1[i]), "decision": int(decisions[i]),
-                     "band": int(bands[i])} for i in range(n)]
+        gen_tokens = [0] * n
 
         # EXACT: verbatim cached response
         for i in np.nonzero(decisions == router_lib.EXACT)[0]:
@@ -131,16 +158,29 @@ class TweakLLMEngine:
         tweak_ids = np.nonzero(decisions == router_lib.TWEAK)[0]
         if len(tweak_ids):
             self._run_tweak(queries, tweak_ids, top1_idx, responses,
-                            max_new_tokens)
+                            max_new_tokens, gen_tokens)
         # MISS: big LLM generates from scratch + cache insert
         miss_ids = np.nonzero(decisions == router_lib.MISS)[0]
         if len(miss_ids):
-            self._run_miss(queries, miss_ids, embs, responses, max_new_tokens)
+            self._run_miss(queries, miss_ids, embs, responses,
+                           max_new_tokens, gen_tokens)
 
         self.stats.total += n
-        if collect_meta:
-            return responses, meta
-        return responses
+        # band_of mirrored on host: top1 is already here, so no extra
+        # device dispatch + sync per serve batch just for meta
+        bands = np.full(n, -1, np.int32)
+        for bi, (lo, hi) in enumerate(router_lib.BANDS):
+            bands[(top1 >= lo) & (top1 < hi)] = bi
+        meta = [{"sim": float(top1[i]), "decision": int(decisions[i]),
+                 "band": int(bands[i]), "gen_tokens": gen_tokens[i]}
+                for i in range(n)]
+        miss_mask = decisions == router_lib.MISS
+        return BatchResult(
+            responses, meta,
+            big_tokens=int(sum(t for i, t in enumerate(gen_tokens)
+                               if miss_mask[i])),
+            small_tokens=int(sum(t for i, t in enumerate(gen_tokens)
+                                 if not miss_mask[i])))
 
     # ------------------------------------------------------------- paths
     def _decode_cached(self, slot: int) -> str:
@@ -162,13 +202,40 @@ class TweakLLMEngine:
             return ids[:p], p + 1
         return ids, len(ids)
 
-    def _run_tweak(self, queries, ids, top1_idx, responses, max_new_tokens):
+    def _tweak_encode_len(self, max_new_tokens: int) -> int:
+        """Prompt-token budget for the tweak path, bucket-rounding-safe.
+
+        The naive budget ``max_seq_len - max_new_tokens - 1`` goes
+        non-positive when ``max_new_tokens + 1 >= max_seq_len``, and even a
+        positive budget can be rounded back past ``max_seq_len`` by
+        ``pad_to_buckets`` (length buckets round UP).  Clamp to the largest
+        length bucket that still fits; raise when nothing fits.
+        """
+        msl = self.small.model.cfg.max_seq_len
+        budget = msl - max_new_tokens - 1
+        if budget < 1:
+            raise ValueError(
+                f"max_new_tokens={max_new_tokens} leaves no room for the "
+                f"tweak prompt: small model max_seq_len={msl} requires "
+                f"max_new_tokens <= {msl - 2}")
+        if bucket_len(budget) + max_new_tokens + 1 <= msl:
+            return budget
+        clamped = floor_len_bucket(budget)
+        if bucket_len(clamped) + max_new_tokens + 1 > msl:
+            raise ValueError(
+                f"max_new_tokens={max_new_tokens} leaves no length bucket "
+                f"for the tweak prompt within small model "
+                f"max_seq_len={msl} (smallest bucket rounds past it)")
+        return clamped
+
+    def _run_tweak(self, queries, ids, top1_idx, responses, max_new_tokens,
+                   gen_tokens):
         slots = [int(top1_idx[i]) for i in ids]
         cached = [self._text_store.get(s, ("", "")) for s in slots]
         texts = [tweak_lib.build_tweak_text(queries[i], cq, cr)
                  for i, (cq, cr) in zip(ids, cached)]
         toks, mask = self.tok.encode_batch(
-            texts, self.small.model.cfg.max_seq_len - max_new_tokens - 1)
+            texts, self._tweak_encode_len(max_new_tokens))
         toks, mask, b = pad_to_buckets(toks, mask)
         out = self.small.generate({"tokens": jnp.asarray(toks)},
                                   max_new_tokens=max_new_tokens)[:b]
@@ -177,6 +244,7 @@ class TweakLLMEngine:
             responses[i] = self.tok.decode_ids(visible)
             self.stats.small_tokens += n_gen
             self.stats.tweak += 1
+            gen_tokens[i] = n_gen
 
     def _insert_entries(self, texts, resp_tokens, resp_texts, embs):
         """Commit entries to the cache in ONE jitted device call.
@@ -207,7 +275,8 @@ class TweakLLMEngine:
         for j in range(n):
             self._text_store[int(slots[j])] = (texts[j], resp_texts[j])
 
-    def _run_miss(self, queries, ids, embs, responses, max_new_tokens):
+    def _run_miss(self, queries, ids, embs, responses, max_new_tokens,
+                  gen_tokens):
         texts = [queries[i] for i in ids]
         toks, mask = self.tok.encode_batch(texts, self.max_query_len)
         toks, mask, b = pad_to_buckets(toks, mask)
@@ -222,12 +291,18 @@ class TweakLLMEngine:
             resp_texts.append(resp_text)
             self.stats.big_tokens += n_gen
             self.stats.miss += 1
+            gen_tokens[i] = n_gen
         self._insert_entries(texts, resp_tokens, resp_texts,
                              embs[np.asarray(ids)])
 
     # ------------------------------------------------- offline population
     def populate(self, queries: List[str], responses: List[str]):
         """Bulk-insert known (query, response) pairs (dataset simulation)."""
+        if len(queries) != len(responses):
+            raise ValueError(f"populate got {len(queries)} queries but "
+                             f"{len(responses)} responses")
+        if not queries:
+            return
         queries = [tweak_lib.preprocess_query(q) for q in queries]
         embs = self.embed_texts(queries)
         rt, rm = self.tok.encode_batch(responses, self.cache_cfg.max_response_tokens,

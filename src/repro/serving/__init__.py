@@ -1,3 +1,6 @@
 from .sampler import SamplerConfig, sample
 from .generate import GenerateConfig, Generator
-from .batcher import pad_to_buckets, bucket_batch, bucket_len
+from .batcher import pad_to_buckets, bucket_batch, bucket_len, floor_len_bucket
+from .scheduler import (Clock, SimClock, WallClock, QueueFull, Request,
+                        Scheduler, SchedulerConfig, SchedulerStats,
+                        poisson_trace, replay_trace)

@@ -30,6 +30,25 @@ def bucket_len(n: int) -> int:
     return ((n + LEN_BUCKETS[-1] - 1) // LEN_BUCKETS[-1]) * LEN_BUCKETS[-1]
 
 
+def floor_len_bucket(n: int) -> int:
+    """Largest length bucket <= n (n itself below the smallest bucket).
+
+    Clamping an encode budget to this guarantees ``pad_to_buckets`` cannot
+    round the row length back ABOVE the budget — buckets are fixed points
+    of ``bucket_len``.  Callers with n below the smallest bucket must
+    bound-check ``bucket_len(n)`` themselves.
+    """
+    if n < LEN_BUCKETS[0]:
+        return n
+    if n >= LEN_BUCKETS[-1]:
+        return (n // LEN_BUCKETS[-1]) * LEN_BUCKETS[-1]
+    best = LEN_BUCKETS[0]
+    for b in LEN_BUCKETS:
+        if b <= n:
+            best = b
+    return best
+
+
 def pad_to_buckets(tokens: np.ndarray, mask: np.ndarray,
                    pad_id: int = 0) -> Tuple[np.ndarray, np.ndarray, int]:
     """Pad (B, L) token/mask arrays up to bucket sizes.  Returns real B."""

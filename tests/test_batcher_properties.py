@@ -1,0 +1,85 @@
+"""Property tests for serving/batcher.py bucket math and padding.
+
+Hypothesis-driven where available (skip cleanly otherwise via
+``_hypothesis_shim``); the deterministic cases below cover the same
+invariants at fixed points so tier-1 always exercises them.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_shim import given, settings, st
+from repro.serving.batcher import (BATCH_BUCKETS, LEN_BUCKETS, bucket_batch,
+                                   bucket_len, floor_len_bucket,
+                                   pad_to_buckets)
+
+
+# ----------------------------------------------------- deterministic
+def test_bucket_fixed_points():
+    for b in BATCH_BUCKETS:
+        assert bucket_batch(b) == b
+    for l in LEN_BUCKETS:
+        assert bucket_len(l) == l
+        assert floor_len_bucket(l) == l
+
+
+def test_bucket_rounding_direction():
+    assert bucket_batch(3) == 4 and bucket_batch(65) == 128
+    assert bucket_len(17) == 32 and bucket_len(1025) == 2048
+    assert floor_len_bucket(17) == 16 and floor_len_bucket(1025) == 1024
+    assert floor_len_bucket(7) == 7      # below smallest bucket: identity
+
+
+def test_pad_to_buckets_round_trip_fixed():
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, 100, size=(3, 17)).astype(np.int32)
+    mask = (rng.random((3, 17)) > 0.3).astype(np.float32)
+    out_t, out_m, b = pad_to_buckets(toks, mask)
+    assert b == 3
+    assert out_t.shape == (4, 32) and out_m.shape == (4, 32)
+    np.testing.assert_array_equal(out_t[:3, :17], toks)
+    np.testing.assert_array_equal(out_m[:3, :17], mask)
+    assert (out_m[:3, 17:] == 0).all()        # real rows: tail mask is zero
+    np.testing.assert_array_equal(out_t[3], out_t[0])   # pad rows copy row 0
+
+
+# -------------------------------------------------------- properties
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=0, max_value=5000),
+       st.integers(min_value=0, max_value=5000))
+def test_bucket_functions_monotone(m, n):
+    lo, hi = sorted((m, n))
+    assert bucket_batch(lo) <= bucket_batch(hi)
+    assert bucket_len(lo) <= bucket_len(hi)
+    assert floor_len_bucket(lo) <= floor_len_bucket(hi)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=0, max_value=5000))
+def test_bucket_functions_idempotent_and_bounding(n):
+    assert bucket_batch(bucket_batch(n)) == bucket_batch(n)
+    assert bucket_len(bucket_len(n)) == bucket_len(n)
+    assert bucket_batch(n) >= n and bucket_len(n) >= n
+    f = floor_len_bucket(n)
+    assert f <= n
+    assert floor_len_bucket(f) == f
+    if n >= LEN_BUCKETS[0]:
+        # the clamp engine paths rely on: floor buckets never round back up
+        assert bucket_len(f) == f
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=70),
+       st.integers(min_value=1, max_value=1030),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_pad_to_buckets_round_trips_real_rows(b, l, seed):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, 4096, size=(b, l)).astype(np.int32)
+    mask = (rng.random((b, l)) > 0.5).astype(np.float32)
+    out_t, out_m, rb = pad_to_buckets(toks, mask)
+    assert rb == b
+    assert out_t.shape == (bucket_batch(b), bucket_len(l))
+    assert out_m.shape == out_t.shape
+    np.testing.assert_array_equal(out_t[:b, :l], toks)
+    np.testing.assert_array_equal(out_m[:b, :l], mask)
+    assert (out_m[:b, l:] == 0).all()
+    assert out_m.dtype == mask.dtype and out_t.dtype == toks.dtype

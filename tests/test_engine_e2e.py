@@ -127,6 +127,70 @@ def test_populate_batched(stack):
     assert r[0] == "answer 3"
 
 
+def test_empty_batch_is_a_noop(stack):
+    """handle_batch([]) / populate([], []) must not crash (regression:
+    the seed padded/embedded an n=0 batch)."""
+    eng = _engine(stack)
+    assert eng.handle_batch([]) == []
+    rs, meta = eng.handle_batch([], collect_meta=True)
+    assert rs == [] and meta == []
+    eng.populate([], [])
+    assert eng.stats.total == 0
+    assert int(eng.state["size"]) == 0
+    # engine still works after the no-ops
+    assert len(eng.handle_batch(["a real query after empties"],
+                                max_new_tokens=4)) == 1
+
+
+def test_populate_length_mismatch_raises(stack):
+    eng = _engine(stack)
+    with pytest.raises(ValueError, match="populate"):
+        eng.populate(["one query"], [])
+
+
+def test_tweak_rejects_oversized_max_new_tokens(stack):
+    """Regression: max_new_tokens + 1 >= small max_seq_len used to send a
+    non-positive encode length into the tokenizer."""
+    eng = _engine(stack, tweak_threshold=-1.0)   # force the TWEAK path
+    eng.populate(["a seeded question about sailing"], ["a cached answer"])
+    msl = eng.small.model.cfg.max_seq_len
+    stats_before = (eng.stats.total, eng.stats.exact, eng.stats.tweak)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.handle_batch(["anything routes to tweak now"],
+                         max_new_tokens=msl + 88)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        # positive budget, but even the smallest length bucket overflows
+        eng.handle_batch(["still routes to tweak"], max_new_tokens=msl - 12)
+    # validation happens BEFORE lookup/serve: nothing was billed
+    assert (eng.stats.total, eng.stats.exact, eng.stats.tweak) == stats_before
+
+
+def test_tweak_encode_len_clamps_to_fitting_bucket(stack):
+    eng = _engine(stack)
+    msl = eng.small.model.cfg.max_seq_len          # 512 in this stack
+    # naive budget 507 would bucket-round to 512 and overflow; clamp picks
+    # the largest bucket that still fits alongside generation
+    clamped = eng._tweak_encode_len(4)
+    assert clamped + 4 + 1 <= msl
+    from repro.serving.batcher import bucket_len
+    assert bucket_len(clamped) == clamped          # a true bucket: no re-round
+
+
+def test_handle_batch_result_metadata(stack):
+    eng = _engine(stack)
+    res = eng.handle_batch_result(
+        ["metadata question alpha", "metadata question alpha"],
+        max_new_tokens=4)
+    assert len(res.responses) == 2 and len(res.meta) == 2
+    assert {m["decision"] for m in res.meta} <= {router.MISS, router.TWEAK,
+                                                 router.EXACT}
+    assert all(set(m) == {"sim", "decision", "band", "gen_tokens"}
+               for m in res.meta)
+    assert res.big_tokens + res.small_tokens == \
+        sum(m["gen_tokens"] for m in res.meta)
+    assert res.big_tokens == eng.stats.big_tokens
+
+
 def test_gptcache_baseline_verbatim(stack):
     tok, ecfg, eparams, big, small = stack
     rcfg = tiny_reranker_config(VOCAB)
