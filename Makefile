@@ -2,7 +2,7 @@
 
 PYTHONPATH_PREFIX := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench bench-scheduler dev-deps
+.PHONY: test bench bench-scheduler bench-index bench-smoke bench-baseline dev-deps lint
 
 test:
 	$(PYTHONPATH_PREFIX) python -m pytest -x -q
@@ -12,6 +12,23 @@ bench:
 
 bench-scheduler:
 	$(PYTHONPATH_PREFIX) python -m benchmarks.bench_scheduler
+
+# full IVF-vs-flat sweep; emits the repo-standard trajectory file
+bench-index:
+	$(PYTHONPATH_PREFIX) python -m benchmarks.run --only index --json BENCH_index.json
+
+# the CI perf gate, runnable locally: scaled-down suites + regression check
+bench-smoke:
+	$(PYTHONPATH_PREFIX) python -m benchmarks.run --smoke --json BENCH_ci.json
+	$(PYTHONPATH_PREFIX) python -m benchmarks.check_regression BENCH_ci.json BENCH_baseline.json
+
+# refresh the checked-in gate baseline (commit the result with the PR
+# that legitimately moves a gated metric)
+bench-baseline:
+	$(PYTHONPATH_PREFIX) python -m benchmarks.run --smoke --json BENCH_baseline.json
+
+lint:
+	ruff check .
 
 dev-deps:
 	pip install -r requirements-dev.txt

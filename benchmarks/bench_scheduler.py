@@ -75,8 +75,8 @@ def bench_coalescing(n: int = 96, batches=(8, 16)):
         assert len(done) == n and sched.stats.batches == -(-n // b)
         qps = n / dt
         csv_row(f"sched_coalesced_b{b}", dt / n * 1e6,
-                f"qps={qps:.1f};speedup={qps / qps_solo:.2f}x;"
-                f"batches={sched.stats.batches}")
+                f"qps={qps:.1f};batches={sched.stats.batches}",
+                speedup=round(qps / qps_solo, 2))
 
 
 class _ModeledEngine:
@@ -140,7 +140,12 @@ def bench_latency_sweep(n: int = 1500, load_factors=(0.25, 0.5, 1.0, 2.0),
                 f"util={ss.busy_time / max(done[-1].finish, 1e-9):.2f}")
 
 
-def main():
+def main(smoke: bool = False):
+    if smoke:
+        # CI perf-gate subset: coalescing speedup only (the machine-
+        # independent ratio); the calibrated latency sweep is study-only
+        bench_coalescing(n=64, batches=(8,))
+        return
     bench_coalescing()
     bench_latency_sweep()
 

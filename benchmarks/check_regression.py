@@ -1,0 +1,113 @@
+"""CI perf gate: compare a fresh BENCH json against a checked-in baseline.
+
+  PYTHONPATH=src python -m benchmarks.check_regression \
+      BENCH_ci.json BENCH_baseline.json [--tol 0.25] [--strict-latency]
+
+Policy (why two classes of metric):
+
+* **Gated** — quality fields (``recall``, ``band_agree``,
+  ``decision_agree``) transfer exactly across machines and FAIL the job
+  when they drop more than ``--tol`` (default 25%) below baseline;
+  ``speedup`` ratios transfer approximately (cache-hierarchy differences
+  leak into gather-vs-GEMM ratios) and fail at double the tolerance —
+  wide enough to absorb runner heterogeneity, tight enough to catch a
+  real collapse.  A baseline metric missing from the fresh run also
+  fails — the bench silently not running is itself a regression.
+* **Latency** (``us_per_call``) — absolute wall time does NOT transfer
+  across machines (a cold CI runner is easily 3x a dev box), so raw
+  latencies only WARN by default; ``--strict-latency`` upgrades them to
+  failures for same-machine A/B comparisons.
+
+New metrics in the fresh run (not in the baseline) are reported and
+ignored, so adding a bench doesn't require touching the gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# NOTE: deliberately no absolute-throughput keys (qps) — like raw
+# latency, absolute throughput does not transfer across runners.
+# Quality keys (recall/agreement) transfer exactly and get the base
+# tolerance; speedup RATIOS transfer approximately (numerator and
+# denominator scale with the machine, but cache-hierarchy differences
+# leak in), so they get double the tolerance to keep the gate from
+# flaking on runner heterogeneity while still catching real collapses.
+QUALITY_KEYS = ("recall", "band_agree", "decision_agree")
+RATIO_KEYS = ("speedup",)
+LATENCY_KEYS = ("us_per_call",)
+
+
+def _numeric(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def compare(new: dict, base: dict, tol: float, strict_latency: bool):
+    """Returns (failures, warnings, notes) as lists of report lines."""
+    failures, warnings, notes = [], [], []
+    new_m = new.get("metrics", {})
+    base_m = base.get("metrics", {})
+    for name, bvals in sorted(base_m.items()):
+        nvals = new_m.get(name)
+        if nvals is None:
+            failures.append(f"{name}: metric missing from fresh run")
+            continue
+        for key, bv in bvals.items():
+            if not _numeric(bv):
+                continue
+            nv = nvals.get(key)
+            if not _numeric(nv):
+                failures.append(f"{name}.{key}: missing from fresh run")
+                continue
+            if key in QUALITY_KEYS or key in RATIO_KEYS:
+                ktol = tol if key in QUALITY_KEYS else min(2 * tol, 0.9)
+                floor = bv * (1 - ktol)
+                line = (f"{name}.{key}: {nv:g} vs baseline {bv:g} "
+                        f"(floor {floor:g})")
+                if nv < floor:
+                    failures.append("REGRESSION " + line)
+                else:
+                    notes.append("ok " + line)
+            elif key in LATENCY_KEYS:
+                ceil = bv * (1 + tol)
+                line = (f"{name}.{key}: {nv:g}us vs baseline {bv:g}us "
+                        f"(ceil {ceil:g}us)")
+                if nv > ceil:
+                    (failures if strict_latency else warnings).append(
+                        "SLOWER " + line)
+                else:
+                    notes.append("ok " + line)
+    for name in sorted(set(new_m) - set(base_m)):
+        notes.append(f"new metric (not gated): {name}")
+    return failures, warnings, notes
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new", help="fresh BENCH json (e.g. BENCH_ci.json)")
+    ap.add_argument("baseline", help="checked-in BENCH_baseline.json")
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="allowed fractional regression (default 0.25)")
+    ap.add_argument("--strict-latency", action="store_true",
+                    help="gate raw us_per_call too (same-machine A/B only)")
+    args = ap.parse_args()
+    with open(args.new) as f:
+        new = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    failures, warnings, notes = compare(new, base, args.tol,
+                                        args.strict_latency)
+    for line in notes:
+        print("  " + line)
+    for line in warnings:
+        print("WARN  " + line)
+    for line in failures:
+        print("FAIL  " + line)
+    print(f"# {len(failures)} failures, {len(warnings)} warnings, "
+          f"{len(notes)} ok")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,7 +12,6 @@ import time
 from typing import Callable
 
 import jax
-import numpy as np
 
 from repro.models.embedder import init_embedder, tiny_embedder_config
 from repro.models import ModelConfig, build_model
@@ -77,5 +76,17 @@ def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def csv_row(name: str, us: float, derived: str):
+# registry of every metric emitted this process: run.py --json dumps it
+# in the repo-standard BENCH_*.json format and check_regression.py gates
+# CI on it.  Extra keyword metrics (speedup=..., recall=...) are the
+# machine-independent values the CI perf gate compares.
+RESULTS: dict = {}
+
+
+def csv_row(name: str, us: float, derived: str = "", **metrics):
+    RESULTS[name] = {"us_per_call": round(us, 2), "derived": derived}
+    RESULTS[name].update(metrics)
+    if metrics:
+        extra = ";".join(f"{k}={v}" for k, v in metrics.items())
+        derived = f"{derived};{extra}" if derived else extra
     print(f"{name},{us:.1f},{derived}")

@@ -14,7 +14,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data import QuestionPairGenerator
-from repro.eval import pr_curve
 from repro.models.embedder import encode as embed_encode
 from .common import csv_row, get_tokenizer, get_trained_embedder
 

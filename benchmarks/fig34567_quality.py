@@ -20,9 +20,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.router import BANDS, band_of
-from repro.core.tweak import build_tweak_text
-from repro.data import QuestionPairGenerator, WorkloadGenerator, synthesize_response
+from repro.core.router import band_of
+from repro.data import QuestionPairGenerator, synthesize_response
 from repro.eval import debate_batch, make_loglik_scorer, PERSONAS, persona_score
 from repro.eval.debate import verdict_shares
 from repro.models.embedder import encode as embed_encode

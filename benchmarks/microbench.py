@@ -9,7 +9,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import cache as cache_lib
 from repro.core.router import RouterConfig, route
@@ -30,7 +29,8 @@ def bench_lookup(capacity=16384, dim=384, batch=8, k=4):
         jax.block_until_ready(f(q, db))
     us = (time.perf_counter() - t0) / 10 * 1e6
     mb = capacity * dim * 4 / 2 ** 20
-    csv_row("lookup_xla_16k", us, f"scan={mb:.0f}MiB;batch={batch};k={k}")
+    csv_row(f"lookup_xla_{capacity // 1024}k", us,
+            f"scan={mb:.0f}MiB;batch={batch};k={k}")
 
 
 def bench_lookup_pallas_interpret(capacity=2048, dim=384, batch=4, k=4):
@@ -130,10 +130,20 @@ def bench_insert_batch(capacities=(4096, 16384, 65536), batch=64, dim=384,
 
         ratio = us_seq / max(us_bat, 1e-9)
         csv_row(f"insert_batch_{cap}", us_bat,
-                f"seq_us={us_seq:.0f};batch={batch};speedup={ratio:.1f}x")
+                f"seq_us={us_seq:.0f};batch={batch}",
+                speedup=round(ratio, 1))
 
 
-def main():
+def main(smoke: bool = False):
+    if smoke:
+        # CI perf-gate subset: skip the trained-embedder bench (slow model
+        # training dominates) and keep one insert_batch capacity
+        bench_lookup(capacity=8192)
+        bench_lookup_pallas_interpret()
+        bench_route()
+        bench_insert()
+        bench_insert_batch(capacities=(4096,), reps=3)
+        return
     bench_lookup()
     bench_lookup_pallas_interpret()
     bench_embed()

@@ -8,28 +8,66 @@ Prints ``name,us_per_call,derived`` CSV rows:
   microbench  per-component latencies                      (paper Table 1)
   roofline_*  dry-run roofline terms per (arch x shape)    (§Roofline)
   scheduler   coalesced-vs-per-request + latency sweeps    (DESIGN.md §6)
+  index       clustered (IVF) vs flat cache lookup         (DESIGN.md §7)
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig2,...]
+  PYTHONPATH=src python -m benchmarks.run [--only fig2,...] \
+      [--smoke] [--json BENCH_ci.json]
+
+``--smoke`` runs the scaled-down CI subset (index/scheduler/microbench)
+— the perf-gate job in .github/workflows/ci.yml.  ``--json`` dumps every
+emitted metric in the repo-standard BENCH_*.json format that
+``benchmarks.check_regression`` compares against a checked-in baseline.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
+import platform
 import sys
 import time
 import traceback
 
-SUITES = ("fig2", "fig34567", "fig89", "microbench", "roofline", "scheduler")
+SUITES = ("fig2", "fig34567", "fig89", "microbench", "roofline", "scheduler",
+          "index")
+SMOKE_SUITES = ("microbench", "index", "scheduler")
+SCHEMA = "tweakllm-bench/v1"
+
+
+def write_json(path: str, suites, smoke: bool) -> None:
+    import jax
+    from .common import RESULTS
+    doc = {
+        "schema": SCHEMA,
+        "created_unix": int(time.time()),
+        "smoke": smoke,
+        "suites": list(suites),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "python": platform.python_version(),
+        "metrics": RESULTS,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {len(RESULTS)} metrics to {path}", flush=True)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(SUITES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="scaled-down CI subset (index/scheduler/microbench)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="dump all emitted metrics as BENCH json")
     args, _ = ap.parse_known_args()
-    only = set(args.only.split(",")) if args.only else set(SUITES)
+    default = SMOKE_SUITES if args.smoke else SUITES
+    only = tuple(args.only.split(",")) if args.only else default
 
-    from . import (bench_scheduler, fig2_precision_recall, fig34567_quality,
-                   fig89_cost_analysis, microbench, roofline)
+    from . import (bench_index, bench_scheduler, fig2_precision_recall,
+                   fig34567_quality, fig89_cost_analysis, microbench,
+                   roofline)
     mods = {
         "fig2": fig2_precision_recall,
         "fig34567": fig34567_quality,
@@ -37,6 +75,7 @@ def main() -> None:
         "microbench": microbench,
         "roofline": roofline,
         "scheduler": bench_scheduler,
+        "index": bench_index,
     }
     print("name,us_per_call,derived")
     failures = 0
@@ -46,11 +85,17 @@ def main() -> None:
         t0 = time.time()
         print(f"# === {name} ===", flush=True)
         try:
-            mods[name].main()
+            fn = mods[name].main
+            if "smoke" in inspect.signature(fn).parameters:
+                fn(smoke=args.smoke)
+            else:
+                fn()
         except Exception:
             failures += 1
             print(f"{name}_FAILED,0.0,{traceback.format_exc(limit=2)!r}")
         print(f"# {name} took {time.time()-t0:.1f}s", flush=True)
+    if args.json:
+        write_json(args.json, only, args.smoke)
     if failures:
         sys.exit(1)
 

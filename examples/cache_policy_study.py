@@ -7,7 +7,8 @@ eviction policies.
 
   PYTHONPATH=src python examples/cache_policy_study.py
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax

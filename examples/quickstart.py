@@ -2,7 +2,8 @@
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.launch.serve import build_engine

@@ -10,7 +10,8 @@ dispatch.
 
   PYTHONPATH=src python examples/serve_e2e.py [--queries 120]
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse

@@ -1,7 +1,8 @@
 # TweakLLM core: semantic cache + threshold router + tweak engine.
-from . import cache, router, tweak
+from . import cache, index, router, tweak
 from .cache import (CacheConfig, init_cache, insert, insert_batch,
                     make_insert_batch, lookup, lookup_and_touch, fetch)
+from .index import build_index, maybe_reindex
 from .router import RouterConfig, route, band_of, MISS, TWEAK, EXACT
 from .engine import TweakLLMEngine, EngineStats, BatchResult
 from .baseline import GPTCacheBaseline, BaselineConfig

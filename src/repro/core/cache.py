@@ -19,16 +19,17 @@ batch costs one host↔device round-trip instead of one per entry.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.cosine_topk.ops import cosine_topk
 
+from . import index as index_lib
 from . import router as router_lib
 
 POLICIES = ("fifo", "lru", "lfu")
+INDEXES = ("flat", "ivf")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,11 +42,20 @@ class CacheConfig:
     topk: int = 4
     lookup_impl: str = "xla"  # xla | pallas
     block_n: int = 1024
+    # clustered (IVF) index — DESIGN.md §7.  0 = auto-resolve from capacity
+    # (see index.resolve): nclusters ~ capacity/128 (capped 2048), bucket
+    # = ceil(capacity/nclusters) with 2x slack.
+    index: str = "flat"       # flat | ivf
+    nclusters: int = 0
+    nprobe: int = 8
+    ivf_bucket: int = 0
+    reindex_every: int = 0    # writes between k-means rebuilds (0 = auto)
+    kmeans_iters: int = 10
 
 
 def init_cache(cfg: CacheConfig):
     c = cfg.capacity
-    return {
+    state = {
         "emb": jnp.zeros((c, cfg.dim), jnp.float32),
         "q_tokens": jnp.zeros((c, cfg.max_query_tokens), jnp.int32),
         "q_mask": jnp.zeros((c, cfg.max_query_tokens), jnp.float32),
@@ -58,6 +68,9 @@ def init_cache(cfg: CacheConfig):
         "clock": jnp.zeros((), jnp.int32),
         "size": jnp.zeros((), jnp.int32),
     }
+    if cfg.index == "ivf":
+        state.update(index_lib.init_ivf(cfg))
+    return state
 
 
 def _victim_slot(state, cfg: CacheConfig):
@@ -106,6 +119,10 @@ def insert(state, cfg: CacheConfig, emb, q_tokens, q_mask, r_tokens, r_mask):
     new["ptr"] = state["ptr"] + 1
     new["clock"] = state["clock"] + 1
     new["size"] = jnp.minimum(state["size"] + 1, cfg.capacity)
+    if cfg.index == "ivf":
+        new.update(index_lib.append_one(
+            {k: new[k] for k in index_lib.IVF_KEYS}, emb,
+            slot.astype(jnp.int32), jnp.asarray(True)))
     return new
 
 
@@ -153,10 +170,20 @@ def insert_batch(state, cfg: CacheConfig, embs, q_tokens, q_mask,
         new["ptr"] = state["ptr"] + count
         new["clock"] = state["clock"] + count
         new["size"] = jnp.minimum(state["size"] + count, cfg.capacity)
+        if cfg.index == "ivf":
+            # lapped duplicates (keep=False) were dropped from the buffers,
+            # so they must not be filed in the member table either
+            new = index_lib.update_batch(new, cfg, embs,
+                                         jnp.where(keep, slots, -1))
         return new, jnp.where(active, slots, -1)
 
+    # nearest-centroid routing hoisted to one (B, nclusters) GEMM; only
+    # the table filing itself needs to stay sequential in the scan
+    cn = index_lib.nearest_clusters(state["ivf_centroids"], embs) \
+        if cfg.index == "ivf" else jnp.zeros((b,), jnp.int32)
+
     def step(carry, x):
-        emb_i, qt_i, qm_i, rt_i, rm_i, on = x
+        emb_i, qt_i, qm_i, rt_i, rm_i, on, cn_i = x
         slot = _victim_slot(carry, cfg)
         w = jnp.where(on, slot, cfg.capacity)  # OOB -> dropped when padding
         upd = lambda buf, val: buf.at[w].set(val.astype(buf.dtype), mode="drop")
@@ -174,11 +201,15 @@ def insert_batch(state, cfg: CacheConfig, embs, q_tokens, q_mask,
         new["ptr"] = carry["ptr"] + inc
         new["clock"] = carry["clock"] + inc
         new["size"] = jnp.minimum(carry["size"] + inc, cfg.capacity)
+        if cfg.index == "ivf":
+            new.update(index_lib.file_row(
+                {k: new[k] for k in index_lib.IVF_KEYS}, cn_i,
+                slot.astype(jnp.int32), on))
         return new, jnp.where(on, slot, -1)
 
     return jax.lax.scan(
         step, dict(state),
-        (embs, q_tokens, q_mask, r_tokens, r_mask, active))
+        (embs, q_tokens, q_mask, r_tokens, r_mask, active, cn))
 
 
 def make_insert_batch(cfg: CacheConfig, donate: bool = True):
@@ -193,17 +224,32 @@ def make_insert_batch(cfg: CacheConfig, donate: bool = True):
 
 
 def lookup(state, cfg: CacheConfig, q_embs):
-    """q_embs (B, D) unit vectors -> (scores (B,k), indices (B,k))."""
+    """q_embs (B, D) unit vectors -> (scores (B,k), indices (B,k)).
+
+    ``cfg.index`` picks the scan: "flat" brute-forces the whole bank,
+    "ivf" probes the top-``nprobe`` clusters of the member table
+    (DESIGN.md §7; identical results at ``nprobe == nclusters``).
+    """
+    if cfg.index == "ivf":
+        return index_lib.lookup(state, cfg, q_embs)
     k = min(cfg.topk, cfg.capacity)
     return cosine_topk(q_embs, state["emb"], state["valid"], k=k,
                        impl=cfg.lookup_impl, block_n=min(cfg.block_n, cfg.capacity))
 
 
 def touch(state, cfg: CacheConfig, indices):
-    """Record cache hits for LRU/LFU accounting.  indices: (B,) top-1 hits."""
+    """Record cache hits for LRU/LFU accounting.  indices: (B,) top-1 hits.
+
+    A -1 index (empty/all-invalid cache, or a padded row) must be a
+    no-op: raw negative indices WRAP in jax scatters, so an unguarded
+    ``.at[-1]`` would silently touch the LAST slot and corrupt LRU/LFU
+    ordering.  Route them out of bounds and drop, like lookup_and_touch.
+    """
+    indices = jnp.asarray(indices)
+    w = jnp.where(indices >= 0, indices, cfg.capacity)
     new = dict(state)
-    new["last_used"] = state["last_used"].at[indices].set(state["clock"])
-    new["hits"] = state["hits"].at[indices].add(1)
+    new["last_used"] = state["last_used"].at[w].set(state["clock"], mode="drop")
+    new["hits"] = state["hits"].at[w].add(1, mode="drop")
     new["clock"] = state["clock"] + 1
     return new
 

@@ -29,13 +29,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.embedder import encode as embed_encode
-from repro.models.model import Model
 from repro.serving.batcher import (bucket_batch, bucket_len, floor_len_bucket,
                                    pad_to_buckets)
-from repro.serving.generate import GenerateConfig, Generator
+from repro.serving.generate import Generator
 from repro.tokenizer import HashWordTokenizer
 
 from . import cache as cache_lib
+from . import index as index_lib
 from . import router as router_lib
 from . import tweak as tweak_lib
 
@@ -274,6 +274,11 @@ class TweakLLMEngine:
         slots = np.asarray(slots)  # single device->host sync per batch
         for j in range(n):
             self._text_store[int(slots[j])] = (texts[j], resp_texts[j])
+        # IVF maintenance: k-means recluster when enough writes piled up
+        # (or the member table overflowed).  No-op for flat caches.
+        self.state, _ = index_lib.maybe_reindex(self.state, self.cache_cfg,
+                                                seed=self._insert_seq)
+        self._insert_seq += 1
 
     def _run_miss(self, queries, ids, embs, responses, max_new_tokens,
                   gen_tokens):

@@ -1,0 +1,313 @@
+"""IVF-style clustered index over the semantic-cache embedding bank.
+
+The flat cache lookup is a brute-force O(capacity * D) cosine scan; this
+module makes lookup cost grow with *probed clusters* instead of capacity
+(DESIGN.md §7) — the TPU-native analogue of a Milvus/FAISS IVF index:
+
+* **Centroids** (nclusters, D): spherical k-means over the bank, trained
+  host-side in :func:`build_index` (maintenance path, not the hot loop).
+* **Member table** (nclusters, bucket): a PADDED, fixed-shape list of the
+  bank rows assigned to each cluster, so the two-stage lookup
+  (query -> top-``nprobe`` centroids -> scan only member rows) jits once
+  per batch bucket and never sees a data-dependent shape.
+* **Back-pointers** ``assign``/``slot_pos`` (capacity,): the cluster and
+  member-table position each bank slot is CURRENTLY filed under.  Member
+  lists are append-only between rebuilds; an overwritten slot's old entry
+  goes stale *lazily* — a member entry (c, p) = s is live iff
+  ``valid[s] & assign[s] == c & slot_pos[s] == p``.  That keeps insert a
+  cheap fixed-shape append (no swap-remove scatter chains) while
+  guaranteeing every valid slot has EXACTLY ONE live entry, which is what
+  makes lookup at ``nprobe == nclusters`` score- and decision-identical
+  to the flat scan.
+* **Rebalance**: inserts land in the nearest centroid's list, falling
+  back to the least-loaded cluster when that list is full (total table
+  slack is ``ivf_slack`` x capacity, so space exists while the
+  equivalence invariant holds).  When even the fallback is full the entry
+  overwrites the fallback's last member slot and raises ``ivf_overflow``
+  — the signal (with the ``ivf_pending`` write counter) that
+  :func:`maybe_reindex` uses to trigger a host-side k-means rebuild.
+
+All lookup/insert entry points are jit-safe and operate on the cache
+state dict from ``repro.core.cache`` (ivf arrays ride inside it, so the
+engine's donated-buffer calls need no API change).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.cosine_topk.ops import cosine_topk_gather
+
+IVF_KEYS = ("ivf_centroids", "ivf_members", "ivf_count", "ivf_assign",
+            "ivf_pos", "ivf_pending", "ivf_overflow")
+
+# member-table slack: total member slots = slack * capacity, so the
+# least-loaded fallback always has space until churn accumulates
+# slack*capacity stale appends (a rebuild fires long before that).
+# Kept small on purpose — the probe scans nprobe * bucket rows, so every
+# unit of slack is paid for on every lookup.
+SLACK = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class IVFParams:
+    nclusters: int
+    bucket: int
+    nprobe: int
+    reindex_every: int
+
+
+def resolve(cfg) -> IVFParams:
+    """Resolve the auto (0) CacheConfig knobs into concrete table shapes.
+
+    ``bucket`` is floored at ``ceil(capacity / nclusters)`` (and at topk)
+    whatever the user asked for: the table must be able to hold every
+    valid slot or the flat-scan equivalence (and build_index's spill)
+    would have no space to preserve it.
+
+    Auto ``nclusters`` targets a ~2k-row shortlist at the default nprobe
+    (capacity/128 clusters -> bucket ~256 at slack 2): measured on CPU,
+    the gathered-shortlist scan falls off a locality cliff past ~4k rows,
+    and k-means cost caps the cluster count at 2048.
+    """
+    nclusters = cfg.nclusters or min(max(64, cfg.capacity // 128), 2048)
+    nclusters = min(nclusters, cfg.capacity)
+    bucket = cfg.ivf_bucket or -(-cfg.capacity // nclusters) * SLACK
+    bucket = max(bucket, -(-cfg.capacity // nclusters),
+                 min(cfg.topk, cfg.capacity))
+    bucket = min(bucket, cfg.capacity)
+    nprobe = min(cfg.nprobe or 8, nclusters)
+    reindex_every = cfg.reindex_every or max(64, cfg.capacity // 4)
+    return IVFParams(nclusters, bucket, nprobe, reindex_every)
+
+
+def init_ivf(cfg):
+    p = resolve(cfg)
+    return {
+        "ivf_centroids": jnp.zeros((p.nclusters, cfg.dim), jnp.float32),
+        "ivf_members": jnp.full((p.nclusters, p.bucket), -1, jnp.int32),
+        "ivf_count": jnp.zeros((p.nclusters,), jnp.int32),
+        "ivf_assign": jnp.full((cfg.capacity,), -1, jnp.int32),
+        "ivf_pos": jnp.full((cfg.capacity,), -1, jnp.int32),
+        "ivf_pending": jnp.zeros((), jnp.int32),
+        "ivf_overflow": jnp.zeros((), bool),
+    }
+
+
+# ---------------------------------------------------------------- insert
+
+def nearest_clusters(centroids, embs):
+    """(B,) nearest-centroid id per row — ONE GEMM, hoisted out of the
+    sequential filing scan (only the least-loaded fallback depends on the
+    evolving counts; this argmax does not)."""
+    return jnp.argmax(jnp.einsum("bd,cd->bc", embs, centroids),
+                      axis=1).astype(jnp.int32)
+
+
+def file_row(ivf, c_near, slot, on):
+    """File one row (precomputed nearest cluster) into the member table.
+
+    ivf: dict view of the IVF_KEYS arrays; slot i32; on bool (False rows
+    — padding / FIFO-lapped duplicates — are dropped).  Pure fixed-shape
+    updates, usable inside jit/scan.
+    """
+    nclusters, bucket = ivf["ivf_members"].shape
+    capacity = ivf["ivf_assign"].shape[0]
+    # nearest list full -> rebalance to the least-loaded cluster
+    c = jnp.where(ivf["ivf_count"][c_near] >= bucket,
+                  jnp.argmin(ivf["ivf_count"]).astype(jnp.int32), c_near)
+    ovf = ivf["ivf_count"][c] >= bucket
+    p = jnp.minimum(ivf["ivf_count"][c], bucket - 1)
+    wc = jnp.where(on, c, nclusters)        # OOB -> dropped scatter
+    ws = jnp.where(on, slot, capacity)
+    new = dict(ivf)
+    new["ivf_members"] = ivf["ivf_members"].at[wc, p].set(slot, mode="drop")
+    new["ivf_count"] = ivf["ivf_count"].at[wc].add(
+        jnp.where(ovf, 0, 1), mode="drop")
+    new["ivf_assign"] = ivf["ivf_assign"].at[ws].set(c, mode="drop")
+    new["ivf_pos"] = ivf["ivf_pos"].at[ws].set(p, mode="drop")
+    new["ivf_pending"] = ivf["ivf_pending"] + on.astype(jnp.int32)
+    new["ivf_overflow"] = ivf["ivf_overflow"] | (on & ovf)
+    return new
+
+
+def append_one(ivf, emb, slot, on):
+    """File one (already-normalized) embedding under its nearest centroid
+    (single-entry path; batches should use :func:`update_batch`)."""
+    c = jnp.argmax(ivf["ivf_centroids"] @ emb).astype(jnp.int32)
+    return file_row(ivf, c, slot, on)
+
+
+def update_batch(state, cfg, embs, slots):
+    """File a batch of inserted rows (slots < 0 are dropped).
+
+    Filing is sequential by construction — two rows landing in the same
+    cluster must take consecutive member positions — so it runs as a
+    lax.scan, one device dispatch for the whole batch (B is a serve-batch
+    bucket, not capacity); the nearest-centroid routing is hoisted to a
+    single (B, nclusters) GEMM.  ``embs`` must already be unit-normalized.
+    """
+    ivf = {k: state[k] for k in IVF_KEYS}
+    cn = nearest_clusters(state["ivf_centroids"], embs)
+
+    def step(carry, x):
+        c_near, slot = x
+        return file_row(carry, c_near, slot, slot >= 0), None
+
+    ivf, _ = jax.lax.scan(step, ivf, (cn, slots.astype(jnp.int32)))
+    out = dict(state)
+    out.update(ivf)
+    return out
+
+
+# ---------------------------------------------------------------- lookup
+
+def candidates(members, count, valid, assign, slot_pos, centroids, q_embs,
+               nprobe: int):
+    """Two-stage probe: centroid route -> padded member shortlist.
+
+    Returns (cand_idx (B, nprobe*bucket) i32 bank rows, live (B, M) bool).
+    Fixed shapes throughout: M never depends on data.
+    """
+    bucket = members.shape[1]
+    csims = jnp.einsum("bd,cd->bc", q_embs.astype(jnp.float32), centroids)
+    _, probe = jax.lax.top_k(csims, nprobe)                  # (B, nprobe)
+    cand = jnp.take(members, probe, axis=0)                  # (B, np, bucket)
+    cnt = jnp.take(count, probe, axis=0)                     # (B, np)
+    pcol = jnp.arange(bucket, dtype=jnp.int32)[None, None, :]
+    s = jnp.clip(cand, 0, None)
+    live = ((cand >= 0) & (pcol < cnt[..., None])
+            & jnp.take(valid, s)
+            & (jnp.take(assign, s) == probe[..., None])
+            & (jnp.take(slot_pos, s) == pcol))
+    b = q_embs.shape[0]
+    return cand.reshape(b, -1), live.reshape(b, -1)
+
+
+def lookup(state, cfg, q_embs):
+    """IVF lookup: (scores (B, k), indices (B, k)) like the flat scan.
+
+    At ``nprobe == nclusters`` this is score- and decision-identical to
+    the flat lookup (every valid slot appears exactly once live); at the
+    default nprobe it scans ``nprobe * bucket`` rows instead of
+    ``capacity``.
+    """
+    p = resolve(cfg)
+    cand, live = candidates(
+        state["ivf_members"], state["ivf_count"], state["valid"],
+        state["ivf_assign"], state["ivf_pos"], state["ivf_centroids"],
+        q_embs, p.nprobe)
+    k = min(cfg.topk, cfg.capacity)
+    return cosine_topk_gather(q_embs, state["emb"], cand, live, k=k,
+                              impl=cfg.lookup_impl,
+                              block_m=min(cfg.block_n, cand.shape[1]))
+
+
+# ------------------------------------------------------------- rebuild
+
+def _spherical_kmeans(x: np.ndarray, k: int, iters: int,
+                      rng: np.random.Generator) -> np.ndarray:
+    """Lloyd iterations with cosine assignment (rows of x unit-norm).
+
+    The (n, k) assignment matmul runs through jnp (it dominates); the
+    tiny centroid updates stay in numpy.  Empty clusters reseed to a
+    random training row.
+    """
+    n = x.shape[0]
+    init = rng.choice(n, size=k, replace=n < k)
+    cent = x[init].copy()
+    assign_fn = jax.jit(lambda xc, c: jnp.argmax(xc @ c.T, axis=1))
+    for _ in range(iters):
+        a = np.concatenate([
+            np.asarray(assign_fn(x[i:i + 8192], cent))
+            for i in range(0, n, 8192)])
+        sums = np.zeros_like(cent)
+        np.add.at(sums, a, x)
+        counts = np.bincount(a, minlength=k)
+        empty = counts == 0
+        norms = np.linalg.norm(sums, axis=1, keepdims=True)
+        cent = np.where(empty[:, None], x[rng.choice(n, size=k)],
+                        sums / np.maximum(norms, 1e-8))
+    return cent.astype(np.float32)
+
+
+def build_index(state, cfg, seed: int = 0, sample: int = 65536):
+    """Host-side recluster/rebalance: fresh k-means + compact member table.
+
+    Maintenance path (called by ``maybe_reindex`` every ``reindex_every``
+    writes or on overflow), so it optimizes for correctness: k-means
+    trains on a <= ``sample`` row subset, every valid row is then filed
+    under its nearest centroid, and clusters past ``bucket`` spill their
+    FARTHEST members to the nearest cluster with space — no valid row is
+    ever dropped, preserving the nprobe == nclusters equivalence.
+    """
+    p = resolve(cfg)
+    emb = np.asarray(state["emb"], np.float32)
+    valid = np.asarray(state["valid"])
+    rows = np.nonzero(valid)[0]
+    out = dict(state)
+    out.update(init_ivf(cfg))
+    if len(rows) == 0:
+        return out
+    rng = np.random.default_rng(seed)
+    train = emb[rng.choice(rows, size=min(len(rows), sample), replace=False)]
+    cent = _spherical_kmeans(train, p.nclusters, cfg.kmeans_iters, rng)
+
+    sim_fn = jax.jit(lambda xc, c: xc @ c.T)
+    assign = np.full((cfg.capacity,), -1, np.int64)
+    best_sim = np.zeros((cfg.capacity,), np.float32)
+    for i in range(0, len(rows), 8192):
+        chunk = rows[i:i + 8192]
+        s = np.asarray(sim_fn(emb[chunk], cent))
+        assign[chunk] = s.argmax(axis=1)
+        best_sim[chunk] = s.max(axis=1)
+
+    counts = np.bincount(assign[rows], minlength=p.nclusters)
+    # spill: clusters past bucket hand their farthest rows to the nearest
+    # cluster with space (total slack guarantees space exists)
+    for c in np.nonzero(counts > p.bucket)[0]:
+        mem = rows[assign[rows] == c]
+        spill = mem[np.argsort(best_sim[mem])[:len(mem) - p.bucket]]
+        sims = np.asarray(sim_fn(emb[spill], cent))
+        for r, s in zip(spill, sims):
+            s = np.where(counts < p.bucket, s, -np.inf)
+            tgt = int(s.argmax())
+            assign[r] = tgt
+            counts[tgt] += 1
+            counts[c] -= 1
+
+    # vectorized table build: stable-sort rows by cluster, positions are
+    # ranks within each run (a python per-row loop is minutes at 1M rows)
+    order = rows[np.argsort(assign[rows], kind="stable")]
+    sorted_c = assign[order]
+    starts = np.searchsorted(sorted_c, np.arange(p.nclusters))
+    posn = (np.arange(len(order)) - starts[sorted_c]).astype(np.int32)
+    members = np.full((p.nclusters, p.bucket), -1, np.int32)
+    count = np.bincount(sorted_c, minlength=p.nclusters).astype(np.int32)
+    slot_pos = np.full((cfg.capacity,), -1, np.int32)
+    members[sorted_c, posn] = order
+    slot_pos[order] = posn
+
+    out["ivf_centroids"] = jnp.asarray(cent)
+    out["ivf_members"] = jnp.asarray(members)
+    out["ivf_count"] = jnp.asarray(count)
+    out["ivf_assign"] = jnp.asarray(assign.astype(np.int32))
+    out["ivf_pos"] = jnp.asarray(slot_pos)
+    return out
+
+
+def maybe_reindex(state, cfg, seed: int = 0):
+    """Engine maintenance hook: rebuild when stale-append debt piles up.
+
+    Returns (state, rebuilt).  Cheap no-op for flat caches; for IVF it
+    reads two device scalars (pending write count + overflow flag).
+    """
+    if getattr(cfg, "index", "flat") != "ivf":
+        return state, False
+    if bool(state["ivf_overflow"]) or \
+            int(state["ivf_pending"]) >= resolve(cfg).reindex_every:
+        return build_index(state, cfg, seed=seed), True
+    return state, False

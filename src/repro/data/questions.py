@@ -15,7 +15,7 @@ generated data whose similarity structure is controllable:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Tuple
 
 import numpy as np
 

@@ -12,11 +12,11 @@ seeded RNG, mirroring the paper's shuffled side-by-side presentation.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Sequence, Tuple
+from typing import List, Sequence
 
 import numpy as np
 
-from .judge import PERSONAS, Persona, persona_score
+from .judge import PERSONAS, persona_score
 
 TIE_BAND = 0.03          # score margin below which a persona votes AB
 HISTORY_PULL = 0.35      # round-2 consensus weight

@@ -38,27 +38,7 @@ def _kernel(q_ref, db_ref, valid_ref, out_s_ref, out_i_ref,
     col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1) + base
     scores = jnp.where(valid_ref[...][None, :] != 0, scores, NEG)
 
-    rs, ri = run_s[...], run_i[...]                  # (B, k), sorted desc
-    s, idx = scores, col
-    for j in range(k):
-        # best remaining candidate in the tile pool (VPU-friendly: no gather)
-        best = jnp.max(s, axis=1, keepdims=True)                    # (B,1)
-        bidx = jnp.argmax(s, axis=1)                                # (B,)
-        consumed = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) == bidx[:, None]
-        bcol = jnp.sum(jnp.where(consumed, idx, 0), axis=1, keepdims=True)
-        # compare with the j-th running slot: larger wins the slot, the
-        # loser is re-injected into the pool to compete for slot j+1
-        slot_s = rs[:, j:j + 1]
-        slot_i = ri[:, j:j + 1]
-        take_new = best > slot_s
-        rs = jax.lax.dynamic_update_slice(
-            rs, jnp.where(take_new, best, slot_s), (0, j))
-        ri = jax.lax.dynamic_update_slice(
-            ri, jnp.where(take_new, bcol, slot_i), (0, j))
-        # when the candidate wins, the demoted slot value takes its pool spot;
-        # when it loses it simply stays in the pool.
-        s = jnp.where(consumed & take_new, jnp.broadcast_to(slot_s, s.shape), s)
-        idx = jnp.where(consumed & take_new, jnp.broadcast_to(slot_i, idx.shape), idx)
+    rs, ri = _topk_merge(run_s[...], run_i[...], scores, col, k)
     run_s[...] = rs
     run_i[...] = ri
 
@@ -66,6 +46,98 @@ def _kernel(q_ref, db_ref, valid_ref, out_s_ref, out_i_ref,
     def _final():
         out_s_ref[...] = run_s[...]
         out_i_ref[...] = run_i[...]
+
+
+def _topk_merge(rs, ri, s, idx, k: int):
+    """Fold a (B, m) score/index tile into the (B, k) running top-k.
+
+    k rounds of masked max; the loser of each slot comparison is
+    re-injected into the pool to compete for the next slot (VPU-friendly:
+    no gather, no sort network).
+    """
+    for j in range(k):
+        best = jnp.max(s, axis=1, keepdims=True)                    # (B,1)
+        bidx = jnp.argmax(s, axis=1)                                # (B,)
+        consumed = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) == bidx[:, None]
+        bcol = jnp.sum(jnp.where(consumed, idx, 0), axis=1, keepdims=True)
+        slot_s = rs[:, j:j + 1]
+        slot_i = ri[:, j:j + 1]
+        take_new = best > slot_s
+        rs = jax.lax.dynamic_update_slice(
+            rs, jnp.where(take_new, best, slot_s), (0, j))
+        ri = jax.lax.dynamic_update_slice(
+            ri, jnp.where(take_new, bcol, slot_i), (0, j))
+        s = jnp.where(consumed & take_new, jnp.broadcast_to(slot_s, s.shape), s)
+        idx = jnp.where(consumed & take_new, jnp.broadcast_to(slot_i, idx.shape), idx)
+    return rs, ri
+
+
+def _gather_kernel(q_ref, cand_ref, idx_ref, valid_ref, out_s_ref, out_i_ref,
+                   run_s, run_i, *, k: int, block_m: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        run_s[...] = jnp.full_like(run_s, NEG)
+        run_i[...] = jnp.full_like(run_i, -1)
+
+    q = q_ref[...].astype(jnp.float32)               # (B, D)
+    cand = cand_ref[...].astype(jnp.float32)         # (B, block_m, D)
+    # per-query candidate sets: batched matvec on the MXU
+    scores = jax.lax.dot_general(
+        q, cand, (((1,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)           # (B, block_m)
+    scores = jnp.where(valid_ref[...] != 0, scores, NEG)
+    idx = idx_ref[...]                                # (B, block_m)
+
+    rs, ri = _topk_merge(run_s[...], run_i[...], scores, idx, k)
+    run_s[...] = rs
+    run_i[...] = ri
+
+    @pl.when(step == pl.num_programs(0) - 1)
+    def _final():
+        out_s_ref[...] = run_s[...]
+        out_i_ref[...] = run_i[...]
+
+
+def cosine_topk_gather_pallas(queries, cand_emb, cand_idx, cand_valid, k: int,
+                              *, block_m: int = 256, interpret: bool = True):
+    """Shortlist scan: queries (B, D) x cand_emb (B, M, D) -> top-k.
+
+    The IVF probe path — the (B, M, D) candidate tensor (gathered by XLA
+    outside the kernel) streams through VMEM in (B, block_m, D) tiles;
+    indices come from ``cand_idx`` instead of a column iota, so the kernel
+    reports GLOBAL bank rows.  Padding/stale candidates (``cand_valid``
+    false) score NEG and never surface.
+    """
+    b, m, d = cand_emb.shape
+    block_m = min(block_m, m)
+    assert m % block_m == 0, f"M={m} not divisible by block_m={block_m}"
+    grid = (m // block_m,)
+    out_s, out_i = pl.pallas_call(
+        functools.partial(_gather_kernel, k=k, block_m=block_m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((b, block_m, d), lambda i: (0, i, 0)),
+            pl.BlockSpec((b, block_m), lambda i: (0, i)),
+            pl.BlockSpec((b, block_m), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, k), lambda i: (0, 0)),
+            pl.BlockSpec((b, k), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((b, k), jnp.float32),
+            pltpu.VMEM((b, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, cand_emb, cand_idx, cand_valid.astype(jnp.int32))
+    return out_s, out_i
 
 
 def cosine_topk_pallas(queries, db, k: int, valid=None, *,

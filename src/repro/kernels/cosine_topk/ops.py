@@ -11,8 +11,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import cosine_topk_pallas
-from .ref import cosine_topk_ref
+from .kernel import cosine_topk_gather_pallas, cosine_topk_pallas
+from .ref import cosine_topk_gather_ref, cosine_topk_ref
 
 
 @functools.partial(jax.jit, static_argnames=("k", "impl", "block_n"))
@@ -25,3 +25,34 @@ def cosine_topk(queries, db, valid=None, *, k: int = 4, impl: str = "xla",
         # kernel reports NEG for sub-k matches; normalize to -inf like ref
         return jnp.where(i >= 0, s, -jnp.inf), i
     return cosine_topk_ref(queries, db, k, valid)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "impl", "block_m"))
+def cosine_topk_gather(queries, db, cand_idx, cand_valid, *, k: int = 4,
+                       impl: str = "xla", block_m: int = 256):
+    """Gather-then-scan: score only a per-query shortlist of db rows.
+
+    queries (B,D) x db (N,D), cand_idx (B,M) i32 row ids (-1 = padding),
+    cand_valid (B,M) bool -> (scores (B,k), indices (B,k) GLOBAL rows).
+    The shortlist gather runs in XLA (one (B,M,D) take); scoring + top-k
+    dispatch to the Pallas tile kernel on TPU or the jnp oracle elsewhere.
+    """
+    b, m = cand_idx.shape
+    cand_valid = cand_valid & (cand_idx >= 0)
+    cand_emb = jnp.take(db, jnp.clip(cand_idx, 0, None), axis=0)  # (B,M,D)
+    if impl == "pallas":
+        block_m = min(block_m, m)
+        pad = (-m) % block_m
+        if pad:
+            zcol = jnp.zeros((b, pad), jnp.int32)
+            cand_idx = jnp.concatenate([cand_idx, zcol - 1], axis=1)
+            cand_valid = jnp.concatenate(
+                [cand_valid, jnp.zeros((b, pad), bool)], axis=1)
+            cand_emb = jnp.concatenate(
+                [cand_emb, jnp.zeros((b, pad, db.shape[1]), cand_emb.dtype)],
+                axis=1)
+        s, i = cosine_topk_gather_pallas(
+            queries, cand_emb, cand_idx, cand_valid, k, block_m=block_m,
+            interpret=jax.default_backend() != "tpu")
+        return jnp.where(i >= 0, s, -jnp.inf), i
+    return cosine_topk_gather_ref(queries, cand_emb, cand_idx, cand_valid, k)

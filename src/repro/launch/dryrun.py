@@ -25,8 +25,6 @@ import traceback
 from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ASSIGNED_ARCHS, get_config, skip_reason
 from repro.launch import sharding as shd

@@ -28,7 +28,9 @@ from repro.training.embedder_train import train_embedder
 
 def build_engine(*, vocab: int = 8192, threshold: float = 0.7,
                  capacity: int = 4096, train_embedder_steps: int = 60,
-                 policy: str = "fifo", lookup_impl: str = "xla", seed: int = 0):
+                 policy: str = "fifo", lookup_impl: str = "xla",
+                 index: str = "flat", nclusters: int = 0, nprobe: int = 8,
+                 seed: int = 0):
     tok = HashWordTokenizer(vocab)
     ecfg = tiny_embedder_config(vocab)
     eparams = init_embedder(jax.random.PRNGKey(seed), ecfg)
@@ -49,7 +51,9 @@ def build_engine(*, vocab: int = 8192, threshold: float = 0.7,
         tokenizer=tok, embedder_params=eparams, embedder_cfg=ecfg,
         big=big, small=small,
         cache_cfg=CacheConfig(capacity=capacity, dim=ecfg.d_model,
-                              policy=policy, lookup_impl=lookup_impl),
+                              policy=policy, lookup_impl=lookup_impl,
+                              index=index, nclusters=nclusters,
+                              nprobe=nprobe),
         router_cfg=RouterConfig(tweak_threshold=threshold))
 
 
@@ -65,11 +69,14 @@ def main():
     ap.add_argument("--profile", default="lmsys", choices=["lmsys", "wildchat"])
     ap.add_argument("--threshold", type=float, default=0.7)
     ap.add_argument("--policy", default="fifo", choices=["fifo", "lru", "lfu"])
+    ap.add_argument("--index", default="flat", choices=["flat", "ivf"],
+                    help="cache lookup index (ivf = clustered, DESIGN.md §7)")
     ap.add_argument("--embedder-steps", type=int, default=60)
     args = ap.parse_args()
 
     print("building TweakLLM stack (training embedder contrastively)...")
     eng = build_engine(threshold=args.threshold, policy=args.policy,
+                       index=args.index,
                        train_embedder_steps=args.embedder_steps)
     wl = WorkloadGenerator(profile=args.profile, seed=0)
     texts = [q.text for q in wl.sample(args.queries)]

@@ -6,12 +6,10 @@ jax.eval_shape, per the multi-pod dry-run contract.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models.model import build_model

@@ -11,12 +11,10 @@ KV caches shard batch over ('pod','data') and the *sequence* dim over
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models.config import ModelConfig
 

@@ -15,11 +15,10 @@ microbatching, which already removed the activation mountain).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models.model import Model
 from repro.training import AdamWConfig, adamw_update, cosine_schedule
@@ -30,8 +29,6 @@ def make_zero_train_step(model: Model, opt_cfg: AdamWConfig, mesh: Mesh, *,
                          total_steps: int = 10_000):
     """Returns (step_fn, in_shardings-compatible spec builders)."""
     data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    manual = set(data_axes)
-    auto = frozenset(a for a in mesh.axis_names if a not in manual)
 
     def loss_fn(params, batch):
         loss, _ = model.loss(params, batch)

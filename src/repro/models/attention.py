@@ -16,14 +16,11 @@ algorithm; ``attention_impl='pallas'`` dispatches to it.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 
 from .config import ModelConfig
-from .layers import apply_rope, dense_init, truncated_normal
+from .layers import apply_rope, dense_init
 
 NEG_INF = -1e30
 

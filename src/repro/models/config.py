@@ -11,7 +11,7 @@ remainder layers applied unscanned.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 # Block kinds understood by transformer.py
 ATTN = "attn"              # global attention + dense MLP

@@ -6,10 +6,6 @@ serving engine, trainer and dry-run treat every architecture uniformly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
-
-import jax
-import jax.numpy as jnp
 
 from . import encdec as encdec_lib
 from . import transformer as tf_lib

@@ -15,8 +15,7 @@ the stacked (leading dim = periods) per-layer state for pattern position j,
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

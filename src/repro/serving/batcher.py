@@ -7,8 +7,7 @@ stays small under production traffic.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Sequence, Tuple
+from typing import Tuple
 
 import numpy as np
 

@@ -8,11 +8,9 @@ off-the-shelf from all-MiniLM-L6-v2 and we must train ourselves offline.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.data.questions import QuestionPairGenerator
 from repro.models.embedder import encode as embed_encode

@@ -7,14 +7,11 @@ for the >=300B dry-run configs (see EXPERIMENTS.md §Perf).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
 from repro.models.model import Model
-from .optimizer import AdamWConfig, adamw_update, cosine_schedule, init_opt_state
+from .optimizer import AdamWConfig, adamw_update, cosine_schedule
 
 
 def make_train_step(model: Model, opt_cfg: AdamWConfig, *,

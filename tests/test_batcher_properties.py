@@ -5,7 +5,6 @@ Hypothesis-driven where available (skip cleanly otherwise via
 invariants at fixed points so tier-1 always exercises them.
 """
 import numpy as np
-import pytest
 
 from _hypothesis_shim import given, settings, st
 from repro.serving.batcher import (BATCH_BUCKETS, LEN_BUCKETS, bucket_batch,

@@ -131,6 +131,27 @@ def test_exact_hit_survives_eviction_via_fused_touch(policy):
     assert sum(float(s[i, 0]) < 0.999 for i in (1, 2)) >= 1
 
 
+def test_touch_negative_index_is_noop():
+    """Regression: raw -1 indices WRAP in jax scatters, so an unguarded
+    touch on an empty/all-invalid cache (pallas lookup reports top-1 -1)
+    silently touched the LAST slot and corrupted LRU/LFU ordering."""
+    cfg = _cfg(capacity=8)
+    st_ = cache_lib.init_cache(cfg)
+    for i in range(8):
+        e, *rest = _rand_entry(jax.random.PRNGKey(i), cfg)
+        st_ = cache_lib.insert(st_, cfg, e, *rest)
+    before_lu = np.asarray(st_["last_used"]).copy()
+    before_h = np.asarray(st_["hits"]).copy()
+    touched = cache_lib.touch(st_, cfg, jnp.asarray([-1, -1]))
+    np.testing.assert_array_equal(np.asarray(touched["last_used"]), before_lu)
+    np.testing.assert_array_equal(np.asarray(touched["hits"]), before_h)
+    assert int(touched["clock"]) == int(st_["clock"]) + 1
+    # mixed batch: valid index still touches, -1 still doesn't
+    touched = cache_lib.touch(st_, cfg, jnp.asarray([3, -1]))
+    assert int(touched["hits"][3]) == before_h[3] + 1
+    assert int(touched["last_used"][-1]) == before_lu[-1]
+
+
 def test_lookup_and_touch_miss_does_not_touch():
     cfg = _cfg(capacity=4)
     rcfg = router_lib.RouterConfig(tweak_threshold=0.7, exact_threshold=0.999)

@@ -10,7 +10,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 
@@ -79,6 +78,70 @@ def test_distributed_lookup_matches_single_device():
     assert res["ok_idx"], res
     assert res["ok_ins"], res
     assert res["ok_slots"], res
+
+
+_IVF_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.core import cache as cache_lib
+    from repro.core import index as index_lib
+    from repro.core.distributed import (make_distributed_insert_batch,
+                                        make_distributed_ivf_lookup,
+                                        shard_ivf_cache_state)
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    flat_cfg = cache_lib.CacheConfig(capacity=64, dim=16, topk=4)
+    # nprobe == nclusters -> must be score/decision-identical to flat
+    cfg = cache_lib.CacheConfig(capacity=64, dim=16, topk=4, index="ivf",
+                                nclusters=8, nprobe=8)
+    B = 80  # 70 real rows laps capacity 64 -> overwrite/stale churn
+    embs = jax.random.normal(jax.random.PRNGKey(0), (B, cfg.dim))
+    qt = jnp.zeros((B, cfg.max_query_tokens), jnp.int32)
+    qm = jnp.ones((B, cfg.max_query_tokens), jnp.float32)
+    rt = jnp.zeros((B, cfg.max_response_tokens), jnp.int32)
+    rm = jnp.ones((B, cfg.max_response_tokens), jnp.float32)
+    state, _ = cache_lib.insert_batch(cache_lib.init_cache(cfg), cfg,
+                                      embs, qt, qm, rt, rm, 70)
+    q = embs[40:60] / jnp.linalg.norm(embs[40:60], axis=-1, keepdims=True)
+    ref_s, ref_i = cache_lib.lookup(state, flat_cfg, q)
+    # rebuilt index, sharded layout, distributed two-stage lookup
+    sstate = shard_ivf_cache_state(index_lib.build_index(state, cfg, seed=0),
+                                   mesh, cfg)
+    dl = make_distributed_ivf_lookup(mesh, cfg)
+    ds, di = dl(sstate, q)
+    ok_scores = bool(np.allclose(np.asarray(ds), np.asarray(ref_s), atol=1e-5))
+    ok_idx = bool(np.array_equal(np.asarray(di), np.asarray(ref_i)))
+    # sharded IVF insert path from empty must agree with the flat oracle too
+    dib = make_distributed_insert_batch(mesh, cfg)
+    s1, slots = dib(shard_ivf_cache_state(cache_lib.init_cache(cfg), mesh, cfg),
+                    embs, qt, qm, rt, rm, 70)
+    ref_state, ref_slots = cache_lib.insert_batch(
+        cache_lib.init_cache(cfg), cfg, embs, qt, qm, rt, rm, 70)
+    ds2, di2 = dl(s1, q)
+    ok_ins = (bool(np.array_equal(np.asarray(slots), np.asarray(ref_slots)))
+              and int(s1["ivf_pending"]) == int(ref_state["ivf_pending"])
+              and bool(np.allclose(np.asarray(ds2), np.asarray(ref_s),
+                                   atol=1e-5))
+              and bool(np.array_equal(np.asarray(di2), np.asarray(ref_i))))
+    print(json.dumps({"ok_scores": ok_scores, "ok_idx": ok_idx,
+                      "ok_ins": ok_ins, "n_dev": len(jax.devices())}))
+""")
+
+
+def test_distributed_ivf_matches_flat():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", _IVF_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["n_dev"] == 8
+    assert res["ok_scores"], res
+    assert res["ok_idx"], res
+    assert res["ok_ins"], res
 
 
 _MESH_SCRIPT = textwrap.dedent("""

@@ -1,12 +1,10 @@
 """End-to-end TweakLLM behaviour tests (paper Figure-1 pipeline)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import (CacheConfig, RouterConfig, TweakLLMEngine, router)
 from repro.core.baseline import BaselineConfig, GPTCacheBaseline
-from repro.data import QuestionPairGenerator
 from repro.models import ModelConfig, build_model
 from repro.models.embedder import init_embedder, tiny_embedder_config
 from repro.models.reranker import init_reranker, tiny_reranker_config

@@ -1,10 +1,9 @@
 """Judge + multi-agent debate protocol tests."""
 import jax
 import numpy as np
-import pytest
 
 from repro.eval import (PERSONAS, debate_batch, make_loglik_scorer,
-                        persona_score, run_debate, verdict_shares)
+                        run_debate, verdict_shares)
 from repro.models import ModelConfig, build_model
 from repro.tokenizer import HashWordTokenizer
 
@@ -42,7 +41,6 @@ def test_debate_prefers_clearly_better():
 
 
 def test_verdict_shares_sum_to_one():
-    rng = np.random.default_rng(2)
     rs = debate_batch(["q"] * 10, ["resp a"] * 10, ["resp b"] * 10,
                       [-1.0] * 10, [-1.0] * 10)
     shares = verdict_shares(rs)

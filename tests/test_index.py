@@ -1,0 +1,219 @@
+"""Clustered (IVF) semantic-cache index invariants — DESIGN.md §7.
+
+The load-bearing property: at ``nprobe == nclusters`` the IVF lookup is
+score- and decision-identical to the flat scan, through arbitrary
+insert/overwrite churn and across k-means rebuilds.  At the default
+``nprobe`` it must keep recall@1 >= 0.95 on clustered synthetic data.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_shim import given, settings, st
+
+from repro.core import cache as cache_lib
+from repro.core import index as index_lib
+from repro.core import router as router_lib
+
+
+def _cfgs(capacity=32, dim=16, nclusters=4, nprobe=None, policy="fifo",
+          topk=4, **kw):
+    base = dict(capacity=capacity, dim=dim, max_query_tokens=4,
+                max_response_tokens=4, topk=topk, policy=policy, **kw)
+    flat = cache_lib.CacheConfig(**base)
+    ivf = cache_lib.CacheConfig(
+        index="ivf", nclusters=nclusters,
+        nprobe=nclusters if nprobe is None else nprobe, **base)
+    return flat, ivf
+
+
+def _entry(key, cfg):
+    e = jax.random.normal(key, (cfg.dim,))
+    qt = jnp.zeros((cfg.max_query_tokens,), jnp.int32)
+    qm = jnp.ones((cfg.max_query_tokens,), jnp.float32)
+    rt = jnp.zeros((cfg.max_response_tokens,), jnp.int32)
+    rm = jnp.ones((cfg.max_response_tokens,), jnp.float32)
+    return e, qt, qm, rt, rm
+
+
+def _clustered(key, n, dim, ntrue=16, noise=0.5):
+    """Unit rows drawn from a mixture of ``ntrue`` directions.
+
+    ``noise`` is the total perturbation NORM (scaled by 1/sqrt(dim) per
+    coordinate), so intra-cluster cosine ~ 1/sqrt(1 + noise^2) no matter
+    the dimension.
+    """
+    k1, k2, k3 = jax.random.split(key, 3)
+    centers = jax.random.normal(k1, (ntrue, dim))
+    centers /= jnp.linalg.norm(centers, axis=-1, keepdims=True)
+    which = jax.random.randint(k2, (n,), 0, ntrue)
+    pts = centers[which] + (noise / dim ** 0.5) * \
+        jax.random.normal(k3, (n, dim))
+    return pts / jnp.linalg.norm(pts, axis=-1, keepdims=True)
+
+
+def _assert_matches_flat(state, flat, ivf, q, rcfg=None):
+    rcfg = rcfg or router_lib.RouterConfig()
+    fs, fi = cache_lib.lookup(state, flat, q)
+    ivs, ivi = cache_lib.lookup(state, ivf, q)
+    np.testing.assert_allclose(np.asarray(fs), np.asarray(ivs),
+                               rtol=1e-5, atol=1e-5)
+    fd = np.asarray(router_lib.route(fs[:, 0], rcfg))
+    ivd = np.asarray(router_lib.route(ivs[:, 0], rcfg))
+    np.testing.assert_array_equal(fd, ivd)
+    # indices must agree wherever the score is real (flat reports
+    # arbitrary indices for -inf rows, ivf reports -1)
+    finite = np.isfinite(np.asarray(fs))
+    np.testing.assert_array_equal(np.asarray(fi)[finite],
+                                  np.asarray(ivi)[finite])
+
+
+@pytest.mark.parametrize("policy", ["fifo", "lru", "lfu"])
+def test_full_probe_matches_flat_through_churn(policy):
+    """nprobe == nclusters == flat scan, with ring-lapping overwrites."""
+    flat, ivf = _cfgs(policy=policy)
+    st_ = cache_lib.init_cache(ivf)
+    embs = jax.random.normal(jax.random.PRNGKey(0), (48, flat.dim))
+    for i in range(44):  # laps capacity 32 -> overwrites stale the table
+        e, *rest = _entry(jax.random.fold_in(jax.random.PRNGKey(1), i), ivf)
+        st_ = cache_lib.insert(st_, ivf, e, *rest)
+    q = embs[:16] / jnp.linalg.norm(embs[:16], axis=-1, keepdims=True)
+    _assert_matches_flat(st_, flat, ivf, q)
+    # a k-means rebuild must preserve the equivalence exactly
+    st_ = index_lib.build_index(st_, ivf, seed=0)
+    _assert_matches_flat(st_, flat, ivf, q)
+    # ... and so must further inserts on the rebuilt table
+    for i in range(6):
+        e, *rest = _entry(jax.random.fold_in(jax.random.PRNGKey(2), i), ivf)
+        st_ = cache_lib.insert(st_, ivf, e, *rest)
+    _assert_matches_flat(st_, flat, ivf, q)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 40), seed=st.integers(0, 2 ** 16),
+       policy=st.sampled_from(["fifo", "lru", "lfu"]),
+       nclusters=st.sampled_from([1, 3, 8]))
+def test_full_probe_equivalence_property(n, seed, policy, nclusters):
+    """Property: IVF@nprobe=nclusters is decision- and score-identical to
+    the flat scan after any insert_batch history."""
+    flat, ivf = _cfgs(capacity=16, dim=8, nclusters=nclusters, policy=policy)
+    b = 8
+    sf, si = cache_lib.init_cache(flat), cache_lib.init_cache(ivf)
+    key = jax.random.PRNGKey(seed)
+    for start in range(0, n, b):
+        key, k1 = jax.random.split(key)
+        cnt = min(b, n - start)
+        embs = jax.random.normal(k1, (b, flat.dim))
+        qt = jnp.zeros((b, flat.max_query_tokens), jnp.int32)
+        qm = jnp.ones((b, flat.max_query_tokens), jnp.float32)
+        rt = jnp.zeros((b, flat.max_response_tokens), jnp.int32)
+        rm = jnp.ones((b, flat.max_response_tokens), jnp.float32)
+        sf, slf = cache_lib.insert_batch(sf, flat, embs, qt, qm, rt, rm, cnt)
+        si, sli = cache_lib.insert_batch(si, ivf, embs, qt, qm, rt, rm, cnt)
+        np.testing.assert_array_equal(np.asarray(slf), np.asarray(sli))
+        # the engine's maintenance hook: a rebuild restores the table when
+        # append-only churn overflows it (the equivalence contract holds
+        # MODULO maintenance, exactly as served traffic experiences it)
+        si, _ = index_lib.maybe_reindex(si, ivf, seed=start)
+    key, kq = jax.random.split(key)
+    q = jax.random.normal(kq, (6, flat.dim))
+    q = q / jnp.linalg.norm(q, axis=-1, keepdims=True)
+    # the non-ivf keys must be bit-identical state (ivf rides alongside)
+    for k in sf:
+        np.testing.assert_array_equal(np.asarray(sf[k]), np.asarray(si[k]),
+                                      err_msg=k)
+    _assert_matches_flat(si, flat, ivf, q)
+
+
+def test_default_nprobe_recall_on_clustered_data():
+    """recall@1 >= 0.95 and band agreement >= 0.98 at the default nprobe."""
+    cap, dim = 2048, 32
+    flat, ivf = _cfgs(capacity=cap, dim=dim, nclusters=0, nprobe=0)
+    assert index_lib.resolve(ivf).nprobe == 8  # the default
+    st_ = cache_lib.init_cache(ivf)
+    st_["emb"] = _clustered(jax.random.PRNGKey(0), cap, dim)
+    st_["valid"] = jnp.ones((cap,), bool)
+    st_ = index_lib.build_index(st_, ivf, seed=0)
+    qi = jax.random.randint(jax.random.PRNGKey(1), (256,), 0, cap)
+    q = st_["emb"][qi] + (0.15 / dim ** 0.5) * \
+        jax.random.normal(jax.random.PRNGKey(2), (256, dim))
+    q = q / jnp.linalg.norm(q, axis=-1, keepdims=True)
+    fs, fi = cache_lib.lookup(st_, flat, q)
+    ivs, ivi = cache_lib.lookup(st_, ivf, q)
+    recall = float(np.mean(np.asarray(fi[:, 0]) == np.asarray(ivi[:, 0])))
+    agree = float(np.mean(
+        np.asarray(router_lib.band_of(fs[:, 0]))
+        == np.asarray(router_lib.band_of(ivs[:, 0]))))
+    assert recall >= 0.95, recall
+    assert agree >= 0.98, agree
+
+
+def test_maybe_reindex_triggers_and_resets():
+    flat, ivf = _cfgs(capacity=16, dim=8, nclusters=2, reindex_every=8)
+    st_ = cache_lib.init_cache(ivf)
+    for i in range(6):
+        e, *rest = _entry(jax.random.PRNGKey(i), ivf)
+        st_ = cache_lib.insert(st_, ivf, e, *rest)
+    st_, did = index_lib.maybe_reindex(st_, ivf)
+    assert not did and int(st_["ivf_pending"]) == 6
+    for i in range(6, 10):
+        e, *rest = _entry(jax.random.PRNGKey(i), ivf)
+        st_ = cache_lib.insert(st_, ivf, e, *rest)
+    st_, did = index_lib.maybe_reindex(st_, ivf)
+    assert did and int(st_["ivf_pending"]) == 0
+    # rebuilt table is compact: counts equal live membership, no overflow
+    assert int(jnp.sum(st_["ivf_count"])) == int(jnp.sum(st_["valid"]))
+    assert not bool(st_["ivf_overflow"])
+    # flat path is untouched by maybe_reindex
+    st2, did = index_lib.maybe_reindex(cache_lib.init_cache(flat), flat)
+    assert not did
+
+
+def test_overflow_forces_rebuild():
+    """Slack-1 table + overwrite churn must raise the overflow flag, and
+    the rebuild must restore the flat-scan equivalence."""
+    flat, ivf = _cfgs(capacity=8, dim=8, nclusters=2, ivf_bucket=4,
+                      reindex_every=10 ** 6)
+    st_ = cache_lib.init_cache(ivf)
+    embs = []
+    for i in range(24):  # 24 appends into 8 table slots
+        e, *rest = _entry(jax.random.PRNGKey(i), ivf)
+        embs.append(e / jnp.linalg.norm(e))
+        st_ = cache_lib.insert(st_, ivf, e, *rest)
+    assert bool(st_["ivf_overflow"])
+    st_, did = index_lib.maybe_reindex(st_, ivf)
+    assert did
+    q = jnp.stack(embs[-8:])
+    _assert_matches_flat(st_, flat, ivf, q)
+
+
+def test_resolve_auto_params():
+    cfg = cache_lib.CacheConfig(capacity=65536, index="ivf")
+    p = index_lib.resolve(cfg)
+    assert p.nclusters == 512        # capacity / 128
+    assert p.bucket == 256           # 2x slack over capacity/nclusters
+    assert p.nprobe == 8
+    # bucket floor: the table must be able to hold every slot
+    tiny = cache_lib.CacheConfig(capacity=64, index="ivf", nclusters=4,
+                                 ivf_bucket=2)
+    assert index_lib.resolve(tiny).bucket == 16
+
+
+def test_ivf_engine_matches_flat_engine():
+    """Full-probe IVF engine serves byte-identical responses + stats."""
+    from repro.launch.serve import build_engine
+    flat_eng = build_engine(train_embedder_steps=0, capacity=64,
+                            threshold=0.7)
+    ivf_eng = build_engine(train_embedder_steps=0, capacity=64,
+                           threshold=0.7, index="ivf", nclusters=4,
+                           nprobe=4)
+    batches = [
+        ["how do i sort a list in python", "what is the capital of france"],
+        ["how do i sort a list in python", "explain http caching briefly"],
+        ["what is the capital of france", "how do i sort a python list"],
+    ]
+    for qs in batches:
+        r1 = flat_eng.handle_batch(qs, max_new_tokens=4)
+        r2 = ivf_eng.handle_batch(qs, max_new_tokens=4)
+        assert r1 == r2
+    assert flat_eng.stats == ivf_eng.stats

@@ -6,8 +6,9 @@ import numpy as np
 import pytest
 from _hypothesis_shim import given, settings, st
 
-from repro.kernels.cosine_topk.ops import cosine_topk
-from repro.kernels.cosine_topk.ref import cosine_topk_ref
+from repro.kernels.cosine_topk.ops import cosine_topk, cosine_topk_gather
+from repro.kernels.cosine_topk.ref import (cosine_topk_gather_ref,
+                                           cosine_topk_ref)
 from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref
 from repro.kernels.flash_attention.ops import flash_attention
@@ -52,6 +53,67 @@ def test_cosine_topk_property(b, logn, d, k, seed):
     s1 = np.asarray(s1)
     assert np.all(np.diff(s1, axis=1) <= 1e-6)
     assert np.all((np.asarray(i1) >= 0) & (np.asarray(i1) < n))
+
+
+@pytest.mark.parametrize("b,n,m,d,k,bm", [
+    (1, 128, 32, 16, 1, 16), (4, 256, 96, 64, 4, 32),
+    (2, 512, 100, 384, 8, 64),  # M not divisible by block_m -> pad path
+    (3, 256, 48, 32, 16, 48),
+])
+def test_cosine_topk_gather_matches_ref(b, n, m, d, k, bm):
+    q = _unit(jax.random.PRNGKey(0), (b, d))
+    db = _unit(jax.random.PRNGKey(1), (n, d))
+    # distinct candidate rows per query, some marked stale, some padding
+    rng = np.random.default_rng(2)
+    cand = np.stack([rng.choice(n, size=m, replace=False) for _ in range(b)])
+    cand_valid = rng.random((b, m)) < 0.8
+    cand[rng.random((b, m)) < 0.1] = -1
+    cand = jnp.asarray(cand, jnp.int32)
+    cand_valid = jnp.asarray(cand_valid)
+    s1, i1 = cosine_topk_gather(q, db, cand, cand_valid, k=k, impl="pallas",
+                                block_m=bm)
+    emb = jnp.take(db, jnp.clip(cand, 0, None), axis=0)
+    s2, i2 = cosine_topk_gather_ref(q, emb, cand, cand_valid & (cand >= 0), k)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-5, atol=1e-5)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_cosine_topk_gather_full_shortlist_matches_flat():
+    """With every row shortlisted, the gather path must equal the flat scan."""
+    b, n, d, k = 3, 128, 32, 4
+    q = _unit(jax.random.PRNGKey(5), (b, d))
+    db = _unit(jax.random.PRNGKey(6), (n, d))
+    valid = jax.random.bernoulli(jax.random.PRNGKey(7), 0.9, (n,))
+    cand = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (b, n))
+    cand_valid = jnp.broadcast_to(valid, (b, n))
+    for impl in ("xla", "pallas"):
+        s1, i1 = cosine_topk_gather(q, db, cand, cand_valid, k=k, impl=impl,
+                                    block_m=32)
+        s2, i2 = cosine_topk_ref(q, db, k, valid)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                                   rtol=1e-5, atol=1e-5)
+        finite = np.isfinite(np.asarray(s2))
+        assert np.array_equal(np.asarray(i1)[finite], np.asarray(i2)[finite])
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 3), m=st.sampled_from([16, 40, 64]),
+       k=st.integers(1, 6), seed=st.integers(0, 2 ** 16))
+def test_cosine_topk_gather_property(b, m, k, seed):
+    n, d = 256, 32
+    q = _unit(jax.random.PRNGKey(seed), (b, d))
+    db = _unit(jax.random.PRNGKey(seed + 1), (n, d))
+    cand = jax.random.randint(jax.random.PRNGKey(seed + 2), (b, m), 0, n)
+    cand_valid = jax.random.bernoulli(jax.random.PRNGKey(seed + 3), 0.7, (b, m))
+    s1, i1 = cosine_topk_gather(q, db, cand, cand_valid, k=k, impl="pallas",
+                                block_m=16)
+    emb = jnp.take(db, cand, axis=0)
+    s2, i2 = cosine_topk_gather_ref(q, emb, cand, cand_valid, k)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-5, atol=1e-5)
+    s1 = np.asarray(s1)
+    assert np.all(np.diff(np.where(np.isfinite(s1), s1, -1e30), axis=1) <= 1e-6)
 
 
 def test_cosine_topk_self_retrieval():

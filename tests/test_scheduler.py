@@ -8,16 +8,15 @@ The acceptance properties (DESIGN.md §6):
 plus backpressure, deadlines, bucket flushes, and the service model.
 """
 import jax
-import numpy as np
 import pytest
 
-from _hypothesis_shim import HAVE_HYPOTHESIS, given, settings, st
+from _hypothesis_shim import given, settings, st
 from repro.core import CacheConfig, RouterConfig, TweakLLMEngine, router
 from repro.models import ModelConfig, build_model
 from repro.models.embedder import init_embedder, tiny_embedder_config
 from repro.serving import (GenerateConfig, Generator, QueueFull,
                            SamplerConfig, Scheduler, SchedulerConfig,
-                           SimClock, poisson_trace, replay_trace)
+                           SimClock, replay_trace)
 from repro.tokenizer import HashWordTokenizer
 
 VOCAB = 4096

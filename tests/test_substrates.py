@@ -1,15 +1,12 @@
 """Tokenizer, data generators, training loop, checkpoint round-trip."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_shim import given, settings, st
 
 from repro.checkpoint import load_checkpoint, latest_checkpoint, save_checkpoint
 from repro.data import (QuestionPairGenerator, WorkloadGenerator,
-                        synthesize_response, token_stream_batches)
+                        token_stream_batches)
 from repro.models import ModelConfig, build_model
 from repro.tokenizer import HashWordTokenizer
 from repro.training import AdamWConfig, init_opt_state, make_train_step

@@ -6,10 +6,9 @@ architecture family, plus tweak-prompt construction protocol checks.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import tweak
-from repro.models import (ATTN, LOCAL_ATTN, MAMBA2, MOE, RGLRU, ModelConfig,
+from repro.models import (LOCAL_ATTN, MAMBA2, MOE, RGLRU, ModelConfig,
                           build_model)
 
 B, S, V = 2, 12, 256
