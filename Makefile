@@ -2,7 +2,7 @@
 
 PYTHONPATH_PREFIX := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench bench-scheduler bench-index bench-smoke bench-baseline dev-deps lint
+.PHONY: test bench bench-scheduler bench-index bench-generate bench-smoke bench-baseline dev-deps lint
 
 test:
 	$(PYTHONPATH_PREFIX) python -m pytest -x -q
@@ -16,6 +16,10 @@ bench-scheduler:
 # full IVF-vs-flat sweep; emits the repo-standard trajectory file
 bench-index:
 	$(PYTHONPATH_PREFIX) python -m benchmarks.run --only index --json BENCH_index.json
+
+# fused-vs-host decode loop sweep; emits the repo-standard trajectory file
+bench-generate:
+	$(PYTHONPATH_PREFIX) python -m benchmarks.run --only generate --json BENCH_generate.json
 
 # the CI perf gate, runnable locally: scaled-down suites + regression check
 bench-smoke:

@@ -9,11 +9,13 @@ Prints ``name,us_per_call,derived`` CSV rows:
   roofline_*  dry-run roofline terms per (arch x shape)    (§Roofline)
   scheduler   coalesced-vs-per-request + latency sweeps    (DESIGN.md §6)
   index       clustered (IVF) vs flat cache lookup         (DESIGN.md §7)
+  generate    fused on-device vs host-loop decode          (DESIGN.md §8)
 
   PYTHONPATH=src python -m benchmarks.run [--only fig2,...] \
       [--smoke] [--json BENCH_ci.json]
 
-``--smoke`` runs the scaled-down CI subset (index/scheduler/microbench)
+``--smoke`` runs the scaled-down CI subset
+(index/scheduler/microbench/generate)
 — the perf-gate job in .github/workflows/ci.yml.  ``--json`` dumps every
 emitted metric in the repo-standard BENCH_*.json format that
 ``benchmarks.check_regression`` compares against a checked-in baseline.
@@ -29,8 +31,8 @@ import time
 import traceback
 
 SUITES = ("fig2", "fig34567", "fig89", "microbench", "roofline", "scheduler",
-          "index")
-SMOKE_SUITES = ("microbench", "index", "scheduler")
+          "index", "generate")
+SMOKE_SUITES = ("microbench", "index", "scheduler", "generate")
 SCHEMA = "tweakllm-bench/v1"
 
 
@@ -65,9 +67,9 @@ def main() -> None:
     default = SMOKE_SUITES if args.smoke else SUITES
     only = tuple(args.only.split(",")) if args.only else default
 
-    from . import (bench_index, bench_scheduler, fig2_precision_recall,
-                   fig34567_quality, fig89_cost_analysis, microbench,
-                   roofline)
+    from . import (bench_generate, bench_index, bench_scheduler,
+                   fig2_precision_recall, fig34567_quality,
+                   fig89_cost_analysis, microbench, roofline)
     mods = {
         "fig2": fig2_precision_recall,
         "fig34567": fig34567_quality,
@@ -76,6 +78,7 @@ def main() -> None:
         "roofline": roofline,
         "scheduler": bench_scheduler,
         "index": bench_index,
+        "generate": bench_generate,
     }
     print("name,us_per_call,derived")
     failures = 0

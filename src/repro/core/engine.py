@@ -22,6 +22,7 @@ first EOS), never the padded bucket length.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -102,6 +103,10 @@ class TweakLLMEngine:
         # host-side mirror of cached texts (display only; tokens are truth)
         self._text_store: Dict[int, Tuple[str, str]] = {}
         self._insert_seq = 0
+        # per-batch seed counter threaded into every Big/Small generate
+        # call: distinct serve batches sample from distinct key streams
+        # (the seed replayed PRNGKey(0) for every batch)
+        self._seed_seq = itertools.count()
 
         self._embed = jax.jit(
             lambda p, t, m: embed_encode(p, t, m, embedder_cfg))
@@ -183,24 +188,31 @@ class TweakLLMEngine:
                                  if not miss_mask[i])))
 
     # ------------------------------------------------------------- paths
+    def _next_seed(self) -> int:
+        return next(self._seed_seq)
+
     def _decode_cached(self, slot: int) -> str:
         toks = np.asarray(self.state["r_tokens"][slot])
         mask = np.asarray(self.state["r_mask"][slot])
         return self.tok.decode_ids([int(t) for t, m in zip(toks, mask) if m > 0])
 
-    def _strip_generated(self, row: np.ndarray) -> Tuple[List[int], int]:
-        """Split a generated row at its first EOS.
+    def _decode_cached_query(self, slot: int) -> str:
+        """Decode a slot's cached QUERY tokens (BOS stripped)."""
+        toks = np.asarray(self.state["q_tokens"][slot])
+        mask = np.asarray(self.state["q_mask"][slot])
+        return self.tok.decode_ids([int(t) for t, m in zip(toks, mask)
+                                    if m > 0 and int(t) != self.tok.bos])
 
-        Returns (visible ids — everything before EOS, n real generated
-        tokens — including the terminating EOS).  The generator pads
-        early-finished rows with EOS, so this also removes bucket padding.
+    @staticmethod
+    def _visible_ids(row: np.ndarray, n_gen: int, ended: bool) -> List[int]:
+        """Visible ids of a generated row from its device-reported length.
+
+        ``n_gen`` counts real generated tokens including the terminating
+        EOS when ``ended``; the visible response is everything before it.
+        The lengths come back from the fused decode loop, so no per-row
+        EOS scan is needed here.
         """
-        ids = [int(t) for t in row]
-        eos = self.tok.eos
-        if eos in ids:
-            p = ids.index(eos)
-            return ids[:p], p + 1
-        return ids, len(ids)
+        return [int(t) for t in row[:n_gen - 1 if ended else n_gen]]
 
     def _tweak_encode_len(self, max_new_tokens: int) -> int:
         """Prompt-token budget for the tweak path, bucket-rounding-safe.
@@ -231,17 +243,29 @@ class TweakLLMEngine:
     def _run_tweak(self, queries, ids, top1_idx, responses, max_new_tokens,
                    gen_tokens):
         slots = [int(top1_idx[i]) for i in ids]
-        cached = [self._text_store.get(s, ("", "")) for s in slots]
+        # The device cache is the source of truth: a slot can be live there
+        # but absent from the host text mirror (offline-populated state,
+        # restored checkpoint, distributed shard).  Fall back to decoding
+        # the cached tokens so the Appendix-A tweak prompt is never built
+        # from empty strings.
+        cached = []
+        for s in slots:
+            c = self._text_store.get(s)
+            if c is None:
+                c = (self._decode_cached_query(s), self._decode_cached(s))
+            cached.append(c)
         texts = [tweak_lib.build_tweak_text(queries[i], cq, cr)
                  for i, (cq, cr) in zip(ids, cached)]
         toks, mask = self.tok.encode_batch(
             texts, self._tweak_encode_len(max_new_tokens))
         toks, mask, b = pad_to_buckets(toks, mask)
-        out = self.small.generate({"tokens": jnp.asarray(toks)},
-                                  max_new_tokens=max_new_tokens)[:b]
+        out, lengths, ended = self.small.generate_with_lengths(
+            {"tokens": jnp.asarray(toks)}, max_new_tokens=max_new_tokens,
+            seed=self._next_seed())
         for j, i in enumerate(ids):
-            visible, n_gen = self._strip_generated(out[j])
-            responses[i] = self.tok.decode_ids(visible)
+            n_gen = int(lengths[j])
+            responses[i] = self.tok.decode_ids(
+                self._visible_ids(out[j], n_gen, bool(ended[j])))
             self.stats.small_tokens += n_gen
             self.stats.tweak += 1
             gen_tokens[i] = n_gen
@@ -285,11 +309,13 @@ class TweakLLMEngine:
         texts = [queries[i] for i in ids]
         toks, mask = self.tok.encode_batch(texts, self.max_query_len)
         toks, mask, b = pad_to_buckets(toks, mask)
-        out = self.big.generate({"tokens": jnp.asarray(toks)},
-                                max_new_tokens=max_new_tokens)[:b]
+        out, lengths, ended = self.big.generate_with_lengths(
+            {"tokens": jnp.asarray(toks)}, max_new_tokens=max_new_tokens,
+            seed=self._next_seed())
         resp_tokens, resp_texts = [], []
         for j, i in enumerate(ids):
-            visible, n_gen = self._strip_generated(out[j])
+            n_gen = int(lengths[j])
+            visible = self._visible_ids(out[j], n_gen, bool(ended[j]))
             resp_text = self.tok.decode_ids(visible)
             responses[i] = resp_text
             resp_tokens.append(visible)

@@ -2,6 +2,15 @@
 
 ``Model`` bundles (cfg, init, forward/loss, prefill, decode_step) so the
 serving engine, trainer and dry-run treat every architecture uniformly.
+
+Decode contract (DESIGN.md §8): ``decode_step`` must be a pure,
+shape-stable function of ``(params, token (B,), caches)`` — the cache
+pytree it returns must have exactly the structure/shapes/dtypes of the one
+it received.  The serving generator runs it inside a jitted
+``jax.lax.while_loop`` (the fused decode loop), where any shape or
+structure change in the carry is a compile error.  All architectures here
+(ring-buffered KV attention incl. the Pallas decode kernel, Mamba2 SSM
+state, RG-LRU state, enc-dec cross caches) satisfy this by construction.
 """
 from __future__ import annotations
 

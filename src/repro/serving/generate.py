@@ -1,20 +1,32 @@
-"""Batched generation loop: jitted prefill + jitted decode steps.
+"""Batched generation: jitted prefill + a fused on-device decode loop.
 
-Host drives the loop (early-exit when every sequence hit EOS); the compiled
-artifacts are cached per (batch, prompt_len) bucket by jax.jit itself.
+The decode loop is a single jitted ``jax.lax.while_loop`` (DESIGN.md §8)
+carrying ``(step, token, caches, key, done, tokens, lengths)``: one device
+call returns the whole ``(B, max_new_tokens)`` block plus per-row REAL
+generated lengths, replacing ``max_new_tokens`` sequential decode
+dispatches (and as many host syncs) with exactly one of each.  Finished
+rows keep emitting EOS inside the loop (done-masking), the loop exits
+early once every row has emitted EOS, and the per-step key split matches
+the host loop exactly, so fused and host decode are byte-identical.
+
+The original host-driven loop is retained behind
+``GenerateConfig(fused=False)`` (or ``generate(..., fused=False)``) as the
+differential-testing oracle; compiled artifacts are cached per
+(batch, prompt_len, max_new_tokens) bucket by ``jax.jit`` itself.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Optional
+import itertools
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
-from .sampler import SamplerConfig, sample
+from .sampler import SamplerConfig, masked_sample, sample
 
 
 @dataclasses.dataclass(frozen=True)
@@ -22,6 +34,9 @@ class GenerateConfig:
     max_new_tokens: int = 32
     eos_id: int = 2
     sampler: SamplerConfig = SamplerConfig()
+    # Fused on-device lax.while_loop decode (default).  False falls back to
+    # the host-driven per-step loop — the differential-testing oracle.
+    fused: bool = True
 
 
 class Generator:
@@ -31,6 +46,9 @@ class Generator:
         self.model = model
         self.params = params
         self.cfg = gen_cfg
+        # Fallback per-call seeds when the caller threads none: every batch
+        # gets a fresh key stream instead of replaying PRNGKey(0) forever.
+        self._auto_seed = itertools.count()
 
         @functools.partial(jax.jit, static_argnames=("capacity",))
         def _prefill(params, batch, capacity):
@@ -42,29 +60,122 @@ class Generator:
             nxt = sample(key, logits, gen_cfg.sampler)
             return nxt, caches
 
+        @functools.partial(jax.jit, static_argnames=("mnt",))
+        def _decode_fused(params, logits0, caches, key, mnt):
+            """Whole decode in ONE device call.
+
+            Returns (tokens (B, mnt) — EOS-padded past each row's end,
+            lengths (B,) — real generated tokens including the terminating
+            EOS, ended (B,) — whether the row emitted EOS within budget).
+            """
+            eos = gen_cfg.eos_id
+            b = logits0.shape[0]
+            # Step 0 samples from the prefill logits with the unsplit key —
+            # the exact key schedule of the host loop.
+            tok = sample(key, logits0, gen_cfg.sampler)
+            done = tok == eos
+            toks = jnp.full((b, mnt), eos, jnp.int32)
+            toks = jax.lax.dynamic_update_slice_in_dim(
+                toks, tok[:, None], 0, axis=1)
+            lengths = jnp.where(done, 1, mnt).astype(jnp.int32)
+
+            def cond(carry):
+                step, _, _, _, done, _, _ = carry
+                return (step < mnt) & ~jnp.all(done)
+
+            def body(carry):
+                step, tok, caches, key, done, toks, lengths = carry
+                key, sub = jax.random.split(key)
+                logits, caches = model.decode_step(params, tok, caches)
+                t, new_done = masked_sample(sub, logits, done, eos,
+                                            gen_cfg.sampler)
+                # A row finishing at column `step` generated step+1 real
+                # tokens (its EOS included) — recorded on device so the
+                # host never scans rows for EOS.
+                lengths = jnp.where(new_done & ~done, step + 1, lengths)
+                toks = jax.lax.dynamic_update_slice_in_dim(
+                    toks, t[:, None], step, axis=1)
+                return step + 1, t, caches, key, new_done, toks, lengths
+
+            carry = (jnp.int32(1), tok, caches, key, done, toks, lengths)
+            _, _, _, _, done, toks, lengths = jax.lax.while_loop(
+                cond, body, carry)
+            return toks, lengths, done
+
         self._prefill = _prefill
         self._step = _step
+        self._decode_fused = _decode_fused
 
     def generate(self, batch: Dict[str, jnp.ndarray], *,
-                 max_new_tokens: Optional[int] = None, seed: int = 0) -> np.ndarray:
-        """batch: {tokens (B,S), [frames|prefix_embeds]} -> (B, T_new) ids."""
-        mnt = max_new_tokens or self.cfg.max_new_tokens
+                 max_new_tokens: Optional[int] = None,
+                 seed: Optional[int] = None,
+                 fused: Optional[bool] = None) -> np.ndarray:
+        """batch: {tokens (B,S), [frames|prefix_embeds]} -> (B, T_new) ids.
+
+        Rows that finish early are EOS-padded out to ``max_new_tokens``.
+        """
+        return self.generate_with_lengths(
+            batch, max_new_tokens=max_new_tokens, seed=seed, fused=fused)[0]
+
+    def generate_with_lengths(
+            self, batch: Dict[str, jnp.ndarray], *,
+            max_new_tokens: Optional[int] = None,
+            seed: Optional[int] = None,
+            fused: Optional[bool] = None,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Generate and return (tokens (B, T_new), lengths (B,), ended (B,)).
+
+        ``lengths`` counts each row's REAL generated tokens — up to and
+        including its terminating EOS when ``ended`` is True, the full
+        budget otherwise.  ``max_new_tokens=0`` is an explicit request for
+        nothing: returns an empty (B, 0) block with zero-length rows and
+        runs no device work at all.
+        """
+        # `is None`, not falsiness: an explicit max_new_tokens=0 must not
+        # silently fall back to the config default.
+        mnt = self.cfg.max_new_tokens if max_new_tokens is None else max_new_tokens
+        if mnt < 0:
+            raise ValueError(f"max_new_tokens must be >= 0, got {mnt}")
         b, s = batch["tokens"].shape
+        if mnt == 0:
+            return (np.zeros((b, 0), np.int32), np.zeros((b,), np.int32),
+                    np.zeros((b,), bool))
+        if seed is None:
+            seed = next(self._auto_seed)
+        use_fused = self.cfg.fused if fused is None else fused
         capacity = s + mnt + 1
         if self.model.cfg.num_prefix_tokens:
             capacity += self.model.cfg.num_prefix_tokens
         logits, caches = self._prefill(self.params, batch, capacity)
         key = jax.random.PRNGKey(seed)
+        if use_fused:
+            toks, lengths, ended = self._decode_fused(
+                self.params, logits, caches, key, mnt)
+            return np.asarray(toks), np.asarray(lengths), np.asarray(ended)
+        return self._host_loop(logits, caches, key, mnt)
+
+    def _host_loop(self, logits, caches, key, mnt: int):
+        """Host-driven per-step decode: the differential-testing oracle.
+
+        One device dispatch + one host sync per token; same sampling, key
+        schedule, done-masking, and outputs as the fused loop.
+        """
+        eos = self.cfg.eos_id
         tok = sample(key, logits, self.cfg.sampler)
-        out = [np.asarray(tok)]
-        done = np.asarray(tok) == self.cfg.eos_id
-        for i in range(mnt - 1):
+        t = np.asarray(tok)
+        b = t.shape[0]
+        out = np.full((b, mnt), eos, np.int32)
+        out[:, 0] = t
+        done = t == eos
+        lengths = np.where(done, 1, mnt).astype(np.int32)
+        for i in range(1, mnt):
             if done.all():
                 break
             key, sub = jax.random.split(key)
             tok, caches = self._step(self.params, tok, caches, sub)
             t = np.asarray(tok)
-            t = np.where(done, self.cfg.eos_id, t)
-            out.append(t)
-            done |= t == self.cfg.eos_id
-        return np.stack(out, axis=1)  # (B, T_new)
+            t = np.where(done, eos, t)
+            out[:, i] = t
+            lengths[~done & (t == eos)] = i + 1
+            done |= t == eos
+        return out, lengths, done

@@ -27,3 +27,17 @@ def sample(key, logits, cfg: SamplerConfig):
         kth = jax.lax.top_k(logits, cfg.top_k)[0][..., -1:]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def masked_sample(key, logits, done, eos_id: int, cfg: SamplerConfig):
+    """Decode-loop step sampler with done-masking.
+
+    Samples (B,) ids, forces rows already finished to keep emitting EOS,
+    and returns the updated done mask.  Used by the fused on-device decode
+    loop; the host-loop oracle applies the identical masking inline on the
+    host side (same semantics, same key usage: one draw per step, even for
+    finished rows), which the fused-vs-host differential tests pin down.
+    """
+    t = sample(key, logits, cfg)
+    t = jnp.where(done, eos_id, t)
+    return t, done | (t == eos_id)

@@ -189,6 +189,71 @@ def test_handle_batch_result_metadata(stack):
     assert res.big_tokens == eng.stats.big_tokens
 
 
+def test_engine_max_new_tokens_zero_bills_nothing(stack):
+    """Regression: an explicit max_new_tokens=0 used to fall back to the
+    config default (32 tokens generated and billed)."""
+    eng = _engine(stack)
+    rs = eng.handle_batch(["a question served with a zero token budget"],
+                          max_new_tokens=0)
+    assert rs == [""]
+    assert eng.stats.big_tokens == 0 and eng.stats.small_tokens == 0
+    assert eng.stats.miss == 1
+
+
+class _SeedSpy:
+    """Wraps a Generator, recording the seed threaded into each call."""
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.model = inner.model
+        self.seeds = []
+
+    def generate_with_lengths(self, batch, *, seed=None, **kw):
+        self.seeds.append(seed)
+        return self._inner.generate_with_lengths(batch, seed=seed, **kw)
+
+
+def test_per_batch_seed_threading(stack):
+    """Regression: every generate call defaulted to seed=0, so stochastic
+    serve batches all sampled from identical key streams.  The engine now
+    threads a distinct counter-derived seed into every Big/Small call."""
+    eng = _engine(stack)
+    eng.big = big_spy = _SeedSpy(eng.big)
+    eng.small = small_spy = _SeedSpy(eng.small)
+    eng.handle_batch(["seed stream question about tides"], max_new_tokens=4)
+    eng.handle_batch(["completely different topic entirely volcano lava"],
+                     max_new_tokens=4)
+    seeds = big_spy.seeds + small_spy.seeds
+    assert len(seeds) == 2
+    assert None not in seeds
+    assert seeds[0] != seeds[1]
+
+
+def test_tweak_prompt_survives_text_store_miss(stack, monkeypatch):
+    """Regression: a slot live in the device cache but absent from the host
+    text mirror built the Appendix-A tweak prompt from empty strings.  The
+    engine must fall back to decoding the cached tokens."""
+    from repro.core import tweak as tweak_lib
+    eng = _engine(stack, tweak_threshold=-1.0)   # force the TWEAK path
+    eng.populate(["a seeded question about gardening"], ["a cached answer"])
+    slot = int(np.asarray(eng.state["valid"]).nonzero()[0][0])
+    cached_resp = eng._decode_cached(slot)
+    assert cached_resp                       # the device cache has the text
+    eng._text_store.clear()                  # simulate restored checkpoint
+    captured = []
+    real_build = tweak_lib.build_tweak_text
+    monkeypatch.setattr(tweak_lib, "build_tweak_text",
+                        lambda q, cq, cr: captured.append((q, cq, cr))
+                        or real_build(q, cq, cr))
+    rs, meta = eng.handle_batch(["an unrelated question about sailing"],
+                                max_new_tokens=4, collect_meta=True)
+    assert meta[0]["decision"] == router.TWEAK
+    (q, cq, cr), = captured
+    assert cr == cached_resp                 # cached response, not ""
+    assert cq != ""                          # cached query decoded too
+    assert isinstance(rs[0], str) and rs[0]
+
+
 def test_gptcache_baseline_verbatim(stack):
     tok, ecfg, eparams, big, small = stack
     rcfg = tiny_reranker_config(VOCAB)

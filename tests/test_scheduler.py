@@ -73,13 +73,18 @@ EXACT_OR_MISS = {"tweak_threshold": 0.9999}
 
 
 class _CountingGenerator:
-    """Wraps a Generator, counting generate() calls and rows."""
+    """Wraps a Generator, counting generation calls and rows."""
 
     def __init__(self, inner):
         self._inner = inner
         self.model = inner.model
         self.calls = 0
         self.rows = 0
+
+    def generate_with_lengths(self, batch, **kw):
+        self.calls += 1
+        self.rows += int(batch["tokens"].shape[0])
+        return self._inner.generate_with_lengths(batch, **kw)
 
     def generate(self, batch, **kw):
         self.calls += 1
