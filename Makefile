@@ -2,7 +2,7 @@
 
 PYTHONPATH_PREFIX := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench bench-scheduler bench-index bench-generate bench-smoke bench-baseline dev-deps lint
+.PHONY: test bench bench-scheduler bench-index bench-generate bench-prefill bench-smoke bench-baseline dev-deps lint
 
 test:
 	$(PYTHONPATH_PREFIX) python -m pytest -x -q
@@ -20,6 +20,10 @@ bench-index:
 # fused-vs-host decode loop sweep; emits the repo-standard trajectory file
 bench-generate:
 	$(PYTHONPATH_PREFIX) python -m benchmarks.run --only generate --json BENCH_generate.json
+
+# prefix-KV-reuse + suffix-bucketed vs full-bucket tweak prefill sweep
+bench-prefill:
+	$(PYTHONPATH_PREFIX) python -m benchmarks.run --only prefill --json BENCH_prefill.json
 
 # the CI perf gate, runnable locally: scaled-down suites + regression check
 bench-smoke:

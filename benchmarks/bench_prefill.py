@@ -1,0 +1,146 @@
+"""Shared-prefix KV reuse + suffix bucketing vs full-bucket prefill.
+
+Before DESIGN.md §9, every TWEAK request re-prefilled the byte-identical
+Appendix-A instruction prefix from scratch AND padded its prompt to the
+worst-case ``_tweak_encode_len`` bucket — a short cached response paid
+attention FLOPs for the whole budget.  This bench measures the tweak hot
+path's prefill both ways on the same model:
+
+* **full**   — prefill ``[prefix | suffix]`` padded to the worst-case
+  tweak bucket (the old engine behaviour),
+* **prefix** — prefill only the suffix padded to ITS length bucket,
+  attending over the prefix KV cache (built once, reused).
+
+Reported tokens/s uses the REAL useful prompt tokens (prefix + actual
+suffix) for both, so the ``speedup`` ratio is the end-to-end per-hit
+prefill win and machine-independent; it is gated by
+``benchmarks/check_regression.py`` in the ``bench-smoke`` CI job.  A
+``speedup_samelen`` ratio isolates pure prefix reuse (both sides padded
+to the same suffix bucket) from the bucketing win.  Full (non-smoke)
+runs also report end-to-end per-hit generate latency (prefill + fused
+decode).
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tweak as tweak_lib
+from repro.models import ModelConfig, build_model
+from repro.serving import GenerateConfig, Generator, SamplerConfig
+from repro.serving.batcher import bucket_len, floor_len_bucket
+from repro.tokenizer import HashWordTokenizer
+from .common import csv_row
+
+VOCAB = 4096
+MNT = 16
+
+
+def _generator() -> Generator:
+    # The tweak-path small-LLM shape of the serving benches, with the
+    # length-invariant fixed-block flash attention the byte-identical
+    # prefix contract requires (DESIGN.md §9).
+    cfg = ModelConfig(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                      d_ff=128, vocab_size=VOCAB, max_seq_len=1024,
+                      dtype="float32", attention_impl="xla_flash",
+                      flash_block_q=32, flash_block_k=32)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return Generator(m, params, GenerateConfig(
+        max_new_tokens=MNT, sampler=SamplerConfig(vocab_size=VOCAB)))
+
+
+def _tokens(b, s, seed=1):
+    return jax.random.randint(jax.random.PRNGKey(seed), (b, s), 5, VOCAB)
+
+
+def _time_pair(fn_a, fn_b, reps):
+    """Median seconds per call for two fns, interleaved A/B (bench_generate's
+    discipline: CPU-quota stalls on shared runners hit both alike, keeping
+    the gated RATIO stable)."""
+    fn_a(), fn_b()                                     # compile both
+    ts_a, ts_b = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        ts_a.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        ts_b.append(time.perf_counter() - t0)
+    return statistics.median(ts_a), statistics.median(ts_b)
+
+
+def bench_prefill(batches=(1, 8), suffixes=(32, 96), reps=5, e2e=True):
+    """Prefix-reuse + bucketed suffix vs worst-case-bucket full prefill."""
+    gen = _generator()
+    tok = HashWordTokenizer(VOCAB)
+    prefix_ids = tweak_lib.tweak_prefix_ids(tok)
+    p = len(prefix_ids)
+    msl = gen.model.cfg.max_seq_len
+    # The engine's worst-case tweak bucket at this config: every request
+    # used to pay prefill over this whole length.
+    full_bucket = floor_len_bucket(msl - MNT - 1)
+    for b in batches:
+        pc = gen.build_prefix_cache(prefix_ids, b)
+        pre = jnp.broadcast_to(jnp.asarray(prefix_ids, jnp.int32)[None, :],
+                               (b, p))
+        for s_real in suffixes:
+            s_bucket = bucket_len(s_real)
+            suf = _tokens(b, s_real)
+            pad = jnp.zeros((b, s_bucket - s_real), jnp.int32)
+            suf_b = jnp.concatenate([suf, pad], axis=1)
+            full = jnp.concatenate(
+                [pre, suf, jnp.zeros((b, full_bucket - p - s_real),
+                                     jnp.int32)], axis=1)
+            # same content, both padded to the SAME suffix bucket: isolates
+            # the pure prefix-KV-reuse win from the bucketing win
+            samelen = jnp.concatenate([pre, suf_b], axis=1)
+            cap_full = full_bucket + MNT + 1
+            cap_pfx = p + s_bucket + MNT + 1
+
+            t_pfx, t_full = _time_pair(
+                lambda: gen._prefill_with_prefix(
+                    gen.params, {"tokens": suf_b}, cap_pfx, pc.caches),
+                lambda: gen._prefill(gen.params, {"tokens": full}, cap_full),
+                reps)
+            t_same = _time_pair(
+                lambda: gen._prefill(gen.params, {"tokens": samelen},
+                                     p + s_bucket + MNT + 1),
+                lambda: (), reps)[0]
+            useful = b * (p + s_real)
+            derived = (f"full_us={t_full * 1e6:.0f};"
+                       f"tok_s_prefix={useful / t_pfx:.0f};"
+                       f"tok_s_full={useful / t_full:.0f};"
+                       f"prefix={p};bucket={s_bucket}/{full_bucket}")
+            extra = {}
+            if e2e:
+                g_pfx, g_full = _time_pair(
+                    lambda: gen.generate_with_lengths(
+                        {"tokens": suf_b}, max_new_tokens=MNT, seed=0,
+                        prefix_cache=pc)[0],
+                    lambda: gen.generate_with_lengths(
+                        {"tokens": full}, max_new_tokens=MNT, seed=0)[0],
+                    reps)
+                derived += (f";hit_ms_prefix={g_pfx * 1e3:.1f};"
+                            f"hit_ms_full={g_full * 1e3:.1f}")
+                extra["speedup_e2e"] = round(g_full / max(g_pfx, 1e-9), 2)
+            csv_row(f"prefill_b{b}_s{s_real}", t_pfx * 1e6, derived,
+                    speedup=round(t_full / max(t_pfx, 1e-9), 2),
+                    speedup_samelen=round(t_same / max(t_pfx, 1e-9), 2),
+                    **extra)
+
+
+def main(smoke: bool = False):
+    if smoke:
+        # CI perf-gate subset: one batch x one suffix bucket, no e2e
+        # decode timing (the decode loop has its own gated bench)
+        bench_prefill(batches=(8,), suffixes=(32,), reps=7, e2e=False)
+        return
+    bench_prefill()
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   scheduler   coalesced-vs-per-request + latency sweeps    (DESIGN.md §6)
   index       clustered (IVF) vs flat cache lookup         (DESIGN.md §7)
   generate    fused on-device vs host-loop decode          (DESIGN.md §8)
+  prefill     prefix-KV reuse + suffix buckets vs full     (DESIGN.md §9)
 
   PYTHONPATH=src python -m benchmarks.run [--only fig2,...] \
       [--smoke] [--json BENCH_ci.json]
@@ -31,8 +32,8 @@ import time
 import traceback
 
 SUITES = ("fig2", "fig34567", "fig89", "microbench", "roofline", "scheduler",
-          "index", "generate")
-SMOKE_SUITES = ("microbench", "index", "scheduler", "generate")
+          "index", "generate", "prefill")
+SMOKE_SUITES = ("microbench", "index", "scheduler", "generate", "prefill")
 SCHEMA = "tweakllm-bench/v1"
 
 
@@ -67,8 +68,8 @@ def main() -> None:
     default = SMOKE_SUITES if args.smoke else SUITES
     only = tuple(args.only.split(",")) if args.only else default
 
-    from . import (bench_generate, bench_index, bench_scheduler,
-                   fig2_precision_recall, fig34567_quality,
+    from . import (bench_generate, bench_index, bench_prefill,
+                   bench_scheduler, fig2_precision_recall, fig34567_quality,
                    fig89_cost_analysis, microbench, roofline)
     mods = {
         "fig2": fig2_precision_recall,
@@ -79,6 +80,7 @@ def main() -> None:
         "scheduler": bench_scheduler,
         "index": bench_index,
         "generate": bench_generate,
+        "prefill": bench_prefill,
     }
     print("name,us_per_call,derived")
     failures = 0

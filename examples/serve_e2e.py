@@ -63,8 +63,12 @@ def main():
     big_cfg = ModelConfig(name="big-lm", num_layers=4, d_model=128,
                           num_heads=8, num_kv_heads=4, d_ff=256,
                           vocab_size=VOCAB, max_seq_len=1024, dtype="float32")
+    # fixed-block flash attention qualifies the small model for the
+    # engine's shared-prefix KV reuse on TWEAK hits (DESIGN.md §9)
     small_cfg = big_cfg.replace(name="small-lm", num_layers=2, d_model=96,
-                                num_heads=4, num_kv_heads=2, d_ff=192)
+                                num_heads=4, num_kv_heads=2, d_ff=192,
+                                attention_impl="xla_flash",
+                                flash_block_q=32, flash_block_k=32)
     big_m, big_p = pretrain_lm(big_cfg, args.steps, 1, tok)
     small_m, small_p = pretrain_lm(small_cfg, args.steps, 2, tok)
 

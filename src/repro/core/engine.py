@@ -14,10 +14,20 @@ TWEAK hits update LRU/LFU bookkeeping in the same step), and a miss batch
 commits to the cache through one jitted ``insert_batch`` call with donated
 buffers — O(1) host↔device syncs per serve batch (DESIGN.md §5).
 
+The TWEAK path is prefix-cached (DESIGN.md §9): the byte-identical
+Appendix-A instruction prefix is prefilled once per (small model, batch
+bucket) and reused as KV by every tweak request, which then prefills
+only its variable suffix, length-bucketed by REAL suffix length instead
+of padded to the worst-case tweak budget.  Small models whose
+architecture can't guarantee byte-identical prefix reuse (recurrent
+mixers, sliding windows, enc-dec, naive-softmax attention) fall back to
+the full-prompt prefill explicitly.
+
 Cost accounting mirrors the paper's §5.2.3 analysis: per-token cost ratio
 ``big_cost_per_token`` : ``small_cost_per_token`` defaults to 25:1.
 Token counts are REAL generated tokens (up to and including each row's
-first EOS), never the padded bucket length.
+first EOS), never the padded bucket length, and prompt (input) tokens
+are billed at real unpadded lengths alongside generated ones.
 """
 from __future__ import annotations
 
@@ -47,20 +57,34 @@ class EngineStats:
     miss: int = 0
     tweak: int = 0
     exact: int = 0
-    big_tokens: int = 0
-    small_tokens: int = 0
+    big_tokens: int = 0             # REAL generated tokens, Big LLM
+    small_tokens: int = 0           # REAL generated tokens, Small LLM
+    # The paper's §5.2.3 cost analysis bills INPUT tokens too.  Prompt
+    # counts are real (unpadded) prefilled lengths, never the padded
+    # bucket: the Big LLM's prompt is the bare query, the Small LLM's is
+    # the Appendix-A tweak prompt (shared prefix included — the KV may be
+    # cached, but a provider still bills the tokens).
+    big_prompt_tokens: int = 0
+    small_prompt_tokens: int = 0
+    # Real query tokens across ALL requests: the prompt volume an
+    # uncached all-Big deployment would have ingested (baseline input).
+    baseline_prompt_tokens: int = 0
     big_cost_per_token: float = 25.0
     small_cost_per_token: float = 1.0
 
     @property
     def cost(self) -> float:
-        return (self.big_tokens * self.big_cost_per_token
-                + self.small_tokens * self.small_cost_per_token)
+        return ((self.big_tokens + self.big_prompt_tokens)
+                * self.big_cost_per_token
+                + (self.small_tokens + self.small_prompt_tokens)
+                * self.small_cost_per_token)
 
     @property
     def baseline_cost(self) -> float:
-        """What the same generated-token volume would cost all-Big."""
-        return (self.big_tokens + self.small_tokens) * self.big_cost_per_token
+        """What the same traffic would cost all-Big: every query's prompt
+        plus the same generated-token volume, at the Big rate."""
+        return (self.big_tokens + self.small_tokens
+                + self.baseline_prompt_tokens) * self.big_cost_per_token
 
     @property
     def hit_rate(self) -> float:
@@ -81,6 +105,8 @@ class BatchResult:
     meta: List[dict]            # per row: sim, decision, band, gen_tokens
     big_tokens: int = 0         # tokens the Big LLM generated for this batch
     small_tokens: int = 0      # tokens the Small LLM generated for this batch
+    big_prompt_tokens: int = 0   # real (unpadded) prompt tokens, Big LLM
+    small_prompt_tokens: int = 0  # real (unpadded) prompt tokens, Small LLM
 
 
 class TweakLLMEngine:
@@ -89,7 +115,7 @@ class TweakLLMEngine:
                  big: Generator, small: Generator,
                  cache_cfg: cache_lib.CacheConfig,
                  router_cfg: router_lib.RouterConfig = router_lib.RouterConfig(),
-                 max_query_len: int = 64):
+                 max_query_len: int = 64, use_prefix_cache: bool = True):
         self.tok = tokenizer
         self.embedder_params = embedder_params
         self.embedder_cfg = embedder_cfg
@@ -98,8 +124,16 @@ class TweakLLMEngine:
         self.cache_cfg = cache_cfg
         self.router_cfg = router_cfg
         self.max_query_len = max_query_len
+        self.use_prefix_cache = use_prefix_cache
         self.state = cache_lib.init_cache(cache_cfg)
         self.stats = EngineStats()
+        # Shared tweak-instruction prefix KV, one PrefixCache per batch
+        # bucket (DESIGN.md §9), invalidated when the small generator's
+        # model/sampler config or the prefix tokens change.
+        self._prefix_ids: Optional[Tuple[int, ...]] = None
+        self._prefix_caches: Dict[int, object] = {}
+        self._prefix_sig = None
+        self._static_counts: Optional[Tuple[int, int]] = None
         # host-side mirror of cached texts (display only; tokens are truth)
         self._text_store: Dict[int, Tuple[str, str]] = {}
         self._insert_seq = 0
@@ -120,10 +154,16 @@ class TweakLLMEngine:
 
     # ------------------------------------------------------------- embed
     def embed_texts(self, texts: List[str]) -> jnp.ndarray:
+        return self._embed_with_lengths(texts)[0]
+
+    def _embed_with_lengths(self, texts: List[str]):
+        """(embeddings (n, D), real query-token lengths (n,)) in one encode."""
         toks, mask = self.tok.encode_batch(texts, self.max_query_len)
+        qlens = mask.sum(axis=1).astype(np.int64)
         toks, mask, b = pad_to_buckets(toks, mask)
-        return self._embed(self.embedder_params, jnp.asarray(toks),
+        embs = self._embed(self.embedder_params, jnp.asarray(toks),
                            jnp.asarray(mask))[:b]
+        return embs, qlens
 
     # ------------------------------------------------------------- serve
     def handle_batch(self, queries: List[str], *, max_new_tokens: int = 32,
@@ -144,7 +184,8 @@ class TweakLLMEngine:
         # mutation (lookup touches recency on device; EXACT rows bill
         # stats) so a ValueError cannot leave half-served accounting
         self._tweak_encode_len(max_new_tokens)
-        embs = self.embed_texts(queries)
+        embs, qlens = self._embed_with_lengths(queries)
+        self.stats.baseline_prompt_tokens += int(qlens.sum())
         self.state, scores, idxs, dec = self._lookup_touch(self.state, embs)
         top1 = np.asarray(scores[:, 0])
         top1_idx = np.asarray(idxs[:, 0])
@@ -152,6 +193,7 @@ class TweakLLMEngine:
 
         responses: List[Optional[str]] = [None] * n
         gen_tokens = [0] * n
+        prompt_tokens = [0] * n
 
         # EXACT: verbatim cached response
         for i in np.nonzero(decisions == router_lib.EXACT)[0]:
@@ -163,12 +205,12 @@ class TweakLLMEngine:
         tweak_ids = np.nonzero(decisions == router_lib.TWEAK)[0]
         if len(tweak_ids):
             self._run_tweak(queries, tweak_ids, top1_idx, responses,
-                            max_new_tokens, gen_tokens)
+                            max_new_tokens, gen_tokens, prompt_tokens)
         # MISS: big LLM generates from scratch + cache insert
         miss_ids = np.nonzero(decisions == router_lib.MISS)[0]
         if len(miss_ids):
             self._run_miss(queries, miss_ids, embs, responses,
-                           max_new_tokens, gen_tokens)
+                           max_new_tokens, gen_tokens, prompt_tokens)
 
         self.stats.total += n
         # band_of mirrored on host: top1 is already here, so no extra
@@ -185,7 +227,11 @@ class TweakLLMEngine:
             big_tokens=int(sum(t for i, t in enumerate(gen_tokens)
                                if miss_mask[i])),
             small_tokens=int(sum(t for i, t in enumerate(gen_tokens)
-                                 if not miss_mask[i])))
+                                 if not miss_mask[i])),
+            big_prompt_tokens=int(sum(t for i, t in enumerate(prompt_tokens)
+                                      if miss_mask[i])),
+            small_prompt_tokens=int(sum(t for i, t in enumerate(prompt_tokens)
+                                        if not miss_mask[i])))
 
     # ------------------------------------------------------------- paths
     def _next_seed(self) -> int:
@@ -214,6 +260,13 @@ class TweakLLMEngine:
         """
         return [int(t) for t in row[:n_gen - 1 if ended else n_gen]]
 
+    def _tweak_static_tokens(self, suffix_only: bool = False) -> int:
+        if self._static_counts is None:
+            self._static_counts = (
+                tweak_lib.static_token_count(self.tok),
+                tweak_lib.static_token_count(self.tok, suffix_only=True))
+        return self._static_counts[1 if suffix_only else 0]
+
     def _tweak_encode_len(self, max_new_tokens: int) -> int:
         """Prompt-token budget for the tweak path, bucket-rounding-safe.
 
@@ -221,7 +274,12 @@ class TweakLLMEngine:
         non-positive when ``max_new_tokens + 1 >= max_seq_len``, and even a
         positive budget can be rounded back past ``max_seq_len`` by
         ``pad_to_buckets`` (length buckets round UP).  Clamp to the largest
-        length bucket that still fits; raise when nothing fits.
+        length bucket that still fits; raise when nothing fits.  The budget
+        must also cover the static prompt segments (instruction + cues),
+        which cue-preserving truncation never drops — validating that HERE
+        keeps the handle_batch fail-fast guarantee: the alternative is a
+        ``ValueError`` out of ``_truncate_fields`` mid-serve, after lookup
+        already touched recency and EXACT rows billed stats.
         """
         msl = self.small.model.cfg.max_seq_len
         budget = msl - max_new_tokens - 1
@@ -230,18 +288,89 @@ class TweakLLMEngine:
                 f"max_new_tokens={max_new_tokens} leaves no room for the "
                 f"tweak prompt: small model max_seq_len={msl} requires "
                 f"max_new_tokens <= {msl - 2}")
-        if bucket_len(budget) + max_new_tokens + 1 <= msl:
-            return budget
-        clamped = floor_len_bucket(budget)
-        if bucket_len(clamped) + max_new_tokens + 1 > msl:
+        if bucket_len(budget) + max_new_tokens + 1 > msl:
+            budget = floor_len_bucket(budget)
+            if bucket_len(budget) + max_new_tokens + 1 > msl:
+                raise ValueError(
+                    f"max_new_tokens={max_new_tokens} leaves no length "
+                    f"bucket for the tweak prompt within small model "
+                    f"max_seq_len={msl} (smallest bucket rounds past it)")
+        statics = self._tweak_static_tokens()
+        if budget < statics:
             raise ValueError(
-                f"max_new_tokens={max_new_tokens} leaves no length bucket "
-                f"for the tweak prompt within small model "
-                f"max_seq_len={msl} (smallest bucket rounds past it)")
-        return clamped
+                f"max_new_tokens={max_new_tokens} leaves a {budget}-token "
+                f"tweak prompt budget, below the {statics} tokens the "
+                f"static Appendix-A segments need — lower max_new_tokens "
+                f"or raise the small model's max_seq_len={msl}")
+        return budget
+
+    # ------------------------------------------------- tweak prefix cache
+    def _tweak_prefix_ids(self) -> Tuple[int, ...]:
+        if self._prefix_ids is None:
+            self._prefix_ids = tuple(tweak_lib.tweak_prefix_ids(self.tok))
+        return self._prefix_ids
+
+    def _prefix_path_available(self) -> bool:
+        """Can the TWEAK path prefill over a shared-prefix KV cache?
+
+        Requires the small generator to expose the prefix API (wrapped
+        generators may not) and its architecture to support byte-identical
+        prefix prefill; recurrent / windowed / enc-dec small models fall
+        back to the full prefill explicitly (DESIGN.md §9).
+        """
+        return (self.use_prefix_cache
+                and getattr(self.small, "supports_prefix_prefill", False)
+                and callable(getattr(self.small, "build_prefix_cache", None)))
+
+    def _small_prefix_cache(self, batch: int):
+        """The tweak-instruction PrefixCache for one batch bucket.
+
+        Rebuilt from scratch whenever the small GENERATOR OBJECT, its
+        model config, sampler/generate config, or the prefix token ids
+        change — a stale prefix KV would silently corrupt every tweak
+        response.  The object identity term catches the config-identical
+        swap (same architecture, new checkpoint weights) that config
+        comparison alone would miss.
+        """
+        ids = self._tweak_prefix_ids()
+        sig = (id(self.small), self.small.model.cfg,
+               getattr(self.small, "cfg", None), ids)
+        if sig != self._prefix_sig:
+            self._prefix_caches.clear()
+            self._prefix_sig = sig
+        pc = self._prefix_caches.get(batch)
+        if pc is None:
+            pc = self.small.build_prefix_cache(ids, batch)
+            self._prefix_caches[batch] = pc
+        return pc
+
+    def _tweak_suffix_budget(self, max_new_tokens: int,
+                             prefix_len: int) -> Optional[int]:
+        """Per-row suffix-token budget for prefix-cached tweak prefill.
+
+        Same bucket-rounding discipline as ``_tweak_encode_len``, with the
+        prefix length reserved on top: any real suffix length within the
+        budget keeps ``prefix + bucket_len(suffix) + max_new_tokens + 1``
+        inside the small model's ``max_seq_len``.  Returns None when no
+        bucket fits — the caller then falls back to the full prefill path
+        (which ``_tweak_encode_len`` has already validated).
+        """
+        msl = self.small.model.cfg.max_seq_len
+        budget = msl - max_new_tokens - 1 - prefix_len
+        if budget < 1:
+            return None
+        if bucket_len(budget) + prefix_len + max_new_tokens + 1 > msl:
+            budget = floor_len_bucket(budget)
+            if bucket_len(budget) + prefix_len + max_new_tokens + 1 > msl:
+                return None
+        # the suffix's own static cues are untruncatable — if they don't
+        # fit, this path can't serve the request (the full path might)
+        if budget < self._tweak_static_tokens(suffix_only=True):
+            return None
+        return budget
 
     def _run_tweak(self, queries, ids, top1_idx, responses, max_new_tokens,
-                   gen_tokens):
+                   gen_tokens, prompt_tokens):
         slots = [int(top1_idx[i]) for i in ids]
         # The device cache is the source of truth: a slot can be live there
         # but absent from the host text mirror (offline-populated state,
@@ -254,21 +383,85 @@ class TweakLLMEngine:
             if c is None:
                 c = (self._decode_cached_query(s), self._decode_cached(s))
             cached.append(c)
-        texts = [tweak_lib.build_tweak_text(queries[i], cq, cr)
-                 for i, (cq, cr) in zip(ids, cached)]
-        toks, mask = self.tok.encode_batch(
-            texts, self._tweak_encode_len(max_new_tokens))
-        toks, mask, b = pad_to_buckets(toks, mask)
-        out, lengths, ended = self.small.generate_with_lengths(
-            {"tokens": jnp.asarray(toks)}, max_new_tokens=max_new_tokens,
-            seed=self._next_seed())
-        for j, i in enumerate(ids):
+        new_qs = [queries[i] for i in ids]
+        cqs = [cq for cq, _ in cached]
+        crs = [cr for _, cr in cached]
+
+        suffix_budget = None
+        if self._prefix_path_available():
+            suffix_budget = self._tweak_suffix_budget(
+                max_new_tokens, len(self._tweak_prefix_ids()))
+        if suffix_budget is None:
+            self._run_tweak_full(new_qs, cqs, crs, ids, responses,
+                                 max_new_tokens, gen_tokens, prompt_tokens)
+        else:
+            self._run_tweak_prefixed(new_qs, cqs, crs, ids, responses,
+                                     max_new_tokens, suffix_budget,
+                                     gen_tokens, prompt_tokens)
+
+    def _emit_tweak_rows(self, rows, ids, out, lengths, ended, responses,
+                         gen_tokens):
+        """Decode generated rows back into their batch positions + billing."""
+        for j, row in enumerate(rows):
+            i = ids[row]
             n_gen = int(lengths[j])
             responses[i] = self.tok.decode_ids(
                 self._visible_ids(out[j], n_gen, bool(ended[j])))
             self.stats.small_tokens += n_gen
             self.stats.tweak += 1
             gen_tokens[i] = n_gen
+
+    def _run_tweak_full(self, new_qs, cqs, crs, ids, responses,
+                        max_new_tokens, gen_tokens, prompt_tokens):
+        """Fallback: prefill the whole Appendix-A prompt (no prefix reuse)."""
+        toks, mask = tweak_lib.build_tweak_batch(
+            self.tok, new_qs, cqs, crs, self._tweak_encode_len(max_new_tokens))
+        real_lens = mask.sum(axis=1).astype(np.int64)
+        toks, mask, b = pad_to_buckets(toks, mask)
+        out, lengths, ended = self.small.generate_with_lengths(
+            {"tokens": jnp.asarray(toks)}, max_new_tokens=max_new_tokens,
+            seed=self._next_seed())
+        self._emit_tweak_rows(range(len(ids)), ids, out, lengths, ended,
+                              responses, gen_tokens)
+        for j, i in enumerate(ids):
+            prompt_tokens[i] = int(real_lens[j])
+            self.stats.small_prompt_tokens += int(real_lens[j])
+
+    def _run_tweak_prefixed(self, new_qs, cqs, crs, ids, responses,
+                            max_new_tokens, suffix_budget, gen_tokens,
+                            prompt_tokens):
+        """Hot path: shared-prefix KV reuse + length-bucketed suffixes.
+
+        Each row prefills only its variable suffix over the cached
+        instruction-prefix KV, and rows are grouped by ``bucket_len`` of
+        their REAL suffix length instead of all padding to the worst-case
+        tweak budget — short cached responses stop paying attention FLOPs
+        for the full ``_tweak_encode_len`` bucket (DESIGN.md §9).
+        """
+        prefix_ids = self._tweak_prefix_ids()
+        toks, mask = tweak_lib.build_tweak_suffix_batch(
+            self.tok, new_qs, cqs, crs, suffix_budget)
+        real_lens = mask.sum(axis=1).astype(np.int64)
+        groups: Dict[int, List[int]] = {}
+        for row, rl in enumerate(real_lens):
+            groups.setdefault(bucket_len(max(int(rl), 1)), []).append(row)
+        for bucket in sorted(groups):
+            rows = groups[bucket]
+            sub_t = toks[rows][:, :bucket]
+            sub_m = mask[rows][:, :bucket]
+            sub_t = pad_to_buckets(sub_t, sub_m)[0]
+            pc = self._small_prefix_cache(sub_t.shape[0])
+            out, lengths, ended = self.small.generate_with_lengths(
+                {"tokens": jnp.asarray(sub_t)},
+                max_new_tokens=max_new_tokens, seed=self._next_seed(),
+                prefix_cache=pc)
+            self._emit_tweak_rows(rows, ids, out, lengths, ended,
+                                  responses, gen_tokens)
+            for j, row in enumerate(rows):
+                i = ids[row]
+                real = len(prefix_ids) + int(real_lens[row])
+                prompt_tokens[i] = real
+                self.stats.small_prompt_tokens += real
 
     def _insert_entries(self, texts, resp_tokens, resp_texts, embs):
         """Commit entries to the cache in ONE jitted device call.
@@ -305,9 +498,10 @@ class TweakLLMEngine:
         self._insert_seq += 1
 
     def _run_miss(self, queries, ids, embs, responses, max_new_tokens,
-                  gen_tokens):
+                  gen_tokens, prompt_tokens):
         texts = [queries[i] for i in ids]
         toks, mask = self.tok.encode_batch(texts, self.max_query_len)
+        real_lens = mask.sum(axis=1).astype(np.int64)
         toks, mask, b = pad_to_buckets(toks, mask)
         out, lengths, ended = self.big.generate_with_lengths(
             {"tokens": jnp.asarray(toks)}, max_new_tokens=max_new_tokens,
@@ -321,8 +515,10 @@ class TweakLLMEngine:
             resp_tokens.append(visible)
             resp_texts.append(resp_text)
             self.stats.big_tokens += n_gen
+            self.stats.big_prompt_tokens += int(real_lens[j])
             self.stats.miss += 1
             gen_tokens[i] = n_gen
+            prompt_tokens[i] = int(real_lens[j])
         self._insert_entries(texts, resp_tokens, resp_texts,
                              embs[np.asarray(ids)])
 

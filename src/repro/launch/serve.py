@@ -40,8 +40,14 @@ def build_engine(*, vocab: int = 8192, threshold: float = 0.7,
     big_cfg = ModelConfig(name="big", num_layers=4, d_model=128, num_heads=8,
                           num_kv_heads=4, d_ff=256, vocab_size=vocab,
                           max_seq_len=1024, dtype="float32")
+    # The small (tweak) model uses fixed-block flash attention so the
+    # engine's shared-prefix KV reuse applies on every TWEAK hit
+    # (DESIGN.md §9) — naive/auto softmax would disqualify it from the
+    # byte-identical prefix-prefill contract.
     small_cfg = big_cfg.replace(name="small", num_layers=2, d_model=64,
-                                num_heads=4, num_kv_heads=2, d_ff=128)
+                                num_heads=4, num_kv_heads=2, d_ff=128,
+                                attention_impl="xla_flash",
+                                flash_block_q=32, flash_block_k=32)
     big_m, small_m = build_model(big_cfg), build_model(small_cfg)
     gen_cfg = GenerateConfig(max_new_tokens=16,
                              sampler=SamplerConfig(vocab_size=vocab))

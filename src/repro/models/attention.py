@@ -84,12 +84,24 @@ def _attend_naive(q, k, v, q_pos, k_pos, causal, window, extra_mask=None):
 
 def _attend_xla_flash(q, k, v, q_pos, k_pos, causal, window, block_q, block_k,
                       extra_mask=None):
-    """Blockwise flash attention in pure XLA: scan over KV blocks per Q block."""
+    """Blockwise flash attention in pure XLA: scan over KV blocks per Q block.
+
+    Block sizes are FIXED (never clamped to the sequence): short inputs
+    pad up to one block.  That makes the reduction *length-invariant* —
+    every key-axis reduction runs over exactly ``block_k`` lanes in the
+    same order, and appended fully-masked blocks are exact no-ops in the
+    running max/sum/acc recurrence (``exp(NEG_INF)=0``, ``corr=1``).  So
+    attention over ``[prefix | suffix]`` is bitwise identical whether the
+    prefix KV was computed in a prefix-only pass or inline — the property
+    the prefix-cached prefill's byte-identical contract rests on
+    (DESIGN.md §9).  The naive impl does NOT have this property: XLA
+    reassociates its full-axis softmax reductions differently per length.
+    """
     b, sq, h, dh = q.shape
     sk, hk = k.shape[1], k.shape[2]
     g = h // hk
-    bq = min(block_q, sq)
-    bk = min(block_k, sk)
+    bq = block_q
+    bk = block_k
     # Pad sequence dims to block multiples.
     pq = (-sq) % bq
     pk = (-sk) % bk
@@ -173,17 +185,36 @@ def attend(q, k, v, q_pos, k_pos, *, causal: bool, window: int, impl: str,
 # ------------------------------------------------------------- entry points
 
 def self_attention(params, x, positions, cfg: ModelConfig, *, causal=True,
-                   window: int = 0, use_rope=True):
-    """Full-sequence self attention.  Returns (out, (k, v)) — k/v post-rope."""
+                   window: int = 0, use_rope=True, prefix=None):
+    """Full-sequence self attention.  Returns (out, (k, v)) — k/v post-rope.
+
+    ``prefix`` (optional) is a KV cache dict for an already-prefilled
+    shared prefix (``{"k": (B,P,hk,dh), "v": ..., "slot_pos": (B,P)}``,
+    rope already applied at the prefix's own positions).  The queries —
+    whose ``positions`` must start AFTER the prefix — then attend over
+    ``[prefix | self]``, and the returned k/v are the concatenated
+    ``(k_all, v_all, k_pos_all)`` covering both, ready for
+    ``fill_kv_cache`` to lay out slots ``[0, P+S)`` exactly as a full
+    prefill would (DESIGN.md §9).
+    """
     q, k, v = _project_qkv(params, x, cfg)
     if use_rope:
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
-    ctx = attend(q, k, v, positions, positions, causal=causal, window=window,
-                 impl=cfg.attention_impl, block_q=cfg.flash_block_q,
-                 block_k=cfg.flash_block_k)
+    if prefix is None:
+        ctx = attend(q, k, v, positions, positions, causal=causal,
+                     window=window, impl=cfg.attention_impl,
+                     block_q=cfg.flash_block_q, block_k=cfg.flash_block_k)
+        out = jnp.einsum("bshk,hkd->bsd", ctx, params["w_o"])
+        return out, (k, v)
+    k_all = jnp.concatenate([prefix["k"].astype(k.dtype), k], axis=1)
+    v_all = jnp.concatenate([prefix["v"].astype(v.dtype), v], axis=1)
+    k_pos = jnp.concatenate([prefix["slot_pos"], positions], axis=1)
+    ctx = attend(q, k_all, v_all, positions, k_pos, causal=causal,
+                 window=window, impl=cfg.attention_impl,
+                 block_q=cfg.flash_block_q, block_k=cfg.flash_block_k)
     out = jnp.einsum("bshk,hkd->bsd", ctx, params["w_o"])
-    return out, (k, v)
+    return out, (k_all, v_all, k_pos)
 
 
 def init_kv_cache(batch, capacity, cfg: ModelConfig, dtype=None):

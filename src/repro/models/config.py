@@ -43,8 +43,13 @@ class ModelConfig:
     rope_theta: float = 10_000.0
     sliding_window: int = 0          # 0 = global; >0 = SWA width (for LOCAL_ATTN / all-attn SWA archs)
     attention_impl: str = "auto"     # auto | naive | xla_flash | pallas
-    flash_block_q: int = 512
-    flash_block_k: int = 512
+    # Flash block sizes are FIXED, never clamped to the sequence (the
+    # length-invariance the prefix-prefill contract needs, DESIGN.md §9):
+    # short inputs pad UP to one block, so serving configs that run short
+    # prefills through xla_flash should size these near their typical
+    # length bucket (the tweak-path models use 32).
+    flash_block_q: int = 128
+    flash_block_k: int = 128
 
     # MLP.
     mlp_type: str = "swiglu"  # swiglu | gelu | squared_relu

@@ -11,6 +11,20 @@ it received.  The serving generator runs it inside a jitted
 structure change in the carry is a compile error.  All architectures here
 (ring-buffered KV attention incl. the Pallas decode kernel, Mamba2 SSM
 state, RG-LRU state, enc-dec cross caches) satisfy this by construction.
+
+Prefix-prefill contract (DESIGN.md §9): when
+``supports_prefix_prefill`` is True, ``prefill_prefix(params, tokens)``
+returns the KV state of a shared prompt prefix, and
+``prefill_with_prefix(params, batch, capacity, prefix)`` prefills only
+the suffix in ``batch`` while attending over the stored prefix KV — its
+``(logits, caches)`` must be byte-identical to ``prefill`` of the
+concatenated ``[prefix | suffix]`` tokens, so decode proceeds
+indistinguishably.  Support currently means a decoder-only stack of
+global-attention blocks (ATTN/MOE, no sliding window, no frontend
+prefix embeddings).  Recurrent mixers (Mamba2, RG-LRU), windowed
+attention, and enc-dec would need state-carry prefill; they report
+False and callers MUST fall back to the full ``prefill`` — the methods
+raise ``NotImplementedError`` rather than silently degrade.
 """
 from __future__ import annotations
 
@@ -18,7 +32,7 @@ import dataclasses
 
 from . import encdec as encdec_lib
 from . import transformer as tf_lib
-from .config import ModelConfig
+from .config import ATTN, MOE, ModelConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +77,56 @@ class Model:
                                       self.cfg, capacity)
         return tf_lib.prefill(params, batch["tokens"], self.cfg, capacity,
                               prefix_embeds=batch.get("prefix_embeds"))
+
+    @property
+    def supports_prefix_prefill(self) -> bool:
+        """True when this arch can reuse a shared-prefix KV cache in prefill.
+
+        Global-attention decoder-only stacks qualify; recurrent mixers
+        (Mamba2/RG-LRU), sliding-window attention, enc-dec and
+        frontend-prefix models do not (they would need state-carry
+        prefill) and must be served via the full ``prefill`` instead.
+        """
+        cfg = self.cfg
+        kinds = set(cfg.block_pattern) | set(cfg.pattern_remainder)
+        # Byte-identicality additionally needs a length-invariant attention
+        # reduction: the fixed-block flash impls qualify, the naive
+        # full-axis softmax does not (XLA reassociates its key-axis sums
+        # differently per sequence length, so a prefix-only pass would
+        # drift ulps from the inline computation).
+        return (not self.is_encdec and cfg.sliding_window == 0
+                and kinds <= {ATTN, MOE} and cfg.num_prefix_tokens == 0
+                and cfg.attention_impl in ("xla_flash", "pallas"))
+
+    def prefill_prefix(self, params, tokens):
+        """KV state of a shared prefix: tokens (B, P) -> caches pytree.
+
+        Capacity is exactly P — the result is the immutable prefix cache
+        that ``prefill_with_prefix`` attends over (and copies into each
+        request's decode cache), one build per (model, batch bucket).
+        """
+        if not self.supports_prefix_prefill:
+            raise NotImplementedError(
+                f"{self.cfg.name}: prefix-cached prefill unsupported for "
+                f"this architecture — use the full prefill")
+        _, caches = tf_lib.prefill(params, tokens, self.cfg,
+                                   capacity=int(tokens.shape[1]))
+        return caches
+
+    def prefill_with_prefix(self, params, batch, capacity: int, prefix):
+        """Suffix-only prefill over a stored prefix KV (DESIGN.md §9).
+
+        ``batch["tokens"]`` holds ONLY the suffix; ``prefix`` is the
+        pytree from ``prefill_prefix`` at the same batch size.  Returns
+        (logits, caches) byte-identical to ``prefill`` of the
+        concatenated sequence with the same total ``capacity``.
+        """
+        if not self.supports_prefix_prefill:
+            raise NotImplementedError(
+                f"{self.cfg.name}: prefix-cached prefill unsupported for "
+                f"this architecture — use the full prefill")
+        return tf_lib.prefill(params, batch["tokens"], self.cfg, capacity,
+                              prefix=prefix)
 
     def init_caches(self, batch_size: int, capacity: int):
         if self.is_encdec:

@@ -135,18 +135,37 @@ def _init_block_cache(kind: str, batch: int, capacity: int, cfg: ModelConfig):
     raise ValueError(kind)
 
 
-def _block_prefill(kind: str, p, x, positions, cache, cfg: ModelConfig):
-    """Full-seq block, emits updated cache.  Returns (x, aux, cache)."""
+def _block_prefill(kind: str, p, x, positions, cache, cfg: ModelConfig,
+                   prefix=None):
+    """Full-seq block, emits updated cache.  Returns (x, aux, cache).
+
+    ``prefix`` is this layer's shared-prefix KV cache (DESIGN.md §9):
+    attention runs the suffix queries over ``[prefix | suffix]`` and the
+    emitted cache holds both, byte-identical to a full prefill of the
+    concatenated sequence.  Only global-attention blocks support it —
+    the Model facade gates which architectures get here (windowed /
+    SSM / RG-LRU stacks fall back to full prefill explicitly).
+    """
     aux = jnp.zeros((), jnp.float32)
     h = apply_norm(p["norm1"], x, cfg.norm_type)
     if kind in (ATTN, LOCAL_ATTN, MOE):
         window = cfg.sliding_window if (kind == LOCAL_ATTN or cfg.sliding_window > 0) else 0
-        a, (k, v) = attn_lib.self_attention(
-            p["attn"], h, positions, cfg, causal=True, window=window)
+        if prefix is not None and window > 0:
+            raise NotImplementedError(
+                "prefix-cached prefill is global-attention only; windowed "
+                "stacks must fall back to full prefill")
+        a, kv = attn_lib.self_attention(
+            p["attn"], h, positions, cfg, causal=True, window=window,
+            prefix=prefix)
+        if prefix is not None:
+            k, v, k_pos = kv          # [prefix | suffix], cache-ready
+        else:
+            k, v = kv
+            k_pos = positions
         s = k.shape[1]
         cap = cache["k"].shape[1]
         if s <= cap:
-            cache = attn_lib.fill_kv_cache(cache, k, v, positions)
+            cache = attn_lib.fill_kv_cache(cache, k, v, k_pos)
         else:
             # windowed cache smaller than the prefill: keep last `cap` tokens
             # laid out in ring order slot = pos % cap.
@@ -164,6 +183,13 @@ def _block_prefill(kind: str, p, x, positions, cache, cfg: ModelConfig):
         else:
             m = apply_mlp(p["mlp"], h2, cfg.mlp_type)
         return x + m, aux, cache
+    if prefix is not None:
+        # Recurrent mixers would need state-carry prefill (resume the
+        # scan from the prefix's final state); until that exists the
+        # Model facade reports supports_prefix_prefill=False for them
+        # and servers fall back to full prefill.
+        raise NotImplementedError(
+            f"prefix-cached prefill not implemented for {kind!r} blocks")
     if kind == MAMBA2:
         y, st = ssm_lib.mamba2_forward(p["mixer"], h, cfg)
         return x + y, aux, {"ssm": st["ssm"], "conv": st["conv"]}
@@ -247,23 +273,38 @@ def init_caches(params, batch: int, capacity: int, cfg: ModelConfig):
     return {"scan": tuple(scan_caches), "rem": rem, "pos": jnp.zeros((), jnp.int32)}
 
 
-def _run_stack_prefill(params, caches, x, positions, cfg: ModelConfig):
+def _run_stack_prefill(params, caches, x, positions, cfg: ModelConfig,
+                       prefix=None):
+    """``prefix``: a caches pytree holding each layer's shared-prefix KV
+    (the output of a prefix-only prefill, DESIGN.md §9); its scan/rem
+    structure mirrors ``caches`` so per-layer prefix KV threads through
+    the period scan alongside the layer's own cache."""
     def period_body(x, period_in):
-        pp, pc = period_in
+        pp, pc, ppre = period_in
         new_c = []
         for j, kind in enumerate(cfg.block_pattern):
-            x, _, c = _block_prefill(kind, pp[j], x, positions, pc[j], cfg)
+            x, _, c = _block_prefill(kind, pp[j], x, positions, pc[j], cfg,
+                                     prefix=None if ppre is None else ppre[j])
             new_c.append(c)
         return x, tuple(new_c)
 
     if cfg.pattern_periods > 0:
-        x, new_scan = jax.lax.scan(period_body, x, (params["scan"], caches["scan"]))
+        if prefix is None:
+            x, new_scan = jax.lax.scan(
+                lambda x, pi: period_body(x, (*pi, None)),
+                x, (params["scan"], caches["scan"]))
+        else:
+            x, new_scan = jax.lax.scan(
+                period_body, x,
+                (params["scan"], caches["scan"], prefix["scan"]))
     else:
         new_scan = caches["scan"]
     new_rem = []
     for i, kind in enumerate(cfg.pattern_remainder):
         x, _, c = _block_prefill(kind, params["rem"][i], x, positions,
-                                 caches["rem"][i], cfg)
+                                 caches["rem"][i], cfg,
+                                 prefix=None if prefix is None
+                                 else prefix["rem"][i])
         new_rem.append(c)
     new_caches = {"scan": new_scan, "rem": tuple(new_rem),
                   "pos": positions[0, -1].astype(jnp.int32) + 1}
@@ -328,11 +369,26 @@ def forward(params, tokens, cfg: ModelConfig, prefix_embeds=None):
     return _logits(params, x, cfg), aux
 
 
-def prefill(params, tokens, cfg: ModelConfig, capacity: int, prefix_embeds=None):
-    """Inference prefill.  Returns (last-token logits (B,V), caches)."""
+def prefill(params, tokens, cfg: ModelConfig, capacity: int, prefix_embeds=None,
+            prefix=None):
+    """Inference prefill.  Returns (last-token logits (B,V), caches).
+
+    With ``prefix`` (a caches pytree from a prefix-only prefill),
+    ``tokens`` are treated as the SUFFIX of a longer sequence: positions
+    continue from the prefix, every attention layer attends over
+    ``[prefix KV | suffix]``, and the returned caches cover the full
+    ``[0, P+S)`` span — logits and caches byte-identical to a full
+    prefill of the concatenation (differential-tested, DESIGN.md §9).
+    """
     x, positions = _embed_inputs(params, tokens, cfg, prefix_embeds)
+    if prefix is not None:
+        if prefix_embeds is not None:
+            raise NotImplementedError(
+                "prefix-cached prefill with frontend prefix_embeds")
+        positions = positions + prefix["pos"].astype(jnp.int32)
     caches = init_caches(params, x.shape[0], capacity, cfg)
-    x, caches = _run_stack_prefill(params, caches, x, positions, cfg)
+    x, caches = _run_stack_prefill(params, caches, x, positions, cfg,
+                                   prefix=prefix)
     logits = _logits(params, x[:, -1:], cfg)
     return logits[:, 0], caches
 

@@ -1,5 +1,5 @@
 from .sampler import SamplerConfig, sample
-from .generate import GenerateConfig, Generator
+from .generate import GenerateConfig, Generator, PrefixCache
 from .batcher import pad_to_buckets, bucket_batch, bucket_len, floor_len_bucket
 from .scheduler import (Clock, SimClock, WallClock, QueueFull, Request,
                         Scheduler, SchedulerConfig, SchedulerStats,

@@ -19,7 +19,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import itertools
-from typing import Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +39,22 @@ class GenerateConfig:
     fused: bool = True
 
 
+@dataclasses.dataclass(frozen=True)
+class PrefixCache:
+    """Prefilled KV state of a shared prompt prefix (DESIGN.md §9).
+
+    ``caches`` is the model's caches pytree for the prefix alone (capacity
+    exactly ``length``), already materialised at serve batch size
+    ``batch`` — one build per (model, batch bucket), reused read-only by
+    every suffix prefill at that bucket.  ``token_ids`` records what was
+    prefilled so owners (the engine) can detect staleness.
+    """
+    caches: Any
+    length: int
+    batch: int
+    token_ids: Tuple[int, ...]
+
+
 class Generator:
     """Wraps a Model with jitted prefill/decode for repeated serving calls."""
 
@@ -53,6 +69,17 @@ class Generator:
         @functools.partial(jax.jit, static_argnames=("capacity",))
         def _prefill(params, batch, capacity):
             return model.prefill(params, batch, capacity)
+
+        @functools.partial(jax.jit, static_argnames=("capacity",))
+        def _prefill_with_prefix(params, batch, capacity, prefix):
+            # prefix is a read-only pytree argument: jit specializes per
+            # (batch, suffix, prefix) shape bucket, so each bucket compiles
+            # its own broadcast of the shared KV exactly once.
+            return model.prefill_with_prefix(params, batch, capacity, prefix)
+
+        @jax.jit
+        def _prefill_prefix(params, tokens):
+            return model.prefill_prefix(params, tokens)
 
         @jax.jit
         def _step(params, token, caches, key):
@@ -103,25 +130,58 @@ class Generator:
             return toks, lengths, done
 
         self._prefill = _prefill
+        self._prefill_with_prefix = _prefill_with_prefix
+        self._prefill_prefix = _prefill_prefix
         self._step = _step
         self._decode_fused = _decode_fused
+
+    # ------------------------------------------------------ prefix cache
+    @property
+    def supports_prefix_prefill(self) -> bool:
+        return self.model.supports_prefix_prefill
+
+    def build_prefix_cache(self, prefix_ids: Sequence[int],
+                           batch: int) -> PrefixCache:
+        """Prefill a shared prefix once at ``batch`` rows (DESIGN.md §9).
+
+        Every row holds the same ids, so the KV is computed per batch
+        bucket with the exact shapes the suffix prefills will see; the
+        result is reused read-only across all subsequent
+        ``generate*(..., prefix_cache=...)`` calls at that bucket.
+        Prefilling the duplicate rows is deliberately preferred over a
+        batch-1 build + host-side broadcast: it is a one-time cost of a
+        few dozen token-rows per bucket, stays agnostic to where each
+        cache leaf keeps its batch axis (scan-stacked vs remainder
+        layers), and trivially preserves the byte-identical contract.
+        """
+        ids = tuple(int(t) for t in prefix_ids)
+        if not ids:
+            raise ValueError("prefix_ids must be non-empty")
+        toks = jnp.broadcast_to(jnp.asarray(ids, jnp.int32)[None, :],
+                                (batch, len(ids)))
+        caches = self._prefill_prefix(self.params, toks)
+        return PrefixCache(caches=caches, length=len(ids), batch=batch,
+                           token_ids=ids)
 
     def generate(self, batch: Dict[str, jnp.ndarray], *,
                  max_new_tokens: Optional[int] = None,
                  seed: Optional[int] = None,
-                 fused: Optional[bool] = None) -> np.ndarray:
+                 fused: Optional[bool] = None,
+                 prefix_cache: Optional[PrefixCache] = None) -> np.ndarray:
         """batch: {tokens (B,S), [frames|prefix_embeds]} -> (B, T_new) ids.
 
         Rows that finish early are EOS-padded out to ``max_new_tokens``.
         """
         return self.generate_with_lengths(
-            batch, max_new_tokens=max_new_tokens, seed=seed, fused=fused)[0]
+            batch, max_new_tokens=max_new_tokens, seed=seed, fused=fused,
+            prefix_cache=prefix_cache)[0]
 
     def generate_with_lengths(
             self, batch: Dict[str, jnp.ndarray], *,
             max_new_tokens: Optional[int] = None,
             seed: Optional[int] = None,
             fused: Optional[bool] = None,
+            prefix_cache: Optional[PrefixCache] = None,
     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Generate and return (tokens (B, T_new), lengths (B,), ended (B,)).
 
@@ -130,6 +190,11 @@ class Generator:
         budget otherwise.  ``max_new_tokens=0`` is an explicit request for
         nothing: returns an empty (B, 0) block with zero-length rows and
         runs no device work at all.
+
+        With ``prefix_cache``, ``batch["tokens"]`` holds only the suffix:
+        prefill attends over the stored prefix KV and the whole call is
+        byte-identical to generating from the ``[prefix | suffix]``
+        concatenation (same capacity, same key schedule).
         """
         # `is None`, not falsiness: an explicit max_new_tokens=0 must not
         # silently fall back to the config default.
@@ -143,10 +208,19 @@ class Generator:
         if seed is None:
             seed = next(self._auto_seed)
         use_fused = self.cfg.fused if fused is None else fused
-        capacity = s + mnt + 1
-        if self.model.cfg.num_prefix_tokens:
-            capacity += self.model.cfg.num_prefix_tokens
-        logits, caches = self._prefill(self.params, batch, capacity)
+        if prefix_cache is not None:
+            if b != prefix_cache.batch:
+                raise ValueError(
+                    f"prefix cache was built for batch {prefix_cache.batch}, "
+                    f"got a batch of {b} rows — build one per batch bucket")
+            capacity = prefix_cache.length + s + mnt + 1
+            logits, caches = self._prefill_with_prefix(
+                self.params, batch, capacity, prefix_cache.caches)
+        else:
+            capacity = s + mnt + 1
+            if self.model.cfg.num_prefix_tokens:
+                capacity += self.model.cfg.num_prefix_tokens
+            logits, caches = self._prefill(self.params, batch, capacity)
         key = jax.random.PRNGKey(seed)
         if use_fused:
             toks, lengths, ended = self._decode_fused(

@@ -241,8 +241,10 @@ def test_tweak_prompt_survives_text_store_miss(stack, monkeypatch):
     assert cached_resp                       # the device cache has the text
     eng._text_store.clear()                  # simulate restored checkpoint
     captured = []
-    real_build = tweak_lib.build_tweak_text
-    monkeypatch.setattr(tweak_lib, "build_tweak_text",
+    # Every prompt-assembly path (text oracle, full-token, prefix-suffix)
+    # derives from tweak_segments — the one seam that sees the field values.
+    real_build = tweak_lib.tweak_segments
+    monkeypatch.setattr(tweak_lib, "tweak_segments",
                         lambda q, cq, cr: captured.append((q, cq, cr))
                         or real_build(q, cq, cr))
     rs, meta = eng.handle_batch(["an unrelated question about sailing"],

@@ -91,6 +91,8 @@ def test_tweak_prompt_contains_all_parts():
     t = tweak.build_tweak_text("new q", "old q", "old resp")
     assert "new q" in t and "old q" in t and "old resp" in t
     assert t.index("old q") < t.index("old resp")
+    # the static instruction prefix opens the prompt — the shared-KV split
+    assert t.startswith(tweak.tweak_prefix_text())
 
 
 def test_query_suffix_applied():
@@ -98,13 +100,41 @@ def test_query_suffix_applied():
 
 
 def test_tweak_batch_tokens_fixed_shape():
-    instr = jnp.arange(5, dtype=jnp.int32)
+    from repro.tokenizer import HashWordTokenizer
+    tok = HashWordTokenizer(4096)
+    statics = tweak.encode_static_segments(tok)
+    n_static = sum(len(s) for s in statics)
     nq = jnp.ones((2, 4), jnp.int32)
     nm = jnp.ones((2, 4), jnp.float32)
     cq = jnp.ones((2, 3), jnp.int32)
     cm = jnp.ones((2, 3), jnp.float32)
     cr = jnp.ones((2, 6), jnp.int32)
     crm = jnp.ones((2, 6), jnp.float32)
-    toks, mask = tweak.build_tweak_batch_tokens(instr, nq, nm, cq, cm, cr, crm)
-    assert toks.shape == (2, 5 + 3 + 6 + 4)
+    toks, mask = tweak.build_tweak_batch_tokens(statics, nq, nm, cq, cm,
+                                                cr, crm)
+    assert toks.shape == (2, n_static + 3 + 6 + 4)
     assert mask.shape == toks.shape
+
+
+def test_tweak_token_paths_match_text_oracle():
+    """Both token assemblies derive from TWEAK_SEGMENTS: unpadded field
+    tokens must reproduce exactly the encoding of the text oracle, and the
+    prefix + suffix split must concatenate back to the full row."""
+    from repro.tokenizer import HashWordTokenizer
+    tok = HashWordTokenizer(4096)
+    q, cq, cr = "what is rust", "what is go", "a compiled language"
+    oracle = tok.encode(tweak.build_tweak_text(q, cq, cr))
+    row = tweak.encode_tweak_row(tok, q, cq, cr, 256)
+    assert row == oracle
+    pre = tweak.tweak_prefix_ids(tok)
+    suf = tweak.encode_tweak_row(tok, q, cq, cr, 256, drop_prefix=True)
+    assert list(pre) + suf == oracle
+    # jittable fixed-shape assembly agrees too (no padding case)
+    statics = tweak.encode_static_segments(tok)
+    enc = lambda t: np.asarray(tok.encode(t, add_bos=False), np.int32)[None]
+    ones = lambda a: np.ones(a.shape, np.float32)
+    nq_t, cq_t, cr_t = enc(q), enc(cq), enc(cr)
+    toks, mask = tweak.build_tweak_batch_tokens(
+        statics, nq_t, ones(nq_t), cq_t, ones(cq_t), cr_t, ones(cr_t))
+    assert np.asarray(toks)[0].tolist() == oracle
+    assert np.asarray(mask).all()
