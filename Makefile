@@ -2,10 +2,23 @@
 
 PYTHONPATH_PREFIX := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench bench-scheduler bench-index bench-generate bench-prefill bench-smoke bench-baseline dev-deps lint
+.PHONY: test test-sanitize analyze bench bench-scheduler bench-index bench-generate bench-prefill bench-smoke bench-baseline dev-deps lint
 
 test:
 	$(PYTHONPATH_PREFIX) python -m pytest -x -q
+
+# hot-path invariant analyzer (DESIGN.md §10): AST lint + registry parity,
+# then jaxpr/HLO contract checks traced over the bucket sets
+analyze:
+	$(PYTHONPATH_PREFIX) python -m repro.analysis.lint
+	$(PYTHONPATH_PREFIX) python -m repro.analysis.contracts
+
+# tier-1 subset under runtime sanitizers: transfer_guard("disallow"),
+# rank_promotion="raise", checking_leaks, debug_nans (DESIGN.md §10)
+test-sanitize:
+	$(PYTHONPATH_PREFIX) python -m pytest -q --sanitize \
+		tests/test_sanitize.py tests/test_cache_router.py \
+		tests/test_index.py tests/test_generate.py
 
 bench:
 	$(PYTHONPATH_PREFIX) python -m benchmarks.microbench

@@ -42,7 +42,7 @@ def pretrain_lm(cfg, steps, seed, tok):
     opt = init_opt_state(params)
     stream = token_stream_batches(tok, 8, 64, seed=seed)
     first = last = None
-    for i in range(steps):
+    for _ in range(steps):
         batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
         params, opt, m = step(params, opt, batch)
         first = first if first is not None else float(m["loss"])

@@ -1,0 +1,12 @@
+"""Hot-path invariant analyzer (DESIGN.md §10).
+
+Three layers, all wired into ``make analyze`` / the ``analysis`` CI job:
+
+* :mod:`repro.analysis.registry` — the declared jit-site and hot-module
+  tables the other layers check against.
+* :mod:`repro.analysis.lint` — repo-specific AST lint (host syncs, seed
+  hygiene, import-time side effects, registry parity).
+* :mod:`repro.analysis.contracts` — jaxpr/HLO contract checks: no
+  callbacks, no 64-bit widening, real donation, bounded recompiles.
+"""
+from . import registry  # noqa: F401

@@ -1,0 +1,316 @@
+"""Jaxpr/HLO contract checks over the registered hot paths (DESIGN.md §10).
+
+Layer 2 of the analyzer: where the AST lint (Layer 1) reads source, this
+module *traces* each hot path against its declared bucket shapes and
+checks properties of the jaxpr and the lowered artifact:
+
+* **no callbacks** — ``pure_callback`` / ``io_callback`` /
+  ``debug_callback`` primitives anywhere in the jaxpr (including inside
+  while/scan/cond sub-jaxprs) mean a host round-trip per dispatch.
+* **no 64-bit widening** — an f64/i64 var in a hot-path jaxpr doubles
+  bandwidth on every touched buffer and usually signals an accidental
+  Python-float promotion.
+* **donation is real** — declaring ``donate_argnums`` is only half the
+  story; the compiled artifact must actually alias inputs to outputs
+  (``tf.aliasing_output`` in the lowered text), otherwise the cache
+  update silently degrades to copy-on-write.
+* **the recompile gate** — executing the FULL bucket set twice must
+  produce exactly ``len(buckets)`` compilations.  A shape leak that
+  defeats the batcher becomes a CI failure here instead of a production
+  latency mystery.
+
+Run via ``python -m repro.analysis.contracts`` (or ``make analyze``).
+Contracts use deliberately tiny shapes — the properties checked are
+shape-independent, and CI pays the trace cost on every push.
+"""
+from __future__ import annotations
+
+import sys
+from typing import Iterable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CALLBACK_PRIMITIVES = ("pure_callback", "io_callback", "debug_callback")
+WIDE_DTYPES = ("float64", "int64", "uint64", "complex128")
+
+
+# --------------------------------------------------------- jaxpr helpers
+
+def iter_eqns(jaxpr) -> Iterable:
+    """All equations in a (Closed)Jaxpr, recursing into sub-jaxprs
+    (while/scan/cond bodies, pjit calls)."""
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in inner.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                yield from iter_eqns(sub)
+
+
+def _subjaxprs(value):
+    if hasattr(value, "eqns") or hasattr(value, "jaxpr"):
+        yield value
+    elif isinstance(value, (list, tuple)):
+        for v in value:
+            yield from _subjaxprs(v)
+
+
+def callback_eqns(jaxpr) -> List[str]:
+    """Names of callback primitives present anywhere in the jaxpr."""
+    return [e.primitive.name for e in iter_eqns(jaxpr)
+            if e.primitive.name in CALLBACK_PRIMITIVES]
+
+
+def wide_dtype_vars(jaxpr) -> List[str]:
+    """'primitive -> dtype' for every 64-bit-wide value produced."""
+    out = []
+    for eqn in iter_eqns(jaxpr):
+        for var in eqn.outvars:
+            dt = getattr(getattr(var, "aval", None), "dtype", None)
+            if dt is not None and str(dt) in WIDE_DTYPES:
+                out.append(f"{eqn.primitive.name} -> {dt}")
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    for var in inner.invars:
+        dt = getattr(getattr(var, "aval", None), "dtype", None)
+        if dt is not None and str(dt) in WIDE_DTYPES:
+            out.append(f"input -> {dt}")
+    return out
+
+
+def has_donation(lowered_text: str) -> bool:
+    """Did donation survive into the compiled artifact's aliasing table?"""
+    return "tf.aliasing_output" in lowered_text
+
+
+def while_count(jaxpr) -> int:
+    return sum(1 for e in iter_eqns(jaxpr) if e.primitive.name == "while")
+
+
+def check_traced(name: str, traced, *, expect_donation: bool = False,
+                 expect_while: bool = False) -> List[str]:
+    """Static checks on one ``jitted.trace(...)`` result."""
+    failures = []
+    jaxpr = traced.jaxpr
+    cbs = callback_eqns(jaxpr)
+    if cbs:
+        failures.append(f"{name}: host callback primitive(s) in the "
+                        f"jaxpr: {sorted(set(cbs))} — hot paths must not "
+                        "round-trip to Python per dispatch")
+    wide = wide_dtype_vars(jaxpr)
+    if wide:
+        failures.append(f"{name}: 64-bit values in the jaxpr "
+                        f"({sorted(set(wide))[:4]}) — check for Python "
+                        "float/int promotion")
+    text = traced.lower().as_text()
+    if expect_donation and not has_donation(text):
+        failures.append(f"{name}: donate_argnums declared but no "
+                        "tf.aliasing_output in the lowered module — "
+                        "donation was dropped (copy-on-write cache update)")
+    if not expect_donation and has_donation(text):
+        failures.append(f"{name}: unexpected input-output aliasing — an "
+                        "argument is being donated that the registry says "
+                        "is read-only")
+    if expect_while and while_count(jaxpr) == 0:
+        failures.append(f"{name}: expected a fused lax.while_loop in the "
+                        "jaxpr but found none — the decode loop has been "
+                        "unrolled or hoisted back to the host")
+    return failures
+
+
+def check_recompiles(name: str, jitted, calls: int) -> List[str]:
+    """The recompile gate: after running the bucket set (twice), the jit
+    cache must hold exactly ``calls`` entries."""
+    size = jitted._cache_size()
+    if size != calls:
+        return [f"{name}: {size} compilations for {calls} bucket calls — "
+                + ("a shape/dtype leak is defeating the batcher"
+                   if size > calls else "bucket set under-exercised")]
+    return []
+
+
+# ------------------------------------------------------------- contracts
+
+_BATCH_BUCKETS: Tuple[int, ...] = (1, 2, 4, 8)
+_DIM = 32
+
+
+def _cache_cfg(**kw):
+    from repro.core.cache import CacheConfig
+    base = dict(capacity=64, dim=_DIM, max_query_tokens=8,
+                max_response_tokens=16, topk=4)
+    base.update(kw)
+    return CacheConfig(**base)
+
+
+def _unit_rows(b: int, seed: int = 0) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((b, _DIM)).astype(np.float32)
+    return jnp.asarray(x / np.linalg.norm(x, axis=1, keepdims=True))
+
+
+def contract_lookup_and_touch(
+        buckets: Sequence[int] = _BATCH_BUCKETS) -> List[str]:
+    """Fused lookup+route+touch: donated state, no callbacks, one compile
+    per batch bucket (the PR 1 single-round-trip invariant)."""
+    from repro.core import cache, router
+    cfg = _cache_cfg()
+    rcfg = router.RouterConfig()
+    jitted = jax.jit(
+        lambda state, q: cache.lookup_and_touch(state, cfg, rcfg, q),
+        donate_argnums=(0,))
+    failures = []
+    for b in buckets:
+        tr = jitted.trace(cache.init_cache(cfg), _unit_rows(b))
+        failures += check_traced(f"lookup_and_touch[b={b}]", tr,
+                                 expect_donation=True)
+    for _ in range(2):          # second sweep must be all cache hits
+        for b in buckets:
+            out = jitted(cache.init_cache(cfg), _unit_rows(b))
+            jax.block_until_ready(out)
+    failures += check_recompiles("lookup_and_touch", jitted, len(buckets))
+    return failures
+
+
+def contract_insert_batch(
+        buckets: Sequence[int] = _BATCH_BUCKETS) -> List[str]:
+    """Miss-batch commit: donated state; the traced ``count`` arg (not the
+    batch width) must be the only per-call variation within a bucket."""
+    from repro.core import cache
+    cfg = _cache_cfg()
+    jitted = cache.make_insert_batch(cfg)
+    failures = []
+
+    def args(b, count):
+        return (cache.init_cache(cfg), _unit_rows(b),
+                jnp.zeros((b, cfg.max_query_tokens), jnp.int32),
+                jnp.ones((b, cfg.max_query_tokens), jnp.float32),
+                jnp.zeros((b, cfg.max_response_tokens), jnp.int32),
+                jnp.ones((b, cfg.max_response_tokens), jnp.float32),
+                jnp.asarray(count, jnp.int32))
+
+    for b in buckets:
+        tr = jitted.trace(*args(b, b))
+        failures += check_traced(f"insert_batch[b={b}]", tr,
+                                 expect_donation=True)
+    for count_off in (0, 1):    # varying count must NOT retrace
+        for b in buckets:
+            out = jitted(*args(b, max(1, b - count_off)))
+            jax.block_until_ready(out)
+    failures += check_recompiles("insert_batch", jitted, len(buckets))
+    return failures
+
+
+def contract_ivf_lookup(buckets: Sequence[int] = _BATCH_BUCKETS) -> List[str]:
+    """Clustered (IVF) probe: fixed-shape two-stage lookup — the member
+    shortlist must never take a data-dependent shape (DESIGN.md §7)."""
+    from repro.core import cache
+    cfg = _cache_cfg(index="ivf", nclusters=8, nprobe=4)
+    state = cache.init_cache(cfg)
+    jitted = jax.jit(lambda state, q: cache.lookup(state, cfg, q))
+    failures = []
+    for b in buckets:
+        tr = jitted.trace(state, _unit_rows(b))
+        failures += check_traced(f"ivf_lookup[b={b}]", tr)
+    for _ in range(2):
+        for b in buckets:
+            jax.block_until_ready(jitted(state, _unit_rows(b)))
+    failures += check_recompiles("ivf_lookup", jitted, len(buckets))
+    return failures
+
+
+def _tiny_generator(mnt: int = 4):
+    from repro.models import ModelConfig, build_model
+    from repro.serving import GenerateConfig, Generator, SamplerConfig
+    vocab = 128
+    # xla_flash: the length-invariant attention reduction that qualifies
+    # the arch for byte-identical prefix prefill (models/model.py)
+    cfg = ModelConfig(num_layers=2, d_model=32, num_heads=2, num_kv_heads=1,
+                      d_ff=64, vocab_size=vocab, max_seq_len=128,
+                      dtype="float32", attention_impl="xla_flash",
+                      flash_block_q=16, flash_block_k=16)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))  # seed: ok deterministic contract probe
+    gc = GenerateConfig(max_new_tokens=mnt,
+                        sampler=SamplerConfig(vocab_size=vocab))
+    return Generator(model, params, gc)
+
+
+def contract_fused_decode(buckets: Sequence[int] = (1, 2)) -> List[str]:
+    """Fused decode: ONE while_loop on device, caches threaded through the
+    carry, no callbacks, one compile per batch bucket (PR 4)."""
+    mnt = 4
+    gen = _tiny_generator(mnt)
+    failures = []
+    for b in buckets:
+        batch = {"tokens": jnp.ones((b, 8), jnp.int32)}
+        logits, caches = gen._prefill(gen.params, batch, 8 + mnt + 1)
+        tr = gen._decode_fused.trace(gen.params, logits, caches,
+                                     jax.random.PRNGKey(0), mnt=mnt)  # seed: ok deterministic contract probe
+        failures += check_traced(f"decode_fused[b={b}]", tr,
+                                 expect_while=True)
+    for _ in range(2):
+        for b in buckets:
+            out = gen.generate({"tokens": jnp.ones((b, 8), jnp.int32)},
+                               max_new_tokens=mnt, seed=0)  # seed: ok deterministic contract probe
+    failures += check_recompiles("decode_fused", gen._decode_fused,
+                                 len(buckets))
+    return failures
+
+
+def contract_prefix_suffix_prefill(
+        suffix_buckets: Sequence[int] = (8, 16)) -> List[str]:
+    """Prefix-KV reuse: suffix prefill compiles once per suffix length
+    bucket over a FIXED shared-prefix KV (PR 5), with the prefix pytree
+    read-only (no aliasing)."""
+    mnt, b = 4, 2
+    gen = _tiny_generator(mnt)
+    prefix = gen.build_prefix_cache((5, 6, 7, 8), batch=b)
+    failures = []
+    for s in suffix_buckets:
+        batch = {"tokens": jnp.ones((b, s), jnp.int32)}
+        capacity = prefix.length + s + mnt + 1
+        tr = gen._prefill_with_prefix.trace(gen.params, batch, capacity,
+                                            prefix.caches)
+        failures += check_traced(f"prefill_with_prefix[s={s}]", tr)
+    for _ in range(2):
+        for s in suffix_buckets:
+            out = gen.generate({"tokens": jnp.ones((b, s), jnp.int32)},
+                               max_new_tokens=mnt, seed=0,  # seed: ok deterministic contract probe
+                               prefix_cache=prefix)
+    failures += check_recompiles("prefill_with_prefix",
+                                 gen._prefill_with_prefix,
+                                 len(suffix_buckets))
+    return failures
+
+
+CONTRACTS = (
+    ("lookup_and_touch", contract_lookup_and_touch),
+    ("insert_batch", contract_insert_batch),
+    ("ivf_lookup", contract_ivf_lookup),
+    ("fused_decode", contract_fused_decode),
+    ("prefix_suffix_prefill", contract_prefix_suffix_prefill),
+)
+
+
+def run_all() -> List[str]:
+    failures: List[str] = []
+    for _name, fn in CONTRACTS:
+        failures += fn()
+    return failures
+
+
+def main(argv=None) -> int:
+    failures = run_all()
+    for f in failures:
+        print(f)
+    if failures:
+        print(f"FAIL: {len(failures)} contract violation(s)")
+        return 1
+    print(f"analysis contracts: {len(CONTRACTS)} hot paths clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

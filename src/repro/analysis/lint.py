@@ -1,0 +1,536 @@
+"""Repo-specific AST lint over ``src/repro`` (DESIGN.md §10, Layer 1).
+
+Run as ``python -m repro.analysis.lint`` (or ``make analyze``); the same
+checks run as a pytest in ``tests/test_analysis_lint.py`` so CI cannot
+pass with a dirty tree.
+
+Rules
+-----
+Host-sync rules — apply only inside jit-hot modules
+(``registry.HOT_MODULES``); each flagged call is a potential per-request
+host<->device round-trip on the serve path (DESIGN.md §5):
+
+* **HS101** ``.item()`` call.
+* **HS102** ``int(x)`` / ``float(x)`` where ``x`` may be a traced/device
+  value (literals, ``len()``, ``.shape``/``.ndim``/``.size`` reads, and
+  comparisons are exempt — those are static under tracing).
+* **HS103** ``np.asarray`` / ``np.array`` / ``jax.device_get`` /
+  ``.block_until_ready()`` — explicit sync points; the INTENTIONAL
+  per-batch sync is fine but must carry a waiver naming itself.
+* **HS104** ``bool(x)`` on a possibly-traced value (the explicit spelling
+  of an implicit array bool; the runtime transfer-guard harness catches
+  the implicit form).
+
+Seed hygiene — everywhere in ``src/repro`` (the PR 4 bug class: replayed
+``PRNGKey(0)`` streams made every serve batch sample identically):
+
+* **SD201** hard-coded key: ``PRNGKey(<literal>)`` / ``jax.random.key(<literal>)``.
+* **SD202** literal ``seed=0`` keyword at a call site (API *defaults*
+  ``seed: int = 0`` are caller-overridable and stay legal).
+
+Import hygiene:
+
+* **IS301** import-time side effect at module scope (``os.environ``
+  mutation, ``jax.config.update``, ``warnings.filterwarnings``,
+  ``sys.path`` mutation, ...).  Importing a module for its helpers must
+  not rewrite process state (the dryrun.py XLA_FLAGS lesson).
+
+Jit registry — cross-checked against ``registry.JIT_REGISTRY``:
+
+* **JR401** ``jax.jit`` site not in the registry (or an un-analyzable
+  bare reference).
+* **JR402** site policy (donate/static argnums) != registered policy.
+* **JR403** stale registry entry with no matching site.
+
+Waivers
+-------
+``# hostsync: ok <reason>``, ``# seed: ok <reason>``,
+``# import-side-effect: ok <reason>`` on the offending line or the line
+above suppress the matching rule family.  A ``# hostsync: ok`` on a
+``def`` line waives the whole function — for host-side maintenance paths
+(k-means rebuilds, the host-loop decode oracle) that sync by design.
+JR rules have no comment waiver: the registry IS the waiver mechanism.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+from . import registry
+
+WAIVER_TOKENS = {
+    "HS": "hostsync: ok",
+    "SD": "seed: ok",
+    "IS": "import-side-effect: ok",
+}
+
+_SYNC_CALLS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+               "jax.device_get"}
+_SIDE_EFFECT_CALLS = {
+    "os.environ.update", "os.environ.setdefault", "os.environ.pop",
+    "os.putenv", "os.unsetenv",
+    "jax.config.update", "jax.distributed.initialize",
+    "warnings.filterwarnings", "warnings.simplefilter",
+    "logging.basicConfig",
+    "np.random.seed", "numpy.random.seed", "random.seed",
+    "sys.path.insert", "sys.path.append", "sys.path.extend",
+    "matplotlib.use", "multiprocessing.set_start_method",
+}
+_STATIC_ATTRS = {"shape", "ndim", "size", "dtype"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rel: str
+    line: int
+    rule: str
+    msg: str
+
+    def __str__(self) -> str:
+        return f"{self.rel}:{self.line}: {self.rule} {self.msg}"
+
+
+@dataclasses.dataclass
+class JitUse:
+    """One ``jax.jit`` usage found in the AST, with its literal kwargs."""
+    rel: str
+    qualname: str
+    line: int
+    kwargs: Dict[str, ast.expr]
+
+
+_NONLITERAL = object()
+
+
+def _dotted(node: ast.expr) -> Optional[str]:
+    """'np.asarray' for Attribute/Name chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _maybe_traced(node: ast.expr) -> bool:
+    """Could this expression hold a traced/device value?  (Conservative:
+    static-under-jit spellings — literals, len(), .shape reads,
+    comparisons — are exempt; everything else is assumed device-tainted.)
+    """
+    if isinstance(node, ast.Constant):
+        return False
+    if isinstance(node, (ast.Compare, ast.BoolOp)):
+        return False
+    if isinstance(node, ast.UnaryOp):
+        return _maybe_traced(node.operand)
+    if isinstance(node, ast.BinOp):
+        return _maybe_traced(node.left) or _maybe_traced(node.right)
+    if isinstance(node, ast.Call):
+        name = _dotted(node.func)
+        if name == "len":
+            return False        # len(traced) is a static Python int
+        if name in ("min", "max", "round", "abs") and node.args:
+            return any(_maybe_traced(a) for a in node.args)
+        return True
+    if isinstance(node, ast.Attribute):
+        if node.attr in _STATIC_ATTRS:
+            return False
+        return True
+    if isinstance(node, ast.Subscript):
+        # x.shape[i] is static under trace; anything else may gather
+        if isinstance(node.value, ast.Attribute) and \
+                node.value.attr in _STATIC_ATTRS:
+            return False
+        return True
+    if isinstance(node, (ast.Name, ast.IfExp, ast.Starred)):
+        return True
+    return True
+
+
+def _is_jax_jit(node: ast.expr, jit_aliases: set) -> bool:
+    if isinstance(node, ast.Attribute) and node.attr == "jit" and \
+            isinstance(node.value, ast.Name) and node.value.id == "jax":
+        return True
+    return isinstance(node, ast.Name) and node.id in jit_aliases
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, rel: str, hot: bool):
+        self.rel = rel
+        self.hot = hot
+        self.violations: List[Violation] = []
+        self.jit_uses: List[JitUse] = []
+        self.scope: List[str] = []
+        self.depth = 0              # function/class nesting (0 = module)
+        self.hs_waived = 0          # nested hostsync-waived functions
+        self.jit_aliases: set = set()
+        self.consumed: set = set()  # id() of jit nodes already recorded
+
+    # ----------------------------------------------------------- helpers
+    def _flag(self, node: ast.AST, rule: str, msg: str) -> None:
+        if rule.startswith("HS") and self.hs_waived:
+            return
+        self.violations.append(
+            Violation(self.rel, getattr(node, "lineno", 0), rule, msg))
+
+    def _qualname(self) -> str:
+        return ".".join(self.scope) if self.scope else "<module>"
+
+    def _record_jit(self, node: ast.AST, qualname: str,
+                    kwargs: Dict[str, ast.expr]) -> None:
+        self.jit_uses.append(
+            JitUse(self.rel, qualname, getattr(node, "lineno", 0), kwargs))
+
+    def _match_jit_call(self, call: ast.Call) -> Optional[Dict[str, ast.expr]]:
+        """kwargs if ``call`` is jax.jit(...) or functools.partial(jax.jit, ...)."""
+        if _is_jax_jit(call.func, self.jit_aliases):
+            self.consumed.add(id(call.func))
+            return {k.arg: k.value for k in call.keywords if k.arg}
+        fname = _dotted(call.func)
+        if fname in ("functools.partial", "partial") and call.args and \
+                _is_jax_jit(call.args[0], self.jit_aliases):
+            self.consumed.add(id(call.args[0]))
+            return {k.arg: k.value for k in call.keywords if k.arg}
+        return None
+
+    # ----------------------------------------------------------- imports
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.module == "jax":
+            for alias in node.names:
+                if alias.name == "jit":
+                    self.jit_aliases.add(alias.asname or "jit")
+        self.generic_visit(node)
+
+    # ------------------------------------------------------------ scopes
+    def _visit_function(self, node) -> None:
+        for dec in node.decorator_list:
+            handled = False
+            if isinstance(dec, ast.Call):
+                kwargs = self._match_jit_call(dec)
+                if kwargs is not None:
+                    self._record_jit(
+                        dec, ".".join(self.scope + [node.name]), kwargs)
+                    # still lint the decorator's argument expressions
+                    self.generic_visit(dec)
+                    handled = True
+            elif _is_jax_jit(dec, self.jit_aliases):
+                self.consumed.add(id(dec))
+                self._record_jit(dec, ".".join(self.scope + [node.name]), {})
+                handled = True
+            if not handled:
+                self.visit(dec)
+        for default in list(node.args.defaults) + \
+                [d for d in node.args.kw_defaults if d is not None]:
+            self.visit(default)
+        waived = _line_has_waiver_text(self._lines, node.lineno, "HS")
+        self.scope.append(node.name)
+        self.depth += 1
+        self.hs_waived += int(waived)
+        for stmt in node.body:
+            self.visit(stmt)
+        self.hs_waived -= int(waived)
+        self.depth -= 1
+        self.scope.pop()
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._visit_function(node)
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        self._visit_function(node)
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        for dec in node.decorator_list:
+            self.visit(dec)
+        self.scope.append(node.name)
+        self.depth += 1
+        for stmt in node.body:
+            self.visit(stmt)
+        self.depth -= 1
+        self.scope.pop()
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        # lambdas stay in the enclosing qualname (jit sites here are
+        # registered under the enclosing function)
+        self.generic_visit(node)
+
+    # ------------------------------------------------------------- calls
+    def visit_Call(self, node: ast.Call) -> None:
+        kwargs = self._match_jit_call(node)
+        if kwargs is not None:
+            self._record_jit(node, self._qualname(), kwargs)
+        name = _dotted(node.func)
+        if self.hot:
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "item" and not node.args:
+                self._flag(node, "HS101",
+                           ".item() is a device->host sync on the hot path")
+            elif isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "block_until_ready":
+                self._flag(node, "HS103",
+                           "block_until_ready() stalls the dispatch pipeline")
+            elif name in _SYNC_CALLS:
+                self._flag(node, "HS103",
+                           f"{name}() pulls device data to host — batch it "
+                           "into the per-serve-batch sync or waive it")
+            elif name in ("int", "float") and len(node.args) == 1 and \
+                    not node.keywords and _maybe_traced(node.args[0]):
+                self._flag(node, "HS102",
+                           f"{name}() on a possibly-traced value forces a "
+                           "host sync — use .tolist()/device_get batching")
+            elif name == "bool" and len(node.args) == 1 and \
+                    _maybe_traced(node.args[0]):
+                self._flag(node, "HS104",
+                           "bool() on a possibly-traced value forces a "
+                           "host sync")
+        if name is not None and (name.endswith(".PRNGKey")
+                                 or name == "PRNGKey"
+                                 or name == "jax.random.key"):
+            if node.args and isinstance(node.args[0], ast.Constant):
+                self._flag(node, "SD201",
+                           f"hard-coded PRNG key {name}"
+                           f"({node.args[0].value!r}) — thread a per-call "
+                           "seed instead (the PR 4 replayed-stream bug)")
+        for kw in node.keywords:
+            if kw.arg == "seed" and isinstance(kw.value, ast.Constant) and \
+                    kw.value.value == 0:
+                # anchor at the kwarg's own line so a waiver comment can
+                # sit next to `seed=0` in a multi-line call
+                self._flag(kw.value, "SD202",
+                           "literal seed=0 at a call site replays one key "
+                           "stream — thread a counter or config seed")
+        self.generic_visit(node)
+
+    # ----------------------------------------------- module-level effects
+    def _check_module_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.Assign, ast.AugAssign)):
+            targets = stmt.targets if isinstance(stmt, ast.Assign) \
+                else [stmt.target]
+            for t in targets:
+                if isinstance(t, ast.Subscript) and \
+                        _dotted(t.value) in ("os.environ", "environ"):
+                    self._flag(stmt, "IS301",
+                               "os.environ mutated at import time — move it "
+                               "behind main()/a function (importing a module "
+                               "for helpers must not rewrite process state)")
+        if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Call):
+            name = _dotted(stmt.value.func)
+            if name in _SIDE_EFFECT_CALLS:
+                self._flag(stmt, "IS301",
+                           f"import-time call to {name}() — move it behind "
+                           "main()/a function")
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.stmt):
+                self._check_module_stmt(child)
+
+    # -------------------------------------------------------------- run
+    def run(self, tree: ast.Module, lines: List[str]) -> None:
+        self._lines = lines
+        for stmt in tree.body:
+            if not isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef)):
+                self._check_module_stmt(stmt)
+        self.visit(tree)
+        # bare jax.jit references that none of the recognized patterns
+        # consumed (aliased, stored, passed around) are un-analyzable
+        for node in ast.walk(tree):
+            if _is_jax_jit(node, self.jit_aliases) and \
+                    id(node) not in self.consumed and \
+                    isinstance(node, ast.Attribute):
+                self._flag(node, "JR401",
+                           "bare jax.jit reference — only direct "
+                           "jax.jit(...) / functools.partial(jax.jit, ...) "
+                           "sites can be registry-checked")
+
+
+def _line_has_waiver_text(lines: List[str], lineno: int, family: str) -> bool:
+    token = WAIVER_TOKENS.get(family)
+    if token is None or not lines:
+        return False
+    idx = lineno - 1
+    if 0 <= idx < len(lines) and token in lines[idx]:
+        return True
+    prev = idx - 1
+    if 0 <= prev < len(lines):
+        stripped = lines[prev].strip()
+        if stripped.startswith("#") and token in stripped:
+            return True
+    return False
+
+
+def _apply_waivers(violations: List[Violation],
+                   lines: List[str]) -> List[Violation]:
+    out = []
+    for v in violations:
+        if _line_has_waiver_text(lines, v.line, v.rule[:2]):
+            continue
+        out.append(v)
+    return out
+
+
+# ---------------------------------------------------------------- driver
+
+def lint_source(source: str, rel: str,
+                collect_jit: Optional[List[JitUse]] = None) -> List[Violation]:
+    """Lint one module's source; ``rel`` is its path relative to src/repro.
+
+    Registry cross-checking is a whole-tree property — use
+    :func:`check_registry` over the collected ``JitUse`` list (or
+    :func:`lint_tree`, which does both).
+    """
+    tree = ast.parse(source, filename=rel)
+    lines = source.splitlines()
+    linter = _Linter(rel, hot=registry.is_hot(rel))
+    linter.run(tree, lines)
+    if collect_jit is not None:
+        collect_jit.extend(linter.jit_uses)
+    return _apply_waivers(linter.violations, lines)
+
+
+def _literal_argnums(node: Optional[ast.expr]):
+    """Literal tuple value of a donate/static kwarg, or _NONLITERAL."""
+    if node is None:
+        return ()
+    if isinstance(node, ast.Constant):
+        return (node.value,) if node.value is not None else _NONLITERAL
+    if isinstance(node, (ast.Tuple, ast.List)):
+        vals = []
+        for e in node.elts:
+            if not isinstance(e, ast.Constant):
+                return _NONLITERAL
+            vals.append(e.value)
+        return tuple(vals)
+    return _NONLITERAL
+
+
+def check_registry(uses: List[JitUse],
+                   table: Tuple[registry.JitSite, ...] = registry.JIT_REGISTRY,
+                   files_scanned: Optional[List[str]] = None
+                   ) -> List[Violation]:
+    """Cross-check found jit sites against the declared registry."""
+    violations: List[Violation] = []
+    by_key: Dict[Tuple[str, str], List[JitUse]] = {}
+    for u in uses:
+        by_key.setdefault((u.rel, u.qualname), []).append(u)
+    declared: Dict[Tuple[str, str], List[registry.JitSite]] = {}
+    for s in table:
+        declared.setdefault((s.file, s.qualname), []).append(s)
+
+    for key, found in sorted(by_key.items()):
+        decl = declared.pop(key, [])
+        for i, use in enumerate(found):
+            if i >= len(decl):
+                violations.append(Violation(
+                    use.rel, use.line, "JR401",
+                    f"jax.jit site #{i + 1} in `{use.qualname}` is not in "
+                    "analysis/registry.py — declare its donation/static "
+                    "policy there"))
+                continue
+            site = decl[i]
+            actual_donate = _literal_argnums(
+                use.kwargs.get("donate_argnums",
+                               use.kwargs.get("donate_argnames")))
+            if site.donate is not None:
+                if actual_donate is _NONLITERAL:
+                    violations.append(Violation(
+                        use.rel, use.line, "JR402",
+                        f"`{use.qualname}` computes donate_argnums "
+                        "dynamically but the registry declares "
+                        f"{site.donate!r} — register donate=None with a "
+                        "note"))
+                elif tuple(actual_donate) != tuple(site.donate):
+                    violations.append(Violation(
+                        use.rel, use.line, "JR402",
+                        f"`{use.qualname}` donate_argnums="
+                        f"{tuple(actual_donate)!r} but the registry "
+                        f"declares {tuple(site.donate)!r}"
+                        + (f" ({site.note})" if site.note else "")))
+            nums = _literal_argnums(use.kwargs.get("static_argnums"))
+            names = _literal_argnums(use.kwargs.get("static_argnames"))
+            if site.static is not None:
+                if nums is _NONLITERAL or names is _NONLITERAL:
+                    violations.append(Violation(
+                        use.rel, use.line, "JR402",
+                        f"`{use.qualname}` computes static argnums "
+                        "dynamically but the registry declares "
+                        f"{site.static!r} — register static=None with a "
+                        "note"))
+                else:
+                    actual_static = tuple(nums) + tuple(names)
+                    if actual_static != tuple(site.static):
+                        violations.append(Violation(
+                            use.rel, use.line, "JR402",
+                            f"`{use.qualname}` static argnums/argnames="
+                            f"{actual_static!r} but the registry declares "
+                            f"{tuple(site.static)!r}"))
+        if len(decl) > len(found):
+            for site in decl[len(found):]:
+                violations.append(Violation(
+                    site.file, 0, "JR403",
+                    f"stale registry entry for `{site.qualname}` — "
+                    "declared but no matching jax.jit site found"))
+    for (rel, qualname), sites in sorted(declared.items()):
+        if files_scanned is not None and rel not in files_scanned:
+            violations.append(Violation(
+                rel, 0, "JR403",
+                f"registry names `{qualname}` in a file the lint never "
+                "scanned — moved or deleted?"))
+            continue
+        for _ in sites:
+            violations.append(Violation(
+                rel, 0, "JR403",
+                f"stale registry entry for `{qualname}` — declared but no "
+                "matching jax.jit site found"))
+    return violations
+
+
+def find_root() -> str:
+    """The src/repro package directory this module lives in."""
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def lint_tree(root: Optional[str] = None) -> List[Violation]:
+    """Lint every module under ``root`` (default: this src/repro tree)."""
+    root = root or find_root()
+    violations: List[Violation] = []
+    uses: List[JitUse] = []
+    files: List[str] = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames if d != "__pycache__")
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            rel = os.path.relpath(path, root).replace(os.sep, "/")
+            files.append(rel)
+            with open(path, encoding="utf-8") as f:
+                source = f.read()
+            violations.extend(lint_source(source, rel, collect_jit=uses))
+    violations.extend(check_registry(uses, files_scanned=files))
+    return violations
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="repo-specific hot-path lint (DESIGN.md §10)")
+    ap.add_argument("--root", default=None,
+                    help="package root to lint (default: the src/repro "
+                         "tree this module lives in)")
+    args = ap.parse_args(argv)
+    violations = lint_tree(args.root)
+    for v in violations:
+        print(v)
+    if violations:
+        print(f"FAIL: {len(violations)} lint violation(s)")
+        return 1
+    print("analysis lint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

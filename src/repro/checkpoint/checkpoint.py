@@ -57,7 +57,7 @@ def load_checkpoint(ckpt_dir: str, step: int, like: Any) -> Tuple[Any, dict]:
     keys = list(flat_like.keys())
     assert len(keys) == len(leaves)
     restored = []
-    for k, leaf in zip(keys, leaves):
+    for k, _leaf in zip(keys, leaves):
         arr = data[k]
         tgt = jnp.dtype(meta["dtypes"][k])
         restored.append(jnp.asarray(arr, dtype=tgt))

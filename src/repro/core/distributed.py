@@ -46,7 +46,7 @@ def shard_cache_state(state, mesh: Mesh, axis: str = "data"):
     return out
 
 
-def shard_ivf_cache_state(state, mesh: Mesh, cfg: cache_lib.CacheConfig,
+def shard_ivf_cache_state(state, mesh: Mesh, cfg: cache_lib.CacheConfig,  # hostsync: ok host-side regroup after init/rebuild, not the hot loop
                           axis: str = "data"):
     """Converts a local-layout IVF cache state to the sharded layout.
 

@@ -114,8 +114,10 @@ class TweakLLMEngine:
                  embedder_params, embedder_cfg,
                  big: Generator, small: Generator,
                  cache_cfg: cache_lib.CacheConfig,
-                 router_cfg: router_lib.RouterConfig = router_lib.RouterConfig(),
+                 router_cfg: Optional[router_lib.RouterConfig] = None,
                  max_query_len: int = 64, use_prefix_cache: bool = True):
+        if router_cfg is None:
+            router_cfg = router_lib.RouterConfig()
         self.tok = tokenizer
         self.embedder_params = embedder_params
         self.embedder_cfg = embedder_cfg
@@ -157,9 +159,11 @@ class TweakLLMEngine:
         return self._embed_with_lengths(texts)[0]
 
     def _embed_with_lengths(self, texts: List[str]):
-        """(embeddings (n, D), real query-token lengths (n,)) in one encode."""
+        """(embeddings (n, D), real query-token lengths: list of n ints).
+
+        Lengths come from the host-side tokenizer mask, not the device."""
         toks, mask = self.tok.encode_batch(texts, self.max_query_len)
-        qlens = mask.sum(axis=1).astype(np.int64)
+        qlens = mask.sum(axis=1).astype(np.int64).tolist()
         toks, mask, b = pad_to_buckets(toks, mask)
         embs = self._embed(self.embedder_params, jnp.asarray(toks),
                            jnp.asarray(mask))[:b]
@@ -185,11 +189,19 @@ class TweakLLMEngine:
         # stats) so a ValueError cannot leave half-served accounting
         self._tweak_encode_len(max_new_tokens)
         embs, qlens = self._embed_with_lengths(queries)
-        self.stats.baseline_prompt_tokens += int(qlens.sum())
+        self.stats.baseline_prompt_tokens += sum(qlens)
         self.state, scores, idxs, dec = self._lookup_touch(self.state, embs)
-        top1 = np.asarray(scores[:, 0])
-        top1_idx = np.asarray(idxs[:, 0])
-        decisions = np.asarray(dec)
+        # THE per-serve-batch device->host sync (DESIGN.md §5): scores,
+        # slots, and routing decisions pulled in one device_get; the
+        # top-1 column is sliced on host (device-side `[:, 0]` would
+        # dispatch its index as an H2D transfer) and everything below
+        # works on host scalars.
+        scores, idxs, decisions = jax.device_get(  # hostsync: ok the one per-batch sync
+            (scores, idxs, dec))
+        top1 = scores[:, 0]
+        top1_l = top1.tolist()
+        slot_l = idxs[:, 0].tolist()
+        dec_l = decisions.tolist()
 
         responses: List[Optional[str]] = [None] * n
         gen_tokens = [0] * n
@@ -197,14 +209,14 @@ class TweakLLMEngine:
 
         # EXACT: verbatim cached response
         for i in np.nonzero(decisions == router_lib.EXACT)[0]:
-            slot = int(top1_idx[i])
+            slot = slot_l[i]
             cached = self._text_store.get(slot)
             responses[i] = cached[1] if cached else self._decode_cached(slot)
             self.stats.exact += 1
         # TWEAK: small LLM refines cached response
         tweak_ids = np.nonzero(decisions == router_lib.TWEAK)[0]
         if len(tweak_ids):
-            self._run_tweak(queries, tweak_ids, top1_idx, responses,
+            self._run_tweak(queries, tweak_ids, slot_l, responses,
                             max_new_tokens, gen_tokens, prompt_tokens)
         # MISS: big LLM generates from scratch + cache insert
         miss_ids = np.nonzero(decisions == router_lib.MISS)[0]
@@ -218,36 +230,39 @@ class TweakLLMEngine:
         bands = np.full(n, -1, np.int32)
         for bi, (lo, hi) in enumerate(router_lib.BANDS):
             bands[(top1 >= lo) & (top1 < hi)] = bi
-        meta = [{"sim": float(top1[i]), "decision": int(decisions[i]),
-                 "band": int(bands[i]), "gen_tokens": gen_tokens[i]}
+        band_l = bands.tolist()
+        meta = [{"sim": top1_l[i], "decision": dec_l[i],
+                 "band": band_l[i], "gen_tokens": gen_tokens[i]}
                 for i in range(n)]
         miss_mask = decisions == router_lib.MISS
         return BatchResult(
             responses, meta,
-            big_tokens=int(sum(t for i, t in enumerate(gen_tokens)
-                               if miss_mask[i])),
-            small_tokens=int(sum(t for i, t in enumerate(gen_tokens)
-                                 if not miss_mask[i])),
-            big_prompt_tokens=int(sum(t for i, t in enumerate(prompt_tokens)
-                                      if miss_mask[i])),
-            small_prompt_tokens=int(sum(t for i, t in enumerate(prompt_tokens)
-                                        if not miss_mask[i])))
+            big_tokens=sum(t for i, t in enumerate(gen_tokens)
+                           if miss_mask[i]),
+            small_tokens=sum(t for i, t in enumerate(gen_tokens)
+                             if not miss_mask[i]),
+            big_prompt_tokens=sum(t for i, t in enumerate(prompt_tokens)
+                                  if miss_mask[i]),
+            small_prompt_tokens=sum(t for i, t in enumerate(prompt_tokens)
+                                    if not miss_mask[i]))
 
     # ------------------------------------------------------------- paths
     def _next_seed(self) -> int:
         return next(self._seed_seq)
 
-    def _decode_cached(self, slot: int) -> str:
-        toks = np.asarray(self.state["r_tokens"][slot])
-        mask = np.asarray(self.state["r_mask"][slot])
-        return self.tok.decode_ids([int(t) for t, m in zip(toks, mask) if m > 0])
+    def _decode_cached(self, slot: int) -> str:  # hostsync: ok cold fallback when the host text mirror lacks a slot
+        toks, mask = jax.device_get((self.state["r_tokens"][slot],
+                                     self.state["r_mask"][slot]))
+        return self.tok.decode_ids(
+            [t for t, m in zip(toks.tolist(), mask.tolist()) if m > 0])
 
-    def _decode_cached_query(self, slot: int) -> str:
+    def _decode_cached_query(self, slot: int) -> str:  # hostsync: ok cold fallback, see _decode_cached
         """Decode a slot's cached QUERY tokens (BOS stripped)."""
-        toks = np.asarray(self.state["q_tokens"][slot])
-        mask = np.asarray(self.state["q_mask"][slot])
-        return self.tok.decode_ids([int(t) for t, m in zip(toks, mask)
-                                    if m > 0 and int(t) != self.tok.bos])
+        toks, mask = jax.device_get((self.state["q_tokens"][slot],
+                                     self.state["q_mask"][slot]))
+        return self.tok.decode_ids(
+            [t for t, m in zip(toks.tolist(), mask.tolist())
+             if m > 0 and t != self.tok.bos])
 
     @staticmethod
     def _visible_ids(row: np.ndarray, n_gen: int, ended: bool) -> List[int]:
@@ -256,9 +271,9 @@ class TweakLLMEngine:
         ``n_gen`` counts real generated tokens including the terminating
         EOS when ``ended``; the visible response is everything before it.
         The lengths come back from the fused decode loop, so no per-row
-        EOS scan is needed here.
+        EOS scan is needed here.  ``row`` is already host-resident.
         """
-        return [int(t) for t in row[:n_gen - 1 if ended else n_gen]]
+        return row[:n_gen - 1 if ended else n_gen].tolist()
 
     def _tweak_static_tokens(self, suffix_only: bool = False) -> int:
         if self._static_counts is None:
@@ -369,9 +384,9 @@ class TweakLLMEngine:
             return None
         return budget
 
-    def _run_tweak(self, queries, ids, top1_idx, responses, max_new_tokens,
+    def _run_tweak(self, queries, ids, slot_l, responses, max_new_tokens,
                    gen_tokens, prompt_tokens):
-        slots = [int(top1_idx[i]) for i in ids]
+        slots = [slot_l[i] for i in ids]
         # The device cache is the source of truth: a slot can be live there
         # but absent from the host text mirror (offline-populated state,
         # restored checkpoint, distributed shard).  Fall back to decoding
@@ -402,11 +417,13 @@ class TweakLLMEngine:
     def _emit_tweak_rows(self, rows, ids, out, lengths, ended, responses,
                          gen_tokens):
         """Decode generated rows back into their batch positions + billing."""
+        lengths = lengths.tolist()
+        ended = ended.tolist()
         for j, row in enumerate(rows):
             i = ids[row]
-            n_gen = int(lengths[j])
+            n_gen = lengths[j]
             responses[i] = self.tok.decode_ids(
-                self._visible_ids(out[j], n_gen, bool(ended[j])))
+                self._visible_ids(out[j], n_gen, ended[j]))
             self.stats.small_tokens += n_gen
             self.stats.tweak += 1
             gen_tokens[i] = n_gen
@@ -416,7 +433,7 @@ class TweakLLMEngine:
         """Fallback: prefill the whole Appendix-A prompt (no prefix reuse)."""
         toks, mask = tweak_lib.build_tweak_batch(
             self.tok, new_qs, cqs, crs, self._tweak_encode_len(max_new_tokens))
-        real_lens = mask.sum(axis=1).astype(np.int64)
+        real_lens = mask.sum(axis=1).astype(np.int64).tolist()
         toks, mask, b = pad_to_buckets(toks, mask)
         out, lengths, ended = self.small.generate_with_lengths(
             {"tokens": jnp.asarray(toks)}, max_new_tokens=max_new_tokens,
@@ -424,8 +441,8 @@ class TweakLLMEngine:
         self._emit_tweak_rows(range(len(ids)), ids, out, lengths, ended,
                               responses, gen_tokens)
         for j, i in enumerate(ids):
-            prompt_tokens[i] = int(real_lens[j])
-            self.stats.small_prompt_tokens += int(real_lens[j])
+            prompt_tokens[i] = real_lens[j]
+            self.stats.small_prompt_tokens += real_lens[j]
 
     def _run_tweak_prefixed(self, new_qs, cqs, crs, ids, responses,
                             max_new_tokens, suffix_budget, gen_tokens,
@@ -441,10 +458,10 @@ class TweakLLMEngine:
         prefix_ids = self._tweak_prefix_ids()
         toks, mask = tweak_lib.build_tweak_suffix_batch(
             self.tok, new_qs, cqs, crs, suffix_budget)
-        real_lens = mask.sum(axis=1).astype(np.int64)
+        real_lens = mask.sum(axis=1).astype(np.int64).tolist()
         groups: Dict[int, List[int]] = {}
         for row, rl in enumerate(real_lens):
-            groups.setdefault(bucket_len(max(int(rl), 1)), []).append(row)
+            groups.setdefault(bucket_len(max(rl, 1)), []).append(row)
         for bucket in sorted(groups):
             rows = groups[bucket]
             sub_t = toks[rows][:, :bucket]
@@ -457,9 +474,9 @@ class TweakLLMEngine:
                 prefix_cache=pc)
             self._emit_tweak_rows(rows, ids, out, lengths, ended,
                                   responses, gen_tokens)
-            for j, row in enumerate(rows):
+            for row in rows:
                 i = ids[row]
-                real = len(prefix_ids) + int(real_lens[row])
+                real = len(prefix_ids) + real_lens[row]
                 prompt_tokens[i] = real
                 self.stats.small_prompt_tokens += real
 
@@ -485,12 +502,16 @@ class TweakLLMEngine:
         embs = jnp.concatenate(
             [embs, jnp.zeros((nb - n, embs.shape[1]), embs.dtype)]) \
             if nb > n else embs
+        # the traced `count` scalar is device_put explicitly — passing the
+        # bare python int would transfer it implicitly at every dispatch
         self.state, slots = self._insert_batch(
             self.state, embs, jnp.asarray(pad(qt)), jnp.asarray(pad(qm)),
-            jnp.asarray(pad(rt)), jnp.asarray(pad(rm)), n)
-        slots = np.asarray(slots)  # single device->host sync per batch
+            jnp.asarray(pad(rt)), jnp.asarray(pad(rm)),
+            jax.device_put(np.int32(n)))
+        # single device->host sync per insert batch
+        slots = jax.device_get(slots).tolist()  # hostsync: ok the one per-insert sync
         for j in range(n):
-            self._text_store[int(slots[j])] = (texts[j], resp_texts[j])
+            self._text_store[slots[j]] = (texts[j], resp_texts[j])
         # IVF maintenance: k-means recluster when enough writes piled up
         # (or the member table overflowed).  No-op for flat caches.
         self.state, _ = index_lib.maybe_reindex(self.state, self.cache_cfg,
@@ -501,26 +522,30 @@ class TweakLLMEngine:
                   gen_tokens, prompt_tokens):
         texts = [queries[i] for i in ids]
         toks, mask = self.tok.encode_batch(texts, self.max_query_len)
-        real_lens = mask.sum(axis=1).astype(np.int64)
+        real_lens = mask.sum(axis=1).astype(np.int64).tolist()
         toks, mask, b = pad_to_buckets(toks, mask)
         out, lengths, ended = self.big.generate_with_lengths(
             {"tokens": jnp.asarray(toks)}, max_new_tokens=max_new_tokens,
             seed=self._next_seed())
+        lengths = lengths.tolist()
+        ended = ended.tolist()
         resp_tokens, resp_texts = [], []
         for j, i in enumerate(ids):
-            n_gen = int(lengths[j])
-            visible = self._visible_ids(out[j], n_gen, bool(ended[j]))
+            n_gen = lengths[j]
+            visible = self._visible_ids(out[j], n_gen, ended[j])
             resp_text = self.tok.decode_ids(visible)
             responses[i] = resp_text
             resp_tokens.append(visible)
             resp_texts.append(resp_text)
             self.stats.big_tokens += n_gen
-            self.stats.big_prompt_tokens += int(real_lens[j])
+            self.stats.big_prompt_tokens += real_lens[j]
             self.stats.miss += 1
             gen_tokens[i] = n_gen
-            prompt_tokens[i] = int(real_lens[j])
+            prompt_tokens[i] = real_lens[j]
+        # explicit device_put of the row indices: a host-array gather
+        # would move them implicitly (transfer-guard unsafe)
         self._insert_entries(texts, resp_tokens, resp_texts,
-                             embs[np.asarray(ids)])
+                             jnp.take(embs, jax.device_put(ids), axis=0))
 
     # ------------------------------------------------- offline population
     def populate(self, queries: List[str], responses: List[str]):
@@ -534,6 +559,7 @@ class TweakLLMEngine:
         embs = self.embed_texts(queries)
         rt, rm = self.tok.encode_batch(responses, self.cache_cfg.max_response_tokens,
                                        add_bos=False)
-        resp_tokens = [[int(t) for t, m in zip(rt[i], rm[i]) if m > 0]
+        rt_l, rm_l = rt.tolist(), rm.tolist()
+        resp_tokens = [[t for t, m in zip(rt_l[i], rm_l[i]) if m > 0]
                        for i in range(len(queries))]
         self._insert_entries(queries, resp_tokens, responses, embs)

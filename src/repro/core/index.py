@@ -208,7 +208,7 @@ def lookup(state, cfg, q_embs):
 
 # ------------------------------------------------------------- rebuild
 
-def _spherical_kmeans(x: np.ndarray, k: int, iters: int,
+def _spherical_kmeans(x: np.ndarray, k: int, iters: int,  # hostsync: ok host-driven maintenance path
                       rng: np.random.Generator) -> np.ndarray:
     """Lloyd iterations with cosine assignment (rows of x unit-norm).
 
@@ -234,7 +234,7 @@ def _spherical_kmeans(x: np.ndarray, k: int, iters: int,
     return cent.astype(np.float32)
 
 
-def build_index(state, cfg, seed: int = 0, sample: int = 65536):
+def build_index(state, cfg, seed: int = 0, sample: int = 65536):  # hostsync: ok host-driven maintenance path
     """Host-side recluster/rebalance: fresh k-means + compact member table.
 
     Maintenance path (called by ``maybe_reindex`` every ``reindex_every``
@@ -307,7 +307,9 @@ def maybe_reindex(state, cfg, seed: int = 0):
     """
     if getattr(cfg, "index", "flat") != "ivf":
         return state, False
-    if bool(state["ivf_overflow"]) or \
-            int(state["ivf_pending"]) >= resolve(cfg).reindex_every:
+    # one device_get for both maintenance scalars
+    overflow, pending = jax.device_get(  # hostsync: ok two scalars, once per insert batch
+        (state["ivf_overflow"], state["ivf_pending"]))
+    if overflow or pending >= resolve(cfg).reindex_every:
         return build_index(state, cfg, seed=seed), True
     return state, False

@@ -51,7 +51,7 @@ def run_debate(query: str, resp_a: str, resp_b: str, loglik_a: float,
     # round 2: sees history (consensus pull), sequential order per paper
     consensus = float(np.mean(margins))
     final_margins = []
-    for i, p in enumerate(PERSONAS):
+    for i, _p in enumerate(PERSONAS):
         m2 = (1 - HISTORY_PULL) * margins[i] + HISTORY_PULL * consensus
         final_margins.append(m2)
         votes.append(_vote(m2))

@@ -1,8 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=512").strip()
-# ^ MUST run before any jax import (device count locks at first init).
-
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
 
 For each combination this:
@@ -13,11 +8,27 @@ For each combination this:
      bytes parsed from the post-SPMD HLO,
   4. writes experiments/dryrun/<arch>__<shape>__<mesh>.json.
 
+Running as a script forces a 512-device host platform via XLA_FLAGS —
+:func:`_force_host_device_count` runs first thing in :func:`main`, which
+still precedes the first jax device init because jax initializes its
+backend lazily (the device count locks at first use, not at import).
+IMPORTING this module never touches the environment, so test helpers
+(``collective_bytes``, ``_shape_bytes``) are safe to use anywhere.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both] [--skip-existing]
 """
 import argparse
+import os
+
+
+def _force_host_device_count(n: int = 512) -> None:
+    """Fake an ``n``-device host platform (call BEFORE first jax use)."""
+    flag = f"--xla_force_host_platform_device_count={n}"
+    flags = os.environ.get("XLA_FLAGS", "")
+    if flag not in flags:
+        os.environ["XLA_FLAGS"] = (flags + " " + flag).strip()
 import json
 import re
 import time
@@ -227,6 +238,9 @@ def out_path(arch: str, shape: str, mesh_name: str, out_dir: str = None) -> str:
 
 
 def main():
+    # must precede the first jax device use in this process (the lazy
+    # backend init locks the device count)
+    _force_host_device_count()
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES) + [None])

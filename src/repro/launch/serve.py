@@ -51,8 +51,8 @@ def build_engine(*, vocab: int = 8192, threshold: float = 0.7,
     big_m, small_m = build_model(big_cfg), build_model(small_cfg)
     gen_cfg = GenerateConfig(max_new_tokens=16,
                              sampler=SamplerConfig(vocab_size=vocab))
-    big = Generator(big_m, big_m.init(jax.random.PRNGKey(1)), gen_cfg)
-    small = Generator(small_m, small_m.init(jax.random.PRNGKey(2)), gen_cfg)
+    big = Generator(big_m, big_m.init(jax.random.PRNGKey(1)), gen_cfg)  # seed: ok demo CLI, fixed init for reproducibility
+    small = Generator(small_m, small_m.init(jax.random.PRNGKey(2)), gen_cfg)  # seed: ok demo CLI, fixed init for reproducibility
     return TweakLLMEngine(
         tokenizer=tok, embedder_params=eparams, embedder_cfg=ecfg,
         big=big, small=small,
@@ -84,9 +84,9 @@ def main():
     eng = build_engine(threshold=args.threshold, policy=args.policy,
                        index=args.index,
                        train_embedder_steps=args.embedder_steps)
-    wl = WorkloadGenerator(profile=args.profile, seed=0)
+    wl = WorkloadGenerator(profile=args.profile, seed=0)  # seed: ok demo CLI, reproducible trace
     texts = [q.text for q in wl.sample(args.queries)]
-    trace = poisson_trace(texts, args.rate, seed=0)
+    trace = poisson_trace(texts, args.rate, seed=0)  # seed: ok demo CLI, reproducible trace
     sched = Scheduler(
         eng, SchedulerConfig(max_wait=args.max_wait, max_batch=args.batch,
                              max_new_tokens=8),

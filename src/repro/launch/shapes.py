@@ -66,7 +66,7 @@ def decode_inputs(cfg: ModelConfig, seq: int, batch: int) -> Dict[str, Any]:
 
 def abstract_params(cfg: ModelConfig):
     model = build_model(cfg)
-    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))  # seed: ok abstract shapes only, key never materialized
 
 
 def make_step_fn(cfg: ModelConfig, kind: str, *, with_optimizer: bool = True,

@@ -44,7 +44,7 @@ def main():
               "text-token stream with random frontend embeddings")
     model = build_model(cfg)
     tok = HashWordTokenizer(cfg.vocab_size)
-    params = model.init(jax.random.PRNGKey(0))
+    params = model.init(jax.random.PRNGKey(0))  # seed: ok CLI smoke trainer, deterministic init
     n_params = sum(p.size for p in jax.tree.leaves(params))
     print(f"arch={cfg.name} params={n_params/1e6:.2f}M seq={args.seq} "
           f"batch={args.batch}")

@@ -183,4 +183,4 @@ class ModelConfig:
             total += per_kind[kind]
         if self.enc_layers:
             total += self.enc_layers * (attn_p + mlp_p)
-        return int(total)
+        return int(total)  # hostsync: ok static config arithmetic, no device values

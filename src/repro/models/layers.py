@@ -33,17 +33,21 @@ def apply_norm(params, x, norm_type: str, eps: float = 1e-6):
     # input dtype.  Never converts the full activation to fp32: that convert
     # gets hoisted across the remat-saved residual stack by XLA and doubles
     # activation memory on the big configs (f32 copy of every bf16 save).
+    # params are (d,); broadcast them explicitly so the math stays legal
+    # under jax_numpy_rank_promotion="raise" (the sanitize harness)
+    expand = (1,) * (x.ndim - 1) + (-1,)
+    scale = params["scale"].astype(x.dtype).reshape(expand)
     if norm_type == "layernorm":
         mu = jnp.mean(x, axis=-1, keepdims=True, dtype=jnp.float32)
         xc = x - mu.astype(x.dtype)
         var = jnp.mean(jnp.square(xc), axis=-1, keepdims=True, dtype=jnp.float32)
         inv = jax.lax.rsqrt(var + eps)
-        y = (xc * (inv.astype(x.dtype) * params["scale"].astype(x.dtype))
-             + params["bias"].astype(x.dtype))
+        y = (xc * (inv.astype(x.dtype) * scale)
+             + params["bias"].astype(x.dtype).reshape(expand))
     else:  # rmsnorm
         ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True, dtype=jnp.float32)
         inv = jax.lax.rsqrt(ms + eps)
-        y = x * (inv.astype(x.dtype) * params["scale"].astype(x.dtype))
+        y = x * (inv.astype(x.dtype) * scale)
     return y.astype(x.dtype)
 
 
@@ -85,7 +89,9 @@ def apply_rope(x, positions, theta: float):
     """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
     dh = x.shape[-1]
     freqs = jnp.asarray(rope_frequencies(dh, theta))  # (dh/2,)
-    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    # explicit rank match (rank-promotion=raise safe): (..., S, 1) * (..., 1, dh/2)
+    ang = (positions[..., :, None].astype(jnp.float32)
+           * freqs.reshape((1,) * positions.ndim + (-1,)))  # (..., S, dh/2)
     sin = jnp.sin(ang)[..., :, None, :]
     cos = jnp.cos(ang)[..., :, None, :]
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)

@@ -36,7 +36,7 @@ def init_moe(key, cfg: ModelConfig):
 
 
 def _capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
-    c = int(cfg.capacity_factor * cfg.experts_per_token * tokens_per_group
+    c = int(cfg.capacity_factor * cfg.experts_per_token * tokens_per_group  # hostsync: ok static config arithmetic
             / cfg.num_experts)
     return max(8, ((c + 7) // 8) * 8)
 

@@ -56,8 +56,11 @@ def _causal_conv(params, xbc, conv_state=None):
     else:
         pad = conv_state.astype(jnp.float32)  # (B, W-1, C)
     xp = jnp.concatenate([pad, xf], axis=1)
-    y = sum(xp[:, i:i + xf.shape[1], :] * w[:, i] for i in range(width))
-    y = jax.nn.silu(y + params["conv_b"].astype(jnp.float32))
+    # explicit (1, 1, C) broadcasts keep this legal under
+    # jax_numpy_rank_promotion="raise" (the sanitize harness)
+    y = sum(xp[:, i:i + xf.shape[1], :] * w[None, None, :, i]
+            for i in range(width))
+    y = jax.nn.silu(y + params["conv_b"].astype(jnp.float32)[None, None, :])
     new_state = xp[:, -(width - 1):, :]
     return y.astype(xbc.dtype), new_state.astype(xbc.dtype)
 
@@ -135,8 +138,9 @@ def mamba2_forward(params, x, cfg: ModelConfig):
     xin = xin.reshape(bsz, s, nh, p_hd)
     b = b.reshape(bsz, s, g, ns)
     c = c.reshape(bsz, s, g, ns)
-    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
-    a_log = -jnp.exp(params["a_log"]) * dt          # (B,S,H) log decay
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    a_log = -jnp.exp(params["a_log"])[None, None, :] * dt  # (B,S,H) log decay
     y, h_last = _ssd_chunked(xin, a_log, b, c, dt, cfg)
     y = y + xin.astype(jnp.float32) * params["d_skip"][None, None, :, None]
     y = y.reshape(bsz, s, di).astype(x.dtype)
@@ -168,8 +172,9 @@ def mamba2_decode(params, x, state, cfg: ModelConfig):
     rep = nh // g
     bh = jnp.repeat(b, rep, axis=1) if g != nh else b   # (B,H,N)
     chh = jnp.repeat(c, rep, axis=1) if g != nh else c
-    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
-    a = jnp.exp(-jnp.exp(params["a_log"]) * dt)          # (B,H)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + params["dt_bias"][None, :])   # (B,H)
+    a = jnp.exp(-jnp.exp(params["a_log"])[None, :] * dt)  # (B,H)
     h = state["ssm"] * a[:, :, None, None] + jnp.einsum(
         "bhp,bhn,bh->bhpn", xin, bh, dt)
     y = jnp.einsum("bhpn,bhn->bhp", h, chh) + xin * params["d_skip"][None, :, None]

@@ -81,7 +81,7 @@ def init_lm(key, cfg: ModelConfig):
     scan_params = []
     for j, kind in enumerate(cfg.block_pattern):
         kj = jax.random.split(ks[3 + j], periods)
-        stacked = jax.vmap(lambda k: _init_block(k, kind, cfg))(kj)
+        stacked = jax.vmap(lambda k, kind=kind: _init_block(k, kind, cfg))(kj)
         scan_params.append(stacked)
     params["scan"] = tuple(scan_params)
     rem = []
@@ -252,7 +252,7 @@ def _run_stack_train(params, x, positions, cfg: ModelConfig):
             (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["scan"])
         else:
             for i in range(cfg.pattern_periods):
-                pp = jax.tree.map(lambda t: t[i], params["scan"])
+                pp = jax.tree.map(lambda t, i=i: t[i], params["scan"])
                 (x, aux_total), _ = period_body((x, aux_total), pp)
     for i, kind in enumerate(cfg.pattern_remainder):
         x, a = _block_train(kind, params["rem"][i], x, positions, cfg)
@@ -263,7 +263,7 @@ def _run_stack_train(params, x, positions, cfg: ModelConfig):
 def init_caches(params, batch: int, capacity: int, cfg: ModelConfig):
     del params
     scan_caches = []
-    for j, kind in enumerate(cfg.block_pattern):
+    for kind in cfg.block_pattern:
         one = _init_block_cache(kind, batch, capacity, cfg)
         stacked = jax.tree.map(
             lambda t: jnp.broadcast_to(t, (cfg.pattern_periods,) + t.shape).copy(), one)

@@ -51,7 +51,7 @@ def train_embedder(params, cfg, tokenizer: HashWordTokenizer, *,
         return params, opt, loss
 
     losses = []
-    for s in range(steps):
+    for _s in range(steps):
         triples = [gen.triple() for _ in range(batch)]
         ta, ma = tokenizer.encode_batch([a.text for a, b, n in triples], max_len)
         tb, mb = tokenizer.encode_batch([b.text for a, b, n in triples], max_len)

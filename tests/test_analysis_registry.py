@@ -1,0 +1,85 @@
+"""Registry <-> tree parity: every ``jax.jit`` reference in src/repro is
+an analyzable site, every site has exactly one registry entry, and every
+registry entry points at a real file (DESIGN.md §10).
+"""
+import ast
+import os
+
+from repro.analysis import lint, registry
+from repro.analysis.lint import JitUse, lint_source
+
+
+def _walk_sources():
+    root = lint.find_root()
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames if d != "__pycache__")
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                path = os.path.join(dirpath, fn)
+                rel = os.path.relpath(path, root).replace(os.sep, "/")
+                with open(path, encoding="utf-8") as f:
+                    yield rel, f.read()
+
+
+def _raw_jit_references(source: str) -> int:
+    """Count every ``jax.jit`` attribute access in the AST — the
+    grep-equivalent upper bound on jit sites, immune to comments and
+    docstrings mentioning jax.jit."""
+    count = 0
+    for node in ast.walk(ast.parse(source)):
+        if isinstance(node, ast.Attribute) and node.attr == "jit" and \
+                isinstance(node.value, ast.Name) and node.value.id == "jax":
+            count += 1
+    return count
+
+
+def test_every_jit_reference_is_an_analyzed_site_and_registered():
+    uses, raw = [], 0
+    for rel, source in _walk_sources():
+        lint_source(source, rel, collect_jit=uses)
+        raw += _raw_jit_references(source)
+    # grep-count parity: the AST collector must account for EVERY textual
+    # jax.jit in the tree (a stored/aliased jit would make raw > uses and
+    # separately fail the lint as JR401)
+    assert raw == len(uses), (raw, len(uses))
+    assert len(uses) == len(registry.JIT_REGISTRY), (
+        f"{len(uses)} jax.jit sites in src/repro vs "
+        f"{len(registry.JIT_REGISTRY)} registry entries")
+
+
+def test_registry_files_exist_and_are_sorted_unique():
+    root = lint.find_root()
+    for rel in registry.registered_files():
+        assert os.path.exists(os.path.join(root, rel)), rel
+
+
+def test_registry_notes_are_mandatory():
+    # the note is the point of the registry: policy + prose rationale
+    for site in registry.JIT_REGISTRY:
+        assert site.note, f"{site.file}:{site.qualname} has no note"
+
+
+def test_hot_modules_point_at_real_paths():
+    root = lint.find_root()
+    for m in registry.HOT_MODULES:
+        path = os.path.join(root, m.rstrip("/"))
+        assert os.path.exists(path), m
+
+
+def test_unregistered_jit_fails_registry_check():
+    table = (registry.JitSite("core/engine.py", "TweakLLMEngine.__init__"),)
+    uses = [JitUse("core/engine.py", "TweakLLMEngine.__init__", 5, {}),
+            JitUse("core/engine.py", "new_fn", 10, {})]
+    vs = lint.check_registry(uses, table=table)
+    assert [v.rule for v in vs] == ["JR401"]
+    assert "new_fn" in vs[0].msg
+
+
+def test_moved_file_caught_via_files_scanned():
+    # a registry entry naming a file the lint never scanned is stale even
+    # if no use conflicts with it
+    vs = lint.check_registry(
+        [], table=(registry.JitSite("core/renamed.py", "f"),),
+        files_scanned=["core/engine.py"])
+    assert [v.rule for v in vs] == ["JR403"]
+    assert "never" in vs[0].msg

@@ -158,7 +158,7 @@ def test_lookup_and_touch_miss_does_not_touch():
     st_ = cache_lib.init_cache(cfg)
     e, *rest = _rand_entry(jax.random.PRNGKey(0), cfg)
     st_ = cache_lib.insert(st_, cfg, e, *rest)
-    far = jnp.ones((1, cfg.dim)) * jnp.asarray([1, -1] * (cfg.dim // 2))
+    far = jnp.ones((1, cfg.dim)) * jnp.asarray([[1, -1] * (cfg.dim // 2)])
     far = far / jnp.linalg.norm(far)
     new, scores, idx, dec = cache_lib.lookup_and_touch(st_, cfg, rcfg, far)
     if int(dec[0]) == router_lib.MISS:

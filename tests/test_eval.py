@@ -34,7 +34,7 @@ def test_debate_prefers_clearly_better():
             "the fundamentals then practice consistently track progress")
     bad = "no idea"
     wins = 0
-    for i in range(10):
+    for _ in range(10):
         r = run_debate(q, good, bad, -0.5, -4.0, rng=rng)
         wins += r.verdict == "A"
     assert wins >= 8

@@ -1,0 +1,117 @@
+"""Sanitizer harness (DESIGN.md §10, Layer 3): runtime enforcement of the
+hot-path invariants the static layers can't prove.
+
+Run with ``pytest --sanitize`` (or ``make test-sanitize``).  The conftest
+hook additionally flips ``jax_numpy_rank_promotion`` to "raise" for the
+whole session, so every test in the sanitize run also proves the absence
+of silent rank-promoting broadcasts.
+
+* ``jax.transfer_guard("disallow")`` around the serve path: after the
+  compile buckets are warm, serving a batch must perform ZERO implicit
+  host<->device transfers — the explicit ``jax.device_get`` sync points
+  (waived in the lint) are the only crossings, and the guard allows only
+  explicit ones.
+* ``jax.checking_leaks()``: no tracer leaks out of the jitted closures.
+* ``jax_debug_nans``: the engine e2e smoke produces finite numerics.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CacheConfig, RouterConfig, TweakLLMEngine
+from repro.core import cache as cache_lib
+from repro.core import router as router_lib
+from repro.models import ModelConfig, build_model
+from repro.models.embedder import init_embedder, tiny_embedder_config
+from repro.serving import GenerateConfig, Generator, SamplerConfig
+from repro.tokenizer import HashWordTokenizer
+
+pytestmark = pytest.mark.sanitize
+
+VOCAB = 4096
+
+
+@pytest.fixture(scope="module")
+def engine():
+    tok = HashWordTokenizer(VOCAB)
+    ecfg = tiny_embedder_config(VOCAB)
+    eparams = init_embedder(jax.random.PRNGKey(0), ecfg)
+    lm = ModelConfig(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                     d_ff=128, vocab_size=VOCAB, max_seq_len=512,
+                     dtype="float32")
+    gc = GenerateConfig(max_new_tokens=4,
+                        sampler=SamplerConfig(vocab_size=VOCAB))
+    big_m = build_model(lm)
+    small_m = build_model(lm.replace(num_layers=1))
+    big = Generator(big_m, big_m.init(jax.random.PRNGKey(1)), gc)
+    small = Generator(small_m, small_m.init(jax.random.PRNGKey(2)), gc)
+    return TweakLLMEngine(
+        tokenizer=tok, embedder_params=eparams, embedder_cfg=ecfg,
+        big=big, small=small,
+        cache_cfg=CacheConfig(capacity=64, dim=ecfg.d_model, topk=4),
+        router_cfg=RouterConfig())
+
+
+def test_serve_path_under_transfer_guard(engine):
+    """After warmup, serving performs only EXPLICIT host<->device copies.
+
+    The first calls compile every bucket this test touches and populate
+    the cache; the guarded replay then serves a MISS batch and an EXACT
+    batch end to end.  Any implicit transfer — a stray ``int()`` on a
+    device scalar, an np.asarray coercion inside jit dispatch — raises
+    under the guard, pinning the O(1)-explicit-syncs-per-batch design.
+    """
+    warm = ["how do i configure a vpn on linux",
+            "what is the capital city of france"]
+    engine.handle_batch(warm, max_new_tokens=4)          # compile + insert
+    engine.handle_batch(warm, max_new_tokens=4)          # EXACT replay
+    fresh = ["why does concrete cure slowly in winter",
+             "best way to water a cactus indoors"]
+    engine.handle_batch(fresh, max_new_tokens=4)         # warm MISS buckets
+    with jax.transfer_guard("disallow"):
+        miss = engine.handle_batch(
+            ["how long should sourdough starter ferment",
+             "what makes titanium alloys corrosion resistant"],
+            max_new_tokens=4)
+        exact = engine.handle_batch(warm, max_new_tokens=4)
+    assert all(isinstance(r, str) and r for r in miss + exact)
+    assert engine.stats.exact >= 2
+
+
+def test_lookup_touch_under_transfer_guard():
+    """The fused lookup+touch device call itself moves no implicit data."""
+    cfg = CacheConfig(capacity=32, dim=16, topk=4)
+    rcfg = RouterConfig()
+    jitted = jax.jit(
+        lambda s, q: cache_lib.lookup_and_touch(s, cfg, rcfg, q),
+        donate_argnums=(0,))
+    q = jnp.asarray(np.eye(2, 16, dtype=np.float32))
+    out = jitted(cache_lib.init_cache(cfg), q)           # compile outside
+    jax.block_until_ready(out)
+    # state allocation transfers fill constants — that's setup, not the
+    # hot call, so it stays outside the guard
+    state = cache_lib.init_cache(cfg)
+    jax.block_until_ready(state)
+    with jax.transfer_guard("disallow"):
+        state, scores, idx, dec = jitted(state, q)
+        jax.block_until_ready((scores, idx, dec))
+    assert dec.shape == (2,)
+    assert int(jax.device_get(dec)[0]) == router_lib.MISS
+
+
+def test_engine_e2e_checking_leaks_and_nans(engine):
+    """Smoke e2e under tracer-leak checking + debug_nans."""
+    with jax.checking_leaks(), jax.debug_nans(True):
+        rs, meta = engine.handle_batch(
+            ["how do tides follow the moon", "how do tides follow the moon"],
+            max_new_tokens=4, collect_meta=True)
+    assert all(isinstance(r, str) and r for r in rs)
+    assert all(np.isfinite(m["sim"]) for m in meta)
+
+
+def test_rank_promotion_guard_is_active():
+    """--sanitize must flip rank promotion to 'raise' process-wide."""
+    assert jax.config.jax_numpy_rank_promotion == "raise"
+    with pytest.raises(ValueError, match="rank_promotion"):
+        _ = jnp.ones((3,)) + jnp.ones((2, 1, 3))

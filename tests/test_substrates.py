@@ -47,9 +47,9 @@ def test_question_pairs_labels():
     dups = [p for p in pairs if p[2] == 1]
     negs = [p for p in pairs if p[2] == 0]
     assert len(dups) > 20 and len(negs) > 20
-    for a, b, l in dups:
+    for a, b, _l in dups:
         assert a.topic == b.topic and a.intent == b.intent
-    for a, b, l in negs:
+    for a, b, _l in negs:
         assert (a.topic, a.intent) != (b.topic, b.intent)
 
 
@@ -93,7 +93,7 @@ def test_loss_decreases_tiny_lm():
     opt = init_opt_state(params)
     losses = []
     stream = token_stream_batches(tok, 4, 32)
-    for i in range(30):
+    for _ in range(30):
         batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
         params, opt, m = step(params, opt, batch)
         losses.append(float(m["loss"]))
