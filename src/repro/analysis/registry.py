@@ -46,6 +46,8 @@ HOT_MODULES: Tuple[str, ...] = (
     "core/distributed.py",
     "serving/generate.py",
     "serving/scheduler.py",
+    "serving/paged_kv.py",
+    "serving/continuous.py",
     "models/",
     "kernels/",
 )
@@ -129,6 +131,32 @@ JIT_REGISTRY: Tuple[JitSite, ...] = (
             static=("mnt",),
             note="whole decode loop in one device call; mnt bounds the "
                  "while_loop trip count and the output block shape"),
+    # ---- serving: paged KV pool + persistent decode session ---------
+    JitSite("serving/paged_kv.py", "pack_caches", donate=(0,),
+            note="dense prefill KV -> pool pages; donates the pool storage "
+                 "so page writes alias in place (DESIGN.md §11); pinned "
+                 "block-table entries are redirected to the TRASH page"),
+    JitSite("serving/paged_kv.py", "write_pinned", donate=(0,),
+            note="one-time shared-prefix pin into reserved pages; donates "
+                 "pool storage like pack_caches"),
+    JitSite("serving/continuous.py", "DecodeSession._build_ops._admit",
+            donate=(0,),
+            note="splice a prefilled cohort into free slots; donates the "
+                 "session state (the pool lives inside it) so the splice "
+                 "is a true in-place join (DESIGN.md §11)"),
+    JitSite("serving/continuous.py", "DecodeSession._build_ops._chunk",
+            donate=(1,), static=("steps",),
+            note="up to `steps` decode steps in one device call; steps "
+                 "bounds the while_loop and is a small bucket set "
+                 "(chunk size), state donated like the fused decode loop"),
+    JitSite("serving/continuous.py", "DecodeSession._build_ops._step_once",
+            donate=(1,),
+            note="single decode step — the host-stepped differential "
+                 "oracle for the chunked loop (DESIGN.md §8/§11)"),
+    JitSite("serving/continuous.py", "DecodeSession._build_ops._evict",
+            donate=(0,),
+            note="clear harvested slots: block tables -> TRASH page in "
+                 "place so freed pages can be re-issued safely"),
     # ---- kernels: jit'd public wrappers -----------------------------
     JitSite("kernels/cosine_topk/ops.py", "cosine_topk",
             static=("k", "impl", "block_n"),
@@ -139,6 +167,10 @@ JIT_REGISTRY: Tuple[JitSite, ...] = (
     JitSite("kernels/decode_attention/ops.py", "decode_attention",
             static=("block_t", "impl"),
             note="decode attention over the KV cache"),
+    JitSite("kernels/paged_attention/ops.py", "paged_decode_attention",
+            static=("impl",),
+            note="decode attention gathered through the page block table "
+                 "(DESIGN.md §11)"),
     JitSite("kernels/flash_attention/ops.py", "flash_attention",
             static=("causal", "window", "block_q", "block_k", "impl"),
             note="prefill flash attention; window/causal change the "

@@ -1,0 +1,21 @@
+"""Jit'd public wrapper for the paged decode-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import paged_decode_attention_pallas
+from .ref import paged_decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def paged_decode_attention(q, kp, vp, block_tbl, slot_pos, *,
+                           impl: str = "pallas"):
+    """q (B,H,dh) vs pool pages kp/vp (P+1,page,Hk,dh) through block_tbl
+    (B,npg); slot validity from slot_pos (B,cap) (< 0 = masked)."""
+    if impl == "pallas":
+        return paged_decode_attention_pallas(
+            q, kp, vp, block_tbl, slot_pos,
+            interpret=jax.default_backend() != "tpu")
+    return paged_decode_attention_ref(q, kp, vp, block_tbl, slot_pos)

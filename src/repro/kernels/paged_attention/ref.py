@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for single-token decode attention over PAGED KV.
+
+The dense oracle (``decode_attention/ref.py``) reads contiguous
+per-sequence caches; here each row's KV lives in pool pages indirected
+through a block table (DESIGN.md §11).  The reference materialises the
+gather — physical pages back to logical slot order — then runs the same
+masked softmax, so the Pallas kernel (which never materialises the
+gathered cache) is checked against straight-line semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def gather_pages(kp, block_tbl, cap: int):
+    """Physical pages -> logical slots: (P+1,page,Hk,dh) -> (B,cap,Hk,dh).
+
+    ``block_tbl`` (B, npg) names each row's pages in logical order; the
+    flattened gather is sliced to ``cap`` (the logical capacity), which
+    drops the unused tail of the last page.
+    """
+    b, npg = block_tbl.shape
+    page = kp.shape[1]
+    return kp[block_tbl].reshape(b, npg * page, *kp.shape[2:])[:, :cap]
+
+
+def paged_decode_attention_ref(q, kp, vp, block_tbl, slot_pos):
+    """q: (B,H,dh); kp/vp: (P+1,page,Hk,dh) pool pages; block_tbl: (B,npg);
+    slot_pos: (B,cap) absolute position per logical slot, -1 = empty.
+
+    Returns (B,H,dh).  Slots with ``slot_pos < 0`` are masked out.
+    """
+    b, h, dh = q.shape
+    hk = kp.shape[2]
+    cap = slot_pos.shape[1]
+    g = h // hk
+    k = gather_pages(kp, block_tbl, cap)
+    v = gather_pages(vp, block_tbl, cap)
+    qg = q.reshape(b, hk, g, dh)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (dh ** -0.5)
+    valid = slot_pos >= 0                                     # (B,cap)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, dh).astype(q.dtype)

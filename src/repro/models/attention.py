@@ -240,9 +240,63 @@ def fill_kv_cache(cache, k, v, positions):
     return cache
 
 
+def _paged_decode_attention(params, x, cache, cfg: ModelConfig, *,
+                            use_rope=True):
+    """One-token decode against paged KV (DESIGN.md §11).
+
+    ``cache`` is a paged leaf: ``kp``/``vp`` are the pool's page arrays
+    ``(num_pages + 1, page, hk, dh)``, ``block_tbl`` (B, npg) maps each
+    row's logical pages to physical ones, ``pos`` (B,) is per-row (rows
+    of a persistent slot batch sit at different depths), and
+    ``slot_pos`` (B, cap) keeps the EXACT dense logical capacity.
+
+    Bitwise contract with the dense path: the new token is scattered
+    into its page, then K/V are gathered back through the block table
+    into logical-slot order and SLICED to ``cap`` — pure data movement —
+    and the attend call is identical (same impl, same shapes, same
+    mask).  Rows whose block table points at the TRASH page (evicted /
+    empty slots) write there harmlessly and attend over an all-masked
+    cache; their sampled tokens are discarded by done-masking upstream.
+    """
+    b = x.shape[0]
+    kp, vp, tbl = cache["kp"], cache["vp"], cache["block_tbl"]
+    page = kp.shape[1]
+    npg = tbl.shape[1]
+    cap = cache["slot_pos"].shape[1]
+    pos = cache["pos"]                                   # (B,) per-row
+    q, k, v = _project_qkv(params, x, cfg)
+    cur = pos[:, None]                                   # (B, 1)
+    if use_rope:
+        q = apply_rope(q, cur, cfg.rope_theta)
+        k = apply_rope(k, cur, cfg.rope_theta)
+    slot = jnp.minimum(pos, cap - 1)                     # (B,)
+    pg = jnp.take_along_axis(tbl, (slot // page)[:, None], axis=1)[:, 0]
+    off = slot % page
+    kp = kp.at[pg, off].set(k[:, 0].astype(kp.dtype))
+    vp = vp.at[pg, off].set(v[:, 0].astype(vp.dtype))
+    hot = jnp.arange(cap, dtype=jnp.int32)[None, :] == slot[:, None]
+    slot_pos = jnp.where(hot, cur, cache["slot_pos"])
+    kg = kp[tbl].reshape(b, npg * page, *kp.shape[2:])[:, :cap]
+    vg = vp[tbl].reshape(b, npg * page, *vp.shape[2:])[:, :cap]
+    valid = slot_pos >= 0
+    ctx = attend(q, kg, vg, cur, slot_pos, causal=True, window=0,
+                 impl="naive", extra_mask=valid)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, params["w_o"])
+    new_cache = dict(cache)
+    new_cache.update(kp=kp, vp=vp, slot_pos=slot_pos, pos=pos + 1)
+    return out, new_cache
+
+
 def decode_attention(params, x, cache, cfg: ModelConfig, *, window: int = 0,
                      use_rope=True):
     """One-token decode: x (B,1,d) against ring-buffered KV cache."""
+    if "kp" in cache:
+        if window > 0:
+            raise NotImplementedError(
+                "paged KV decode is global-attention only; windowed "
+                "stacks must use the dense ring-buffered cache")
+        return _paged_decode_attention(params, x, cache, cfg,
+                                       use_rope=use_rope)
     b = x.shape[0]
     capacity = cache["k"].shape[1]
     pos = cache["pos"]  # scalar: number of tokens already in cache

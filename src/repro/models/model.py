@@ -98,6 +98,22 @@ class Model:
                 and kinds <= {ATTN, MOE} and cfg.num_prefix_tokens == 0
                 and cfg.attention_impl in ("xla_flash", "pallas"))
 
+    @property
+    def supports_paged_decode(self) -> bool:
+        """True when decode can run over a paged KV pool (DESIGN.md §11).
+
+        Paged decode gathers K/V through a per-sequence block table, so
+        every cached layer must be a plain KV cache: decoder-only stacks
+        of global-attention blocks (ATTN/MOE, no sliding window).
+        Recurrent mixers (Mamba2/RG-LRU) carry non-KV state, windowed
+        attention ring-buffers its slots, and enc-dec adds cross caches
+        — all must decode over the dense cache instead.
+        """
+        cfg = self.cfg
+        kinds = set(cfg.block_pattern) | set(cfg.pattern_remainder)
+        return (not self.is_encdec and cfg.sliding_window == 0
+                and kinds <= {ATTN, MOE})
+
     def prefill_prefix(self, params, tokens):
         """KV state of a shared prefix: tokens (B, P) -> caches pytree.
 

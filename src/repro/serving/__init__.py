@@ -4,3 +4,6 @@ from .batcher import pad_to_buckets, bucket_batch, bucket_len, floor_len_bucket
 from .scheduler import (Clock, SimClock, WallClock, QueueFull, Request,
                         Scheduler, SchedulerConfig, SchedulerStats,
                         poisson_trace, replay_trace)
+from .paged_kv import (PagePool, PagePoolConfig, PagePoolExhausted,
+                       PinnedPrefix)
+from .continuous import DecodeSession, FinishedRow, NoFreeSlots

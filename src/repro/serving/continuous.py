@@ -1,0 +1,383 @@
+"""Persistent slot-based decode over the paged KV pool (DESIGN.md §11).
+
+``DecodeSession`` removes the bucket barrier of batch-to-completion
+serving: a fixed set of ``slots`` decodes together in one fused
+``lax.while_loop`` chunk at a time, finished rows are harvested and
+their pages freed at chunk boundaries, and newly admitted requests are
+spliced into the free slots — mid-flight join/leave, the continuous
+batching every modern serving stack runs (vLLM, Orca, IC-Cache).
+
+Step-boundary protocol (host side drives it, device state is one pytree):
+
+  admit(prompts)  -> dense prefill at the cohort's shape, pages
+                     allocated, KV scattered + rows spliced in ONE
+                     jitted op; first token sampled from prefill logits
+                     with the session's unsplit key (the dense loop's
+                     exact step-0 schedule)
+  run_chunk(n)    -> fused while_loop: up to n steps, exits early when
+                     every occupied row is done; ONE device call
+  harvest()       -> the one device_get per chunk; finished rows return
+                     their (tokens, length, ended), their block tables
+                     are redirected to the TRASH page (so freed pages
+                     can be re-issued without stomping) and pages freed
+
+Bitwise contracts, locked by ``tests/test_paged_kv.py``:
+
+* A cohort that fills every slot at step 0 and runs to completion is
+  bitwise-identical to ``Generator.generate_with_lengths`` (dense fused
+  loop) at the same batch/capacity — same prefill, same key schedule,
+  same masked sampling, paged gather slicing to the exact capacity.
+* ``run_chunk(fused=False)`` is the host-stepped oracle: the identical
+  per-step computation driven from the host, one dispatch per token —
+  fused chunks replay it bitwise for ANY join/leave trace.
+* A row's trajectory is invariant to its co-residents: admitting into
+  the same slot of a busy session produces the same tokens as a solo
+  session, bitwise, because every per-row computation in the stack is
+  batch-elementwise at fixed shapes.
+
+Under temperature sampling the shared per-step key makes a row's draws
+depend on the step at which it joined; the cohort-level contracts above
+still hold, but cross-trace row invariance is greedy-only (the engine's
+default).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import paged_kv as paged_lib
+from .generate import Generator
+from .sampler import sample
+
+
+class NoFreeSlots(RuntimeError):
+    """Admission rejected: every slot is occupied.  Harvest first."""
+
+
+class FinishedRow(dict):
+    """One harvested row: {"slot", "tag", "tokens", "length", "ended"}."""
+
+
+class DecodeSession:
+    """A persistent decode batch over ``slots`` rows of paged KV.
+
+    Owns a ``PagePool`` sized for its slots; the generator supplies the
+    model, params, sampler and prefill jit.  Capacity is one static
+    bound for every row (length-bucket the prompts upstream); admission
+    raises rather than truncates when a prompt would not fit.
+    """
+
+    def __init__(self, gen: Generator, *, slots: int, capacity: int,
+                 seed: int = 0,
+                 pool: Optional[paged_lib.PagePool] = None):
+        if not gen.model.supports_paged_decode:
+            raise NotImplementedError(
+                f"{gen.model.cfg.name}: paged KV decode unsupported")
+        self.gen = gen
+        self.model = gen.model
+        self.params = gen.params
+        self.cfg = gen.cfg
+        self.slots = slots
+        self.capacity = capacity
+        self.mnt = gen.cfg.max_new_tokens
+        if pool is None:
+            pool = paged_lib.PagePool(
+                gen.model, paged_lib.PagePoolConfig(
+                    page_size=gen.cfg.page_size,
+                    num_pages=max(
+                        gen.cfg.pool_pages,
+                        slots * (-(-capacity // gen.cfg.page_size)))))
+        self.pool = pool
+        self._leases: Dict[int, Any] = {}     # slot -> (tbl_row, writable_row)
+        self._tags: Dict[int, Any] = {}       # slot -> caller's request tag
+        self._free_slots: List[int] = list(range(slots - 1, -1, -1))
+        self._build_ops()
+        self.state = self._init_state(seed)
+
+    # ------------------------------------------------------------- jits
+    def _build_ops(self):
+        model, cfg = self.model, self.cfg
+        eos, mnt = cfg.eos_id, self.mnt
+        sampler = cfg.sampler
+
+        def splice_one(kp, vp, bt, pos, slot_pos, k, v, pos_d, slot_pos_d,
+                       slot_ids, tbl, writable):
+            """Scatter one layer's cohort KV into pages + splice rows."""
+            kb, cap = k.shape[0], k.shape[1]
+            page = kp.shape[1]
+            npg = tbl.shape[1]
+            trash = kp.shape[0] - 1
+            pad = npg * page - cap
+            kpg = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).reshape(
+                kb, npg, page, *k.shape[2:])
+            vpg = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).reshape(
+                kb, npg, page, *v.shape[2:])
+            tbl_w = jnp.where(writable, tbl, trash)
+            kp = kp.at[tbl_w].set(kpg.astype(kp.dtype))
+            vp = vp.at[tbl_w].set(vpg.astype(vp.dtype))
+            bt = bt.at[slot_ids].set(tbl)
+            slot_pos = slot_pos.at[slot_ids].set(slot_pos_d)
+            pos = pos.at[slot_ids].set(
+                jnp.broadcast_to(pos_d, (kb,)).astype(jnp.int32))
+            return {"kp": kp, "vp": vp, "block_tbl": bt, "pos": pos,
+                    "slot_pos": slot_pos}
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def _admit(state, dense_caches, logits0, slot_ids, tbl, writable):
+            """Splice a prefilled cohort into free slots, one device call.
+
+            Step-0 sampling uses the session key UNSPLIT — exactly the
+            dense fused loop's schedule, so an inaugural full cohort
+            replays ``_decode_fused`` bitwise.
+            """
+            dense = paged_lib.kv_leaves(dense_caches)
+            it = iter(dense)
+
+            def splice(leaf):
+                d = next(it)
+                depth = leaf["kp"].ndim - 4
+                fn = splice_one
+                for _ in range(depth):
+                    fn = jax.vmap(fn, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0,
+                                               None, None, None))
+                return fn(leaf["kp"], leaf["vp"], leaf["block_tbl"],
+                          leaf["pos"], leaf["slot_pos"],
+                          d["k"], d["v"], d["pos"], d["slot_pos"],
+                          slot_ids, tbl, writable)
+
+            caches = paged_lib.map_kv_leaves(state["caches"], splice)
+            t0 = sample(state["key"], logits0, sampler)
+            done0 = t0 == eos
+            row_toks = jnp.full((t0.shape[0], mnt), eos, jnp.int32)
+            row_toks = jax.lax.dynamic_update_slice_in_dim(
+                row_toks, t0[:, None], 0, axis=1)
+            return {
+                "caches": caches,
+                "key": state["key"],
+                "tok": state["tok"].at[slot_ids].set(t0),
+                "toks": state["toks"].at[slot_ids].set(row_toks),
+                "n_emitted": state["n_emitted"].at[slot_ids].set(1),
+                "lengths": state["lengths"].at[slot_ids].set(
+                    jnp.where(done0, 1, mnt).astype(jnp.int32)),
+                "eos_done": state["eos_done"].at[slot_ids].set(done0),
+                "occupied": state["occupied"].at[slot_ids].set(True),
+            }
+
+        def step_body(params, state):
+            """One decode step over every slot — the chunk loop body.
+
+            Identical semantics to the dense fused body (split key,
+            decode, masked sample, record length on fresh EOS), with
+            per-row write columns instead of the global step counter so
+            rows at different depths coexist.
+            """
+            key, sub = jax.random.split(state["key"])
+            logits, caches = model.decode_step(
+                params, state["tok"], state["caches"])
+            inactive = (~state["occupied"] | state["eos_done"]
+                        | (state["n_emitted"] >= mnt))
+            t = jnp.where(inactive, eos, sample(sub, logits, sampler))
+            new_eos = state["eos_done"] | (~inactive & (t == eos))
+            col = state["n_emitted"]
+            hot = (jnp.arange(mnt, dtype=jnp.int32)[None, :] == col[:, None]
+                   ) & ~inactive[:, None]
+            toks = jnp.where(hot, t[:, None], state["toks"])
+            lengths = jnp.where(new_eos & ~state["eos_done"], col + 1,
+                                state["lengths"])
+            n_emitted = jnp.where(inactive, col, col + 1)
+            return {"caches": caches, "key": key, "tok": t, "toks": toks,
+                    "n_emitted": n_emitted, "lengths": lengths,
+                    "eos_done": new_eos, "occupied": state["occupied"]}
+
+        def active(state):
+            return (state["occupied"] & ~state["eos_done"]
+                    & (state["n_emitted"] < mnt))
+
+        @functools.partial(jax.jit, donate_argnums=(1,),
+                           static_argnames=("steps",))
+        def _chunk(params, state, steps):
+            """Up to ``steps`` decode steps in ONE device call."""
+            def cond(carry):
+                i, state = carry
+                return (i < steps) & jnp.any(active(state))
+
+            def body(carry):
+                i, state = carry
+                return i + 1, step_body(params, state)
+
+            _, state = jax.lax.while_loop(cond, body, (jnp.int32(0), state))
+            return state
+
+        @functools.partial(jax.jit, donate_argnums=(1,))
+        def _step_once(params, state):
+            """The chunk body as a standalone dispatch — the host-stepped
+            oracle (one sync per token BY DESIGN, like PR 4's host loop)."""
+            return step_body(params, state)
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def _evict(state, slot_ids):
+            """Clear harvested slots: block tables -> TRASH page so the
+            freed pages can be re-issued without ever being stomped."""
+            def clear(leaf):
+                trash = leaf["kp"].shape[-4] - 1
+                depth = leaf["kp"].ndim - 4
+                idx = (slice(None),) * depth
+                bt = leaf["block_tbl"].at[idx + (slot_ids,)].set(trash)
+                sp = leaf["slot_pos"].at[idx + (slot_ids,)].set(-1)
+                pos = leaf["pos"].at[idx + (slot_ids,)].set(0)
+                out = dict(leaf)
+                out.update(block_tbl=bt, slot_pos=sp, pos=pos)
+                return out
+
+            caches = paged_lib.map_kv_leaves(state["caches"], clear)
+            out = dict(state)
+            out.update(
+                caches=caches,
+                tok=state["tok"].at[slot_ids].set(eos),
+                toks=state["toks"].at[slot_ids].set(eos),
+                n_emitted=state["n_emitted"].at[slot_ids].set(0),
+                lengths=state["lengths"].at[slot_ids].set(0),
+                eos_done=state["eos_done"].at[slot_ids].set(False),
+                occupied=state["occupied"].at[slot_ids].set(False))
+            return out
+
+        self._admit = _admit
+        self._chunk = _chunk
+        self._step_once = _step_once
+        self._evict = _evict
+        self._active = active
+
+    def _init_state(self, seed: int):
+        npg = self.pool.pages_per_seq(self.capacity)
+        dense0 = self.model.init_caches(self.slots, self.capacity)
+        tbl0 = np.full((self.slots, npg), self.pool.trash_page, np.int32)
+        caches0 = paged_lib.pack_caches(
+            self.pool.storage, dense0,
+            jax.device_put(tbl0),
+            jax.device_put(np.zeros((self.slots, npg), bool)))
+        self.pool.adopt(caches0)
+        b, mnt = self.slots, self.mnt
+        eos = self.cfg.eos_id
+        return {
+            "caches": caches0,
+            "key": jax.random.PRNGKey(jax.device_put(np.uint32(seed))),
+            "tok": jnp.full((b,), eos, jnp.int32),
+            "toks": jnp.full((b, mnt), eos, jnp.int32),
+            "n_emitted": jnp.zeros((b,), jnp.int32),
+            "lengths": jnp.zeros((b,), jnp.int32),
+            "eos_done": jnp.zeros((b,), bool),
+            "occupied": jnp.zeros((b,), bool),
+        }
+
+    # --------------------------------------------------------- protocol
+    @property
+    def free_slots(self) -> int:
+        return len(self._free_slots)
+
+    def admit(self, tokens, tags: Optional[Sequence[Any]] = None,
+              slots: Optional[Sequence[int]] = None) -> List[int]:
+        """Splice a cohort of prompts (k, S) into free slots.
+
+        Returns the slot ids used.  ``tags`` ride along to ``harvest``
+        (request ids); ``slots`` pins explicit slot choices (tests use
+        this to prove slot-stable bitwise identity).  All-or-nothing:
+        raises ``NoFreeSlots`` / ``PagePoolExhausted`` / ``ValueError``
+        before touching device state.
+        """
+        tokens = jnp.asarray(tokens, jnp.int32)
+        k, s = tokens.shape
+        if s + self.mnt + 1 > self.capacity:
+            raise ValueError(
+                f"prompt of {s} tokens + {self.mnt} new exceeds session "
+                f"capacity {self.capacity}")
+        if slots is None:
+            if k > len(self._free_slots):
+                raise NoFreeSlots(
+                    f"cohort of {k} rows, {len(self._free_slots)} free slots")
+            chosen = [self._free_slots[-1 - i] for i in range(k)]
+        else:
+            chosen = [int(x) for x in slots]  # hostsync: ok caller-supplied host ints
+            if len(chosen) != k or len(set(chosen)) != k:
+                raise ValueError("slots must name one distinct free slot "
+                                 "per row")
+            if any(c not in self._free_slots for c in chosen):
+                raise NoFreeSlots(f"requested slots {chosen} not all free")
+        tbl, writable = self.pool.alloc_block_table(k, self.capacity)
+        try:
+            logits0, dense = self.gen._prefill(
+                self.params, {"tokens": tokens}, self.capacity)
+            self.state = self._admit(
+                self.state, dense, logits0,
+                jax.device_put(np.asarray(chosen, np.int32)),  # hostsync: ok host slot ids entering jit
+                jax.device_put(tbl.astype(np.int32)),
+                jax.device_put(writable))
+        except Exception:
+            self.pool.free_block_table(tbl, writable)
+            raise
+        for c in chosen:
+            self._free_slots.remove(c)
+        for i, c in enumerate(chosen):
+            self._leases[c] = (tbl[i], writable[i])
+            self._tags[c] = None if tags is None else tags[i]
+        return chosen
+
+    def run_chunk(self, steps: int, *, fused: bool = True) -> None:
+        """Advance every occupied row by up to ``steps`` decode steps.
+
+        ``fused=True`` is one device call; ``fused=False`` is the
+        host-stepped differential oracle (same computation, one dispatch
+        per token) — byte-identical by the PR 4 fused-loop argument.
+        """
+        if fused:
+            self.state = self._chunk(self.params, self.state, steps)
+            return
+        for _ in range(steps):
+            live = jax.device_get(jnp.any(self._active(self.state)))  # hostsync: ok differential oracle syncs per step BY DESIGN
+            if not bool(live):  # hostsync: ok oracle-path host flag, see above
+                break
+            self.state = self._step_once(self.params, self.state)
+
+    def harvest(self) -> List[FinishedRow]:  # hostsync: ok the ONE per-chunk sync; the rest is host numpy on its result
+        """Collect finished rows, free their pages, clear their slots.
+
+        THE one device->host sync per step boundary: flags, lengths and
+        the token block come down in a single ``device_get``.
+        """
+        occupied, eos_done, n_emitted, lengths, toks = jax.device_get(
+            (self.state["occupied"], self.state["eos_done"],
+             self.state["n_emitted"], self.state["lengths"],
+             self.state["toks"]))  # hostsync: ok the one per-chunk sync
+        fin = np.flatnonzero(occupied & (eos_done | (n_emitted >= self.mnt)))
+        if fin.size == 0:
+            return []
+        out = []
+        for c in fin:
+            c = int(c)
+            out.append(FinishedRow(
+                slot=c, tag=self._tags.pop(c),
+                tokens=toks[c].copy(), length=int(lengths[c]),
+                ended=bool(eos_done[c])))
+        self.state = self._evict(
+            self.state, jax.device_put(fin.astype(np.int32)))
+        for c in fin:
+            self.pool.free_block_table(*self._leases.pop(int(c)))
+            self._free_slots.append(int(c))
+        self._free_slots.sort(reverse=True)
+        return out
+
+    def drain(self, *, chunk: int = 0, fused: bool = True
+              ) -> List[FinishedRow]:
+        """Run chunks until every occupied slot has finished and been
+        harvested (end-of-stream).  ``chunk=0`` uses the full budget."""
+        steps = chunk or self.mnt
+        out: List[FinishedRow] = []
+        for _ in range(self.slots * self.mnt + 1):
+            if len(self._free_slots) == self.slots:
+                break
+            self.run_chunk(steps, fused=fused)
+            out.extend(self.harvest())
+        return out

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from . import paged_kv as paged_lib
 from .sampler import SamplerConfig, masked_sample, sample
 
 
@@ -37,6 +38,15 @@ class GenerateConfig:
     # Fused on-device lax.while_loop decode (default).  False falls back to
     # the host-driven per-step loop — the differential-testing oracle.
     fused: bool = True
+    # Paged KV decode (DESIGN.md §11): prefill stays dense, then the KV is
+    # scattered into pool pages and the SAME fused loop carries the paged
+    # caches — bitwise-identical outputs, pool-backed storage.  With a
+    # prefix_cache, the shared prefix's full pages are pinned once and
+    # shared by every row.  pool_pages=0 sizes the pool to the first
+    # paged call's need.
+    paged: bool = False
+    page_size: int = 16
+    pool_pages: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +75,9 @@ class Generator:
         # Fallback per-call seeds when the caller threads none: every batch
         # gets a fresh key stream instead of replaying PRNGKey(0) forever.
         self._auto_seed = itertools.count()
+        # Page pool for cfg.paged decode, built lazily on first use so
+        # dense-only generators allocate nothing (DESIGN.md §11).
+        self._pool: Optional[paged_lib.PagePool] = None
 
         @functools.partial(jax.jit, static_argnames=("capacity",))
         def _prefill(params, batch, capacity):
@@ -134,6 +147,46 @@ class Generator:
         self._prefill_prefix = _prefill_prefix
         self._step = _step
         self._decode_fused = _decode_fused
+
+    # ------------------------------------------------------ paged decode
+    @property
+    def pool(self) -> Optional[paged_lib.PagePool]:
+        """The page pool behind ``cfg.paged`` decode (None until used)."""
+        return self._pool
+
+    def _ensure_pool(self, batch: int, capacity: int) -> paged_lib.PagePool:
+        if self._pool is None:
+            need = batch * (-(-capacity // self.cfg.page_size))
+            self._pool = paged_lib.PagePool(
+                self.model, paged_lib.PagePoolConfig(
+                    page_size=self.cfg.page_size,
+                    num_pages=max(self.cfg.pool_pages, need)))
+        return self._pool
+
+    def _page_in(self, caches, batch: int, capacity: int,
+                 prefix_cache: Optional[PrefixCache]):
+        """Scatter a dense prefill's caches into pool pages.
+
+        Returns (paged caches, (block_tbl, writable)) — the latter is
+        the host-side lease the caller must release via
+        ``pool.free_block_table`` once decode finishes.  With a prefix
+        cache, the prefix's full pages are pinned once (keyed by its
+        token ids) and shared read-only by every row.
+        """
+        pool = self._ensure_pool(batch, capacity)
+        pin = (pool.ensure_pinned(prefix_cache)
+               if prefix_cache is not None else None)
+        tbl, writable = pool.alloc_block_table(batch, capacity, pin)
+        try:
+            paged = paged_lib.pack_caches(
+                pool.storage, caches,
+                jax.device_put(tbl.astype(np.int32)),
+                jax.device_put(writable))
+        except Exception:
+            pool.free_block_table(tbl, writable)
+            raise
+        pool.adopt(paged)
+        return paged, (tbl, writable)
 
     # ------------------------------------------------------ prefix cache
     @property
@@ -221,16 +274,28 @@ class Generator:
             if self.model.cfg.num_prefix_tokens:
                 capacity += self.model.cfg.num_prefix_tokens
             logits, caches = self._prefill(self.params, batch, capacity)
+        page_lease = None
+        if self.cfg.paged:
+            if not self.model.supports_paged_decode:
+                raise NotImplementedError(
+                    f"{self.model.cfg.name}: paged KV decode unsupported "
+                    f"for this architecture — use dense decode")
+            caches, page_lease = self._page_in(caches, b, capacity,
+                                               prefix_cache)
         # device_put the seed explicitly: PRNGKey(python_int) would move
         # the scalar implicitly, which the transfer-guard harness forbids
         key = jax.random.PRNGKey(jax.device_put(np.uint32(seed)))
-        if use_fused:
-            toks, lengths, ended = self._decode_fused(
-                self.params, logits, caches, key, mnt)
-            # THE per-generate-call device->host sync: the whole token
-            # block + lengths + ended flags in one device_get
-            return jax.device_get((toks, lengths, ended))  # hostsync: ok the one per-call sync
-        return self._host_loop(logits, caches, key, mnt)
+        try:
+            if use_fused:
+                toks, lengths, ended = self._decode_fused(
+                    self.params, logits, caches, key, mnt)
+                # THE per-generate-call device->host sync: the whole token
+                # block + lengths + ended flags in one device_get
+                return jax.device_get((toks, lengths, ended))  # hostsync: ok the one per-call sync
+            return self._host_loop(logits, caches, key, mnt)
+        finally:
+            if page_lease is not None:
+                self._pool.free_block_table(*page_lease)
 
     def _host_loop(self, logits, caches, key, mnt: int):  # hostsync: ok differential oracle syncs per step BY DESIGN
         """Host-driven per-step decode: the differential-testing oracle.

@@ -1,0 +1,365 @@
+"""Paged KV pool: fixed-size pages, free-list allocator, refcounted sharing.
+
+Dense serving KV (PR 4/5) allocates one ``(B, capacity)`` cache per batch
+and throws it away when the batch drains — the longest row sizes every
+row, and a shared tweak prefix is re-broadcast into every batch's cache.
+This module replaces that with a device-resident page pool (DESIGN.md
+§11):
+
+* **Storage** — for every attention layer, K/V live in ``(num_pages + 1,
+  page_size, hk, dh)`` page arrays (scan-stacked layers carry their
+  leading ``periods`` dim).  A sequence owns a *block table*: the page
+  ids backing its logical slots ``[0, capacity)`` in order.  The last
+  page array row is the TRASH page — writes by evicted/empty rows land
+  there, so a freed page can be re-issued without ever being stomped.
+* **Allocator** — a host-side free list + per-page refcounts.  Pages are
+  device-resident; the *bookkeeping* is plain numpy on host values (page
+  ids never originate from device arrays, so allocation costs zero
+  device syncs).  Exhaustion raises ``PagePoolExhausted`` BEFORE any
+  device state is touched — never corrupts.
+* **Pinned prefixes** — the shared tweak prefix (DESIGN.md §9) is written
+  into pages ONCE and pinned; every TWEAK row's block table points at
+  those pages (refcount += users).  Only whole pages are shared; the
+  prefix remainder rides in each row's first private page.
+* **Bitwise contract** — ``decode_attention`` gathers pages through the
+  block table back into logical-slot order and SLICES to the exact dense
+  capacity, then runs the identical attend.  The gather is pure data
+  movement, so paged decode is bitwise-identical to the dense path
+  (differential-tested in ``tests/test_paged_kv.py``).
+
+The jitted entry points (``pack_caches``, ``write_pinned``) are the
+allocator's device half: they scatter prefilled dense KV into pages.
+Both are declared in ``analysis/registry.py`` and contract-checked.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PagePoolExhausted(RuntimeError):
+    """Allocation rejected: not enough free pages.  Pool state unchanged."""
+
+
+# ------------------------------------------------------------ tree utils
+
+def _is_dense_leaf(x) -> bool:
+    return isinstance(x, dict) and {"k", "v", "pos", "slot_pos"} <= set(x)
+
+
+def _is_paged_leaf(x) -> bool:
+    return isinstance(x, dict) and "kp" in x
+
+
+def map_kv_leaves(tree, fn):
+    """Map ``fn`` over every KV-cache leaf dict in a caches pytree.
+
+    Walks the transformer caches structure (``{"scan": (...), "rem":
+    (...), "pos"}``); non-KV leaves (the top-level pos counter, SSM /
+    RG-LRU states) pass through untouched — the paged gate in
+    ``Model.supports_paged_decode`` guarantees none are present.
+    """
+    if _is_dense_leaf(tree) or _is_paged_leaf(tree):
+        return fn(tree)
+    if isinstance(tree, dict):
+        return {k: map_kv_leaves(v, fn) for k, v in tree.items()}
+    if isinstance(tree, (tuple, list)):
+        return type(tree)(map_kv_leaves(v, fn) for v in tree)
+    return tree
+
+
+def kv_leaves(tree) -> List[dict]:
+    """Collect the KV leaf dicts of a caches pytree, in tree order."""
+    out: List[dict] = []
+
+    def grab(leaf):
+        out.append(leaf)
+        return leaf
+
+    map_kv_leaves(tree, grab)
+    return out
+
+
+# ------------------------------------------------------------- jitted ops
+
+def _pack_one(kp, vp, k, v, pos, slot_pos, tbl, writable):
+    """Scatter one layer's dense KV (B, cap, hk, dh) into its pages.
+
+    ``tbl`` (B, npg) maps logical page j of row b to a physical page;
+    ``writable`` masks out pinned (shared) and trash entries — their
+    writes are redirected to the TRASH page, so shared prefix pages are
+    never re-written with the per-row copies (the values would be
+    identical; redirecting keeps them read-only by construction).
+    """
+    b, cap = k.shape[0], k.shape[1]
+    page = kp.shape[1]
+    npg = tbl.shape[1]
+    trash = kp.shape[0] - 1
+    pad = npg * page - cap
+    kpg = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).reshape(
+        b, npg, page, *k.shape[2:])
+    vpg = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).reshape(
+        b, npg, page, *v.shape[2:])
+    tbl_w = jnp.where(writable, tbl, trash)
+    kp = kp.at[tbl_w].set(kpg.astype(kp.dtype))
+    vp = vp.at[tbl_w].set(vpg.astype(vp.dtype))
+    pos_b = jnp.broadcast_to(pos, (b,)).astype(jnp.int32)
+    return {"kp": kp, "vp": vp, "block_tbl": tbl, "pos": pos_b,
+            "slot_pos": slot_pos}
+
+
+def _stack_depth(leaf: dict) -> int:
+    key = "k" if "k" in leaf else "kp"
+    return leaf[key].ndim - 4
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def pack_caches(pool_tree, dense_caches, tbl, writable):
+    """Scatter a dense prefill's caches into pool pages -> paged caches.
+
+    ``pool_tree`` mirrors the caches container structure with ``{"kp",
+    "vp"}`` leaves and is DONATED: page writes happen in place.  The
+    returned pytree swaps each dense KV leaf for its paged form
+    ``{"kp", "vp", "block_tbl", "pos" (B,), "slot_pos"}`` — structure-
+    and shape-stable under ``decode_step``, so the PR 4 fused loop
+    carries it unchanged.  Scan-stacked leaves broadcast the block table
+    across their leading periods dim (same page ids in every layer; each
+    layer has its own storage array).
+    """
+    pools = kv_leaves(pool_tree)
+    it = iter(pools)
+
+    def pack(leaf):
+        pool = next(it)
+        depth = _stack_depth(leaf)
+        fn = _pack_one
+        for _ in range(depth):
+            fn = jax.vmap(fn, in_axes=(0, 0, 0, 0, 0, 0, None, None))
+        out = fn(pool["kp"], pool["vp"], leaf["k"], leaf["v"], leaf["pos"],
+                 leaf["slot_pos"], tbl, writable)
+        if depth:
+            lead = leaf["k"].shape[:depth]
+            out["block_tbl"] = jnp.broadcast_to(tbl, lead + tbl.shape)
+        return out
+
+    return map_kv_leaves(dense_caches, pack)
+
+
+def _write_pin_one(kp, vp, k, v, pin_ids, page):
+    """Write row 0's first ``n_pin`` full pages of prefix KV into pages."""
+    n_pin = pin_ids.shape[0]
+    kpg = k[0, :n_pin * page].reshape(n_pin, page, *k.shape[2:])
+    vpg = v[0, :n_pin * page].reshape(n_pin, page, *v.shape[2:])
+    kp = kp.at[pin_ids].set(kpg.astype(kp.dtype))
+    vp = vp.at[pin_ids].set(vpg.astype(vp.dtype))
+    return {"kp": kp, "vp": vp}
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def write_pinned(pool_tree, prefix_caches, pin_ids):
+    """Write a shared prefix's KV into pinned pages, once (DESIGN.md §11).
+
+    ``prefix_caches`` is the ``PrefixCache.caches`` pytree (every row
+    identical by construction); row 0's K/V fill ``pin_ids``.  Only the
+    full pages (``len(pin_ids) * page_size`` tokens) are pinned — the
+    remainder is packed per-row by ``pack_caches``.
+    """
+    prefixes = kv_leaves(prefix_caches)
+    it = iter(prefixes)
+
+    def write(leaf):
+        pre = next(it)
+        page = leaf["kp"].shape[-3]
+        depth = _stack_depth(leaf)
+        fn = functools.partial(_write_pin_one, page=page)
+        for _ in range(depth):
+            fn = jax.vmap(fn, in_axes=(0, 0, 0, 0, None))
+        return fn(leaf["kp"], leaf["vp"], pre["k"], pre["v"], pin_ids)
+
+    return map_kv_leaves(pool_tree, write)
+
+
+def extract_pool(paged_caches):
+    """Recover the pool storage pytree from packed/stepped paged caches."""
+    return map_kv_leaves(
+        paged_caches, lambda leaf: {"kp": leaf["kp"], "vp": leaf["vp"]})
+
+
+# ---------------------------------------------------------------- pool
+
+@dataclasses.dataclass(frozen=True)
+class PagePoolConfig:
+    page_size: int = 16
+    num_pages: int = 256
+
+    def __post_init__(self):
+        if self.page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        if self.num_pages < 1:
+            raise ValueError("num_pages must be >= 1")
+
+
+@dataclasses.dataclass
+class PinnedPrefix:
+    """One pinned shared-prefix page set (the PR 5 tweak prefix)."""
+    key: Tuple[int, ...]          # the prefix token ids
+    ids: np.ndarray               # (n_pin,) page ids, refcounted
+    tokens: int                   # tokens covered = n_pin * page_size
+
+
+class PagePool:
+    """Device-resident KV page pool with a host-side free-list allocator.
+
+    One pool serves one model: page id ``p`` names page ``p`` in EVERY
+    layer's storage array.  Allocation/free/refcounting run on host ints
+    (zero device syncs); the device half (scattering KV into pages) is
+    the jitted ``pack_caches`` / ``write_pinned`` ops, which DONATE the
+    storage so writes are in place.  ``storage`` always refers to the
+    latest arrays — callers must thread returned pytrees back via
+    ``adopt`` (the pack ops invalidate the donated input).
+    """
+
+    def __init__(self, model, cfg: PagePoolConfig):
+        self.cfg = cfg
+        self.model = model
+        template = model.init_caches(1, cfg.page_size)
+        n = cfg.num_pages + 1  # +1: the TRASH page (never allocated)
+
+        def make(leaf):
+            shape = leaf["k"].shape       # (stack..., 1, page, hk, dh)
+            depth = leaf["k"].ndim - 4
+            pshape = shape[:depth] + (n, cfg.page_size) + shape[depth + 2:]
+            return {"kp": jnp.zeros(pshape, leaf["k"].dtype),
+                    "vp": jnp.zeros(pshape, leaf["v"].dtype)}
+
+        self.storage = map_kv_leaves(template, make)
+        self._refcount = np.zeros(cfg.num_pages, np.int32)
+        self._free: List[int] = list(range(cfg.num_pages - 1, -1, -1))
+        self._pins: Dict[Tuple[int, ...], PinnedPrefix] = {}
+
+    # ----------------------------------------------------- host allocator
+    @property
+    def trash_page(self) -> int:
+        return self.cfg.num_pages
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_pages(self) -> int:
+        return self.cfg.num_pages - len(self._free)
+
+    @property
+    def pinned_pages(self) -> int:
+        return sum(len(p.ids) for p in self._pins.values())
+
+    def pages_per_seq(self, capacity: int) -> int:
+        return -(-capacity // self.cfg.page_size)
+
+    def alloc(self, n: int) -> np.ndarray:  # hostsync: ok free-list bookkeeping, pure host numpy
+        """Take ``n`` free pages (refcount 1 each); raises, never corrupts."""
+        if n > len(self._free):
+            raise PagePoolExhausted(
+                f"need {n} pages, only {len(self._free)} of "
+                f"{self.cfg.num_pages} free")
+        ids = np.asarray([self._free.pop() for _ in range(n)], np.int32)
+        self._refcount[ids] = 1
+        return ids
+
+    def incref(self, ids: np.ndarray, count: int = 1) -> None:  # hostsync: ok refcount bookkeeping, pure host numpy
+        np.add.at(self._refcount, np.asarray(ids, np.int64), count)
+
+    def decref(self, ids) -> None:  # hostsync: ok refcount bookkeeping, pure host numpy
+        """Drop one reference per id; pages return to the free list at 0."""
+        for p in np.asarray(ids, np.int64).ravel():
+            c = int(self._refcount[p]) - 1
+            if c < 0:
+                raise RuntimeError(f"page {p} over-freed")
+            self._refcount[p] = c
+            if c == 0:
+                self._free.append(int(p))
+
+    def adopt(self, paged_caches) -> None:
+        """Re-point ``storage`` at the arrays inside a packed/stepped tree."""
+        self.storage = extract_pool(paged_caches)
+
+    # ------------------------------------------------------ row tables
+    def alloc_block_table(self, batch: int, capacity: int,  # hostsync: ok free-list bookkeeping, pure host numpy
+                          pin: Optional[PinnedPrefix] = None,
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+        """(block_tbl (B, npg) int32, writable (B, npg) bool) for a batch.
+
+        With ``pin``, the leading pinned pages are shared by every row
+        (refcount += batch) and marked read-only; private pages cover the
+        rest of ``capacity``.  All-or-nothing: exhaustion leaves
+        refcounts untouched.
+        """
+        npg = self.pages_per_seq(capacity)
+        n_pin = 0 if pin is None else len(pin.ids)
+        if n_pin > npg:
+            raise ValueError(
+                f"pinned prefix ({n_pin} pages) exceeds capacity ({npg})")
+        private = npg - n_pin
+        if batch * private > len(self._free):
+            raise PagePoolExhausted(
+                f"need {batch * private} pages, only {len(self._free)} of "
+                f"{self.cfg.num_pages} free")
+        rows = self.alloc(batch * private).reshape(batch, private)
+        writable = np.zeros((batch, npg), bool)
+        writable[:, n_pin:] = True
+        if pin is None:
+            return rows, writable
+        self.incref(pin.ids, count=batch)
+        tbl = np.concatenate(
+            [np.broadcast_to(pin.ids, (batch, n_pin)), rows], axis=1)
+        return np.ascontiguousarray(tbl, dtype=np.int32), writable
+
+    def free_block_table(self, tbl: np.ndarray,  # hostsync: ok free-list bookkeeping, pure host numpy
+                         writable: np.ndarray) -> None:
+        """Release a batch's pages: private pages free, pinned decref."""
+        self.decref(np.asarray(tbl)[np.asarray(writable)])
+        pinned = np.asarray(tbl)[~np.asarray(writable)]
+        pinned = pinned[pinned != self.trash_page]
+        self.decref(pinned)
+
+    # ---------------------------------------------------- pinned prefixes
+    def ensure_pinned(self, prefix_cache) -> Optional[PinnedPrefix]:
+        """Pin a ``PrefixCache``'s full pages once; cached by token ids.
+
+        Returns None when the prefix is shorter than one page (nothing
+        shareable — the whole prefix rides in each row's private pages).
+        """
+        key = tuple(prefix_cache.token_ids)
+        hit = self._pins.get(key)
+        if hit is not None:
+            return hit
+        n_pin = prefix_cache.length // self.cfg.page_size
+        if n_pin == 0:
+            return None
+        ids = self.alloc(n_pin)
+        try:
+            self.storage = write_pinned(
+                self.storage, prefix_cache.caches,
+                jax.device_put(ids))
+        except Exception:
+            self.decref(ids)
+            raise
+        pin = PinnedPrefix(key=key, ids=ids,
+                           tokens=n_pin * self.cfg.page_size)
+        self._pins[key] = pin
+        return pin
+
+    def unpin(self, key: Tuple[int, ...]) -> None:
+        pin = self._pins.pop(tuple(key), None)
+        if pin is not None:
+            self.decref(pin.ids)
+
+    def refcounts(self) -> np.ndarray:
+        return self._refcount.copy()

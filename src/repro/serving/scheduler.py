@@ -24,6 +24,16 @@ Pipeline (DESIGN.md §6): queue -> coalesce -> dedup -> dispatch.
   for ``service_model(batch_size)`` simulated seconds; ``poll`` will not
   dispatch again before ``busy_until``, giving real queueing dynamics for
   the arrival-rate sweeps in ``benchmarks/bench_scheduler.py``.
+* **Continuous mode** (``SchedulerConfig(continuous=True)``, DESIGN.md
+  §11) — replaces the bucket barrier with ``slots`` persistent decode
+  slots: a request dispatches the moment a slot frees and occupies it
+  for ``service_model(slots)/slots`` seconds (its steady-state share of
+  a full fused-decode step).  This is the request-level mirror of
+  ``serving/continuous.DecodeSession`` splicing rows into the paged
+  fused loop at step boundaries; with a deterministic engine the served
+  responses and EngineStats are byte-identical to barrier mode
+  (``tests/test_scheduler.py`` locks this), only the latency/throughput
+  dynamics change.
 """
 from __future__ import annotations
 
@@ -85,6 +95,17 @@ class SchedulerConfig:
     queue_capacity: int = 1024    # bounded admission queue (backpressure)
     dedup: bool = True            # coalesce identical in-flight texts
     max_new_tokens: int = 32
+    # Continuous (slot-based) mode, DESIGN.md §11: instead of holding a
+    # bucket open behind the max_wait barrier, a request is dispatched
+    # the moment a decode slot frees — the request-level mirror of
+    # ``DecodeSession``'s mid-flight join/leave.  ``slots`` is the
+    # persistent batch width; each admitted request occupies one slot
+    # for ``service_model(slots) / slots`` simulated seconds (its
+    # steady-state share of a full fused-decode step), so the service
+    # process matches the device reality: rows at different depths
+    # decode together and one finishing does not stall the rest.
+    continuous: bool = False
+    slots: int = 8
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -93,6 +114,8 @@ class SchedulerConfig:
             raise ValueError("queue_capacity must be >= 1")
         if self.max_wait < 0:
             raise ValueError("max_wait must be >= 0")
+        if self.slots < 1:
+            raise ValueError("slots must be >= 1")
         self.max_batch = bucket_batch(self.max_batch)
 
 
@@ -168,6 +191,10 @@ class Scheduler:
         self._completed: List[Request] = []
         self._n_pending = 0
         self._busy_until = 0.0
+        # continuous mode: when each decode slot next frees (multiset —
+        # slots hold no host state here, only their busy horizon; the
+        # device-side identity lives in DecodeSession's leases)
+        self._slot_free: List[float] = [0.0] * self.cfg.slots
         self._rid = itertools.count()
 
     # -------------------------------------------------------- admission
@@ -200,6 +227,9 @@ class Scheduler:
         if not self._groups:
             return None
         t = self._groups[0][0].arrival
+        if self.cfg.continuous:
+            # no fill barrier: dispatch the moment a slot frees
+            return max(t, min(self._slot_free))
         if len(self._groups) < self.cfg.max_batch:
             t += self.cfg.max_wait          # waiting to fill the bucket
         return max(t, self._busy_until)
@@ -222,26 +252,54 @@ class Scheduler:
         return out
 
     def _dispatch(self) -> None:
+        if self.cfg.continuous:
+            self._dispatch_continuous()
+            return
         take = min(len(self._groups), self.cfg.max_batch)
         groups = self._groups[:take]
-        texts = [g[0].text for g in groups]
+        result = self._serve([g[0].text for g in groups])
+        start = max(self.clock.now(), self._busy_until)
+        service = self.service_model(take) if self.service_model else 0.0
+        finish = start + service
+        self._busy_until = finish
+        self.stats.busy_time += service
+        self._complete(groups, result, finish)
+
+    def _dispatch_continuous(self) -> None:
+        """Slot-based dispatch: the cohort is whatever fits the slots that
+        are free RIGHT NOW (no fill barrier) — the request-level analogue
+        of ``DecodeSession.admit`` splicing rows in at a step boundary."""
+        start = max(self.clock.now(), min(self._slot_free))
+        free = [i for i, t in enumerate(self._slot_free) if t <= start]
+        take = min(len(self._groups), len(free), self.cfg.max_batch)
+        groups = self._groups[:take]
+        result = self._serve([g[0].text for g in groups])
+        # each request holds one slot for its steady-state share of a
+        # full-slot fused decode: finishing frees ONLY that slot
+        service = (self.service_model(self.cfg.slots) / self.cfg.slots
+                   if self.service_model else 0.0)
+        finish = start + service
+        for i in free[:take]:
+            self._slot_free[i] = finish
+        self.stats.busy_time += service * take
+        self._complete(groups, result, finish)
+
+    def _serve(self, texts: List[str]):
         # engine first, queue mutation after: if the engine raises, every
         # request stays pending (and countable) for a retry or flush
         result = self.engine.handle_batch_result(
             texts, max_new_tokens=self.cfg.max_new_tokens)
-        del self._groups[:take]
+        del self._groups[:len(texts)]
         if self.cfg.dedup:
             for t in texts:
                 self._by_text.pop(t, None)
-        start = max(self.clock.now(), self._busy_until)
-        service = self.service_model(len(texts)) if self.service_model else 0.0
-        finish = start + service
-        self._busy_until = finish
+        return result
+
+    def _complete(self, groups, result, finish: float) -> None:
         self.stats.batches += 1
-        self.stats.dispatched += len(texts)
+        self.stats.dispatched += len(groups)
         self.stats.big_tokens += result.big_tokens
         self.stats.small_tokens += result.small_tokens
-        self.stats.busy_time += service
         for group, resp, meta in zip(groups, result.responses, result.meta):
             for j, req in enumerate(group):
                 req.response = resp

@@ -1,0 +1,311 @@
+"""Differential suite for the paged KV pool (DESIGN.md §11).
+
+The contract under test is BITWISE, not approximate: paged decode
+gathers K/V pages back into logical-slot order through the block table
+(pure data movement) and runs the identical attend, so
+
+  paged fused decode == dense fused decode == host-stepped oracle
+
+as exact token/length/ended equality, across batch sizes, length
+buckets and page sizes — including the degenerate page_size=1 and the
+pinned shared-prefix path.  On top of that sit allocator unit tests
+(refcounts, exhaustion-raises-not-corrupts) and the ``DecodeSession``
+mid-flight join/leave differentials.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_shim import given, settings, st
+from repro.models import ModelConfig, build_model
+from repro.serving import GenerateConfig, Generator, SamplerConfig
+from repro.serving.continuous import DecodeSession, NoFreeSlots
+from repro.serving.paged_kv import (PagePool, PagePoolConfig,
+                                    PagePoolExhausted)
+
+VOCAB = 128
+EOS = 2
+MNT = 6
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = ModelConfig(num_layers=2, d_model=32, num_heads=2, num_kv_heads=1,
+                      d_ff=64, vocab_size=VOCAB, max_seq_len=256,
+                      dtype="float32", attention_impl="xla_flash",
+                      flash_block_q=16, flash_block_k=16)
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _gen(model_and_params, *, paged=False, page_size=8, pool_pages=0,
+         temp=0.0, mnt=MNT):
+    model, params = model_and_params
+    gc = GenerateConfig(
+        max_new_tokens=mnt, eos_id=EOS,
+        sampler=SamplerConfig(temperature=temp, vocab_size=VOCAB),
+        paged=paged, page_size=page_size, pool_pages=pool_pages)
+    return Generator(model, params, gc)
+
+
+def _prompts(batch, s, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.asarray(rng.integers(3, VOCAB, size=(batch, s)), np.int32)
+
+
+def _triple(gen, toks, **kw):
+    t, l, e = gen.generate_with_lengths({"tokens": jnp.asarray(toks)}, **kw)
+    return np.asarray(t), np.asarray(l), np.asarray(e)
+
+
+def _assert_bitwise(a, b):
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+# ------------------------------------------------- paged == dense, bitwise
+@pytest.mark.parametrize("page_size", [1, 4, 16])
+@pytest.mark.parametrize("batch,s", [(1, 3), (3, 7)])
+def test_paged_fused_bitwise_equals_dense(model_and_params, page_size,
+                                          batch, s):
+    dense = _gen(model_and_params)
+    paged = _gen(model_and_params, paged=True, page_size=page_size)
+    toks = _prompts(batch, s, seed=batch * 100 + s)
+    _assert_bitwise(_triple(paged, toks, seed=5), _triple(dense, toks, seed=5))
+    assert paged.pool.live_pages == 0          # lease released
+
+
+def test_paged_host_oracle_bitwise_equals_dense(model_and_params):
+    dense = _gen(model_and_params)
+    paged = _gen(model_and_params, paged=True, page_size=4)
+    toks = _prompts(3, 7, seed=1)
+    ref = _triple(dense, toks, seed=9)
+    _assert_bitwise(_triple(paged, toks, seed=9), ref)
+    _assert_bitwise(_triple(paged, toks, seed=9, fused=False), ref)
+    assert paged.pool.live_pages == 0
+
+
+def test_paged_temperature_sampling_bitwise(model_and_params):
+    dense = _gen(model_and_params, temp=0.9)
+    paged = _gen(model_and_params, paged=True, page_size=4, temp=0.9)
+    toks = _prompts(3, 7, seed=2)
+    _assert_bitwise(_triple(paged, toks, seed=7), _triple(dense, toks, seed=7))
+
+
+def test_paged_prefix_cache_pins_and_matches_dense(model_and_params):
+    """Shared-prefix path: full prefix pages pinned ONCE, shared by every
+    row, responses bitwise-equal to the dense prefix path."""
+    rng = np.random.default_rng(3)
+    pre_ids = [int(x) for x in rng.integers(3, VOCAB, size=11)]
+    dense = _gen(model_and_params)
+    paged = _gen(model_and_params, paged=True, page_size=4, pool_pages=64)
+    pc_d = dense.build_prefix_cache(pre_ids, batch=3)
+    pc_p = paged.build_prefix_cache(pre_ids, batch=3)
+    sfx = _prompts(3, 5, seed=4)
+    ref = _triple(dense, sfx, seed=9, prefix_cache=pc_d)
+    got = _triple(paged, sfx, seed=9, prefix_cache=pc_p)
+    _assert_bitwise(got, ref)
+    # 11 tokens at page 4 -> 2 full pages pinned; remainder rides private
+    assert paged.pool.pinned_pages == 2
+    assert paged.pool.live_pages == 2          # only the pins persist
+    # the pin is cached by token ids: a second call allocates no new pins
+    got2 = _triple(paged, sfx, seed=9, prefix_cache=pc_p)
+    _assert_bitwise(got2, ref)
+    assert paged.pool.pinned_pages == 2 and paged.pool.live_pages == 2
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=1, max_value=3),      # batch
+       st.integers(min_value=1, max_value=9),      # prompt length
+       st.sampled_from([1, 4, 8]),                 # page size
+       st.integers(min_value=0, max_value=2 ** 16))  # seed
+def test_property_paged_bitwise_any_shape(model_and_params, batch, s,
+                                          page_size, seed):
+    dense = _gen(model_and_params)
+    paged = _gen(model_and_params, paged=True, page_size=page_size,
+                 pool_pages=64)
+    toks = _prompts(batch, s, seed=seed)
+    _assert_bitwise(_triple(paged, toks, seed=seed),
+                    _triple(dense, toks, seed=seed))
+    assert paged.pool.live_pages == 0
+
+
+# -------------------------------------------------------- allocator unit
+def test_pool_alloc_free_refcount(model_and_params):
+    model, _ = model_and_params
+    pool = PagePool(model, PagePoolConfig(page_size=4, num_pages=8))
+    a = pool.alloc(3)
+    assert pool.live_pages == 3 and pool.free_pages == 5
+    assert (pool.refcounts()[a] == 1).all()
+    pool.incref(a)
+    pool.decref(a)
+    assert pool.live_pages == 3                # still held by first ref
+    pool.decref(a)
+    assert pool.live_pages == 0 and pool.free_pages == 8
+    with pytest.raises(RuntimeError, match="over-freed"):
+        pool.decref(a[:1])
+
+
+def test_pool_exhaustion_raises_before_mutation(model_and_params):
+    model, _ = model_and_params
+    pool = PagePool(model, PagePoolConfig(page_size=4, num_pages=4))
+    a = pool.alloc(3)
+    rc = pool.refcounts()
+    with pytest.raises(PagePoolExhausted):
+        pool.alloc(2)
+    # nothing corrupted: refcounts and free list exactly as before
+    assert (pool.refcounts() == rc).all() and pool.free_pages == 1
+    b = pool.alloc(1)                          # the survivor still allocates
+    pool.decref(a)
+    pool.decref(b)
+    assert pool.free_pages == 4
+
+
+def test_block_table_exhaustion_is_all_or_nothing(model_and_params):
+    model, _ = model_and_params
+    pool = PagePool(model, PagePoolConfig(page_size=4, num_pages=6))
+    with pytest.raises(PagePoolExhausted):
+        pool.alloc_block_table(batch=4, capacity=8)   # needs 8 > 6
+    assert pool.live_pages == 0 and pool.free_pages == 6
+    tbl, writable = pool.alloc_block_table(batch=3, capacity=8)
+    assert tbl.shape == (3, 2) and writable.all()
+    assert pool.live_pages == 6
+    pool.free_block_table(tbl, writable)
+    assert pool.live_pages == 0
+
+
+def test_pinned_prefix_sharing_refcounts(model_and_params):
+    """Pinned pages are shared (refcount += batch), freed back to exactly
+    the pin's own reference, and released by unpin."""
+    model, _ = model_and_params
+    dense = _gen(model_and_params)
+    pool = PagePool(model, PagePoolConfig(page_size=4, num_pages=32))
+    pc = dense.build_prefix_cache(list(range(3, 14)), batch=3)  # 11 tokens
+    pin = pool.ensure_pinned(pc)
+    assert pin is not None and len(pin.ids) == 2 and pin.tokens == 8
+    assert (pool.refcounts()[pin.ids] == 1).all()
+    tbl, writable = pool.alloc_block_table(batch=3, capacity=16, pin=pin)
+    # pinned head shared by every row, read-only; private tail writable
+    assert (tbl[:, :2] == pin.ids).all() and not writable[:, :2].any()
+    assert writable[:, 2:].all()
+    assert (pool.refcounts()[pin.ids] == 4).all()   # 1 pin + 3 rows
+    pool.free_block_table(tbl, writable)
+    assert (pool.refcounts()[pin.ids] == 1).all()
+    assert pool.live_pages == pool.pinned_pages == 2
+    pool.unpin(pin.key)
+    assert pool.live_pages == 0 and pool.pinned_pages == 0
+    # same token ids re-pin from cache state, new call allocates again
+    assert pool.ensure_pinned(pc) is not None
+
+
+def test_pool_exhaustion_in_generate_leaves_pool_clean(model_and_params):
+    paged = _gen(model_and_params, paged=True, page_size=4, pool_pages=4)
+    small = _prompts(1, 3, seed=5)
+    _triple(paged, small, seed=0)              # builds the 4-page pool
+    big = _prompts(4, 7, seed=6)               # needs 4 * 4 = 16 pages
+    with pytest.raises(PagePoolExhausted):
+        _triple(paged, big, seed=0)
+    assert paged.pool.live_pages == 0          # nothing leaked
+    _triple(paged, small, seed=0)              # pool still serves
+
+
+# ------------------------------------------------- DecodeSession churn
+def test_session_inaugural_cohort_bitwise_equals_dense(model_and_params):
+    """A cohort filling every slot at step 0, run to completion, replays
+    the dense fused loop bitwise — prefill, key schedule, sampling."""
+    dense = _gen(model_and_params)
+    toks = _prompts(3, 7, seed=7)
+    cap = 7 + MNT + 1                          # the dense capacity rule
+    ref_t, ref_l, ref_e = _triple(dense, toks, seed=5)
+    sess = DecodeSession(_gen(model_and_params), slots=3, capacity=cap,
+                         seed=5)
+    sess.admit(toks, tags=["a", "b", "c"])
+    fins = sorted(sess.drain(), key=lambda f: f["slot"])
+    np.testing.assert_array_equal(np.stack([f["tokens"] for f in fins]),
+                                  ref_t)
+    assert [f["length"] for f in fins] == ref_l.tolist()
+    assert [f["ended"] for f in fins] == ref_e.tolist()
+    assert [f["tag"] for f in fins] == ["a", "b", "c"]
+    assert sess.pool.live_pages == 0 and sess.free_slots == 3
+
+
+def _run_churn(model_and_params, *, fused, chunk, slots=4, s=7, seed=11):
+    """Random join/leave trace; returns {tag: (tokens, length, ended)}."""
+    sess = DecodeSession(_gen(model_and_params), slots=slots,
+                         capacity=s + MNT + 1, seed=seed)
+    r = np.random.default_rng(42)
+    pending = [_prompts(k, s, seed=100 + i)
+               for i, k in enumerate((2, 1, 2, 1, 3))]
+    results, tag = {}, 0
+    for _ in range(60):
+        while pending and pending[0].shape[0] <= sess.free_slots:
+            cohort = pending.pop(0)
+            k = cohort.shape[0]
+            sess.admit(cohort, tags=list(range(tag, tag + k)))
+            tag += k
+        sess.run_chunk(chunk, fused=fused)
+        for f in sess.harvest():
+            results[f["tag"]] = (f["tokens"], f["length"], f["ended"])
+        if not pending and sess.free_slots == sess.slots:
+            break
+    assert not pending and sess.free_slots == sess.slots
+    assert sess.pool.live_pages == 0           # zero leaked pages
+    return results
+
+
+def test_session_churn_fused_bitwise_equals_host_oracle(model_and_params):
+    """ANY join/leave trace: the fused chunks replay the host-stepped
+    oracle bitwise (the PR 4 fused-loop argument, now with mid-flight
+    splice/evict in the carry)."""
+    rf = _run_churn(model_and_params, fused=True, chunk=2)
+    rh = _run_churn(model_and_params, fused=False, chunk=2)
+    assert set(rf) == set(rh) and len(rf) == 9
+    for t in rf:
+        np.testing.assert_array_equal(rf[t][0], rh[t][0])
+        assert rf[t][1:] == rh[t][1:]
+
+
+def test_session_chunk_size_invariance(model_and_params):
+    """Chunk boundaries are invisible: key splits and decode steps are
+    sequential regardless of where the while_loop is cut."""
+    r2 = _run_churn(model_and_params, fused=True, chunk=2)
+    r3 = _run_churn(model_and_params, fused=True, chunk=3)
+    rm = _run_churn(model_and_params, fused=True, chunk=MNT)
+    for t in r2:
+        np.testing.assert_array_equal(r2[t][0], r3[t][0])
+        np.testing.assert_array_equal(r2[t][0], rm[t][0])
+
+
+def test_session_slot_pinned_row_invariance(model_and_params):
+    """Greedy decode: a row's trajectory depends only on its own prompt
+    and slot, not on co-resident rows joining or leaving around it."""
+    cap = 7 + MNT + 1
+    p0 = _prompts(1, 7, seed=8)
+    other = _prompts(2, 7, seed=9)
+    solo = DecodeSession(_gen(model_and_params), slots=3, capacity=cap,
+                         seed=3)
+    solo.admit(p0, slots=[1])
+    t_solo = solo.drain()[0]["tokens"]
+    busy = DecodeSession(_gen(model_and_params), slots=3, capacity=cap,
+                         seed=3)
+    busy.admit(other, slots=[0, 2])
+    busy.run_chunk(2)                          # co-residents mid-flight
+    busy.admit(p0, slots=[1], tags=["pin"])
+    fins = busy.drain()
+    t_co = next(f["tokens"] for f in fins if f["tag"] == "pin")
+    np.testing.assert_array_equal(t_solo, t_co)
+    assert busy.pool.live_pages == 0
+
+
+def test_session_admission_guards(model_and_params):
+    sess = DecodeSession(_gen(model_and_params), slots=2, capacity=14)
+    with pytest.raises(ValueError, match="exceeds session capacity"):
+        sess.admit(_prompts(1, 14))
+    sess.admit(_prompts(2, 7, seed=1))
+    with pytest.raises(NoFreeSlots):
+        sess.admit(_prompts(1, 7, seed=2))
+    with pytest.raises(NoFreeSlots):
+        sess.admit(_prompts(1, 7, seed=2), slots=[0])   # occupied slot
+    sess.drain()
+    assert sess.free_slots == 2 and sess.pool.live_pages == 0

@@ -16,7 +16,7 @@ from repro.models import ModelConfig, build_model
 from repro.models.embedder import init_embedder, tiny_embedder_config
 from repro.serving import (GenerateConfig, Generator, QueueFull,
                            SamplerConfig, Scheduler, SchedulerConfig,
-                           SimClock, replay_trace)
+                           SimClock, poisson_trace, replay_trace)
 from repro.tokenizer import HashWordTokenizer
 
 VOCAB = 4096
@@ -381,3 +381,136 @@ def test_property_k_duplicates_one_generation(stack, k):
     assert big.calls == 1 and big.rows == 1
     assert sched.engine.stats.miss == 1
     assert sched.stats.joined == k - 1
+
+
+# --------------------------------------------- continuous (slot) mode
+@pytest.fixture(scope="module")
+def paged_stack():
+    """The serving stack on PAGED generators (DESIGN.md §11): same tiny
+    LM, but decode runs over the page pool with the shared tweak prefix
+    pinned — the stack the continuous scheduler fronts in production."""
+    tok = HashWordTokenizer(VOCAB)
+    ecfg = tiny_embedder_config(VOCAB)
+    eparams = init_embedder(jax.random.PRNGKey(0), ecfg)
+    lm = ModelConfig(num_layers=1, d_model=32, num_heads=2, num_kv_heads=1,
+                     d_ff=64, vocab_size=VOCAB, max_seq_len=512,
+                     dtype="float32", attention_impl="xla_flash",
+                     flash_block_q=16, flash_block_k=16)
+    gc = GenerateConfig(max_new_tokens=4,
+                        sampler=SamplerConfig(vocab_size=VOCAB),
+                        paged=True, page_size=8, pool_pages=1024)
+    big_m = build_model(lm)
+    small_m = build_model(lm)
+    big = Generator(big_m, big_m.init(jax.random.PRNGKey(1)), gc)
+    small = Generator(small_m, small_m.init(jax.random.PRNGKey(2)), gc)
+    return tok, ecfg, eparams, big, small
+
+
+def test_continuous_dispatches_without_barrier(stack):
+    """No max_wait hold: a lone request dispatches the moment it arrives
+    if a slot is free, instead of waiting out the bucket deadline."""
+    sched = _scheduler(stack, max_wait=100.0, max_batch=8,
+                       continuous=True, slots=4)
+    r = sched.submit("continuous request served immediately")
+    assert sched.next_wakeup() == pytest.approx(0.0)
+    done = sched.poll()                  # no clock advance needed
+    assert [x.rid for x in done] == [r.rid] and r.done
+
+
+def test_continuous_slot_occupancy_and_service_share(stack):
+    """Each request holds ONE slot for service_model(slots)/slots seconds;
+    a third request waits for the first slot to free, not for the whole
+    batch to finish."""
+    sched = _scheduler(stack, max_wait=0.0, max_batch=8, continuous=True,
+                       slots=2, service_model=lambda k: 2.0 * k)
+    r1 = sched.submit("slot occupant one")
+    r2 = sched.submit("slot occupant two")
+    r3 = sched.submit("slot occupant three")
+    sched.poll()                         # r1+r2 cohort at t=0; r3 queued
+    per = 2.0 * 2 / 2                    # service_model(slots)/slots
+    assert r1.finish == pytest.approx(per) and r2.finish == pytest.approx(per)
+    assert not r3.done
+    assert sched.next_wakeup() == pytest.approx(per)
+    sched.clock.advance_to(per)
+    sched.poll()
+    assert r3.finish == pytest.approx(2 * per)
+    assert sched.stats.busy_time == pytest.approx(3 * per)
+
+
+def _churn_run(paged_stack, trace, *, continuous, svc):
+    cfg = (SchedulerConfig(continuous=True, slots=4, max_batch=8,
+                           max_new_tokens=4)
+           if continuous else
+           SchedulerConfig(max_wait=0.05, max_batch=4, max_new_tokens=4))
+    tok, ecfg, eparams, big, small = paged_stack
+    eng = TweakLLMEngine(
+        tokenizer=tok, embedder_params=eparams, embedder_cfg=ecfg,
+        big=big, small=small,
+        cache_cfg=CacheConfig(capacity=128, dim=ecfg.d_model, topk=4),
+        router_cfg=RouterConfig(**EXACT_OR_MISS))
+    sched = Scheduler(eng, cfg, clock=SimClock(), service_model=svc)
+    done = replay_trace(sched, trace)
+    return {r.text: r.response for r in done}, eng, sched
+
+
+def test_continuous_churn_byte_identical_to_barrier(paged_stack):
+    """The satellite contract: a join/leave trace served continuously
+    (requests spliced into slots as they free) yields responses AND
+    EngineStats byte-identical to the batch-to-completion baseline —
+    only the latency dynamics differ — with zero leaked pages."""
+    texts = [f"churn workload query {i} about subject {i}" for i in range(12)]
+    trace = poisson_trace(texts, rate=50.0, seed=3)
+    svc = lambda k: 0.02 + 0.005 * k
+    rb, eng_b, sched_b = _churn_run(paged_stack, trace, continuous=False,
+                                    svc=svc)
+    rc, eng_c, sched_c = _churn_run(paged_stack, trace, continuous=True,
+                                    svc=svc)
+    assert rb == rc and len(rb) == len(texts)
+    assert eng_b.stats == eng_c.stats            # byte-identical accounting
+    assert eng_b.stats.miss == len(texts)
+    # zero leaked pages: every lease released at harvest
+    big = paged_stack[3]
+    assert big.pool is not None and big.pool.live_pages == 0
+    assert sched_c.stats.completed == sched_b.stats.completed == len(texts)
+
+
+def test_continuous_tweak_path_zero_leaked_pages(paged_stack):
+    """Forced-TWEAK traffic through the paged small model: the pinned
+    shared-prefix pages are the ONLY pages left alive after the trace."""
+    tok, ecfg, eparams, big, small = paged_stack
+    eng = TweakLLMEngine(
+        tokenizer=tok, embedder_params=eparams, embedder_cfg=ecfg,
+        big=big, small=small,
+        cache_cfg=CacheConfig(capacity=128, dim=ecfg.d_model, topk=4),
+        router_cfg=RouterConfig(tweak_threshold=-1.0, exact_threshold=2.0))
+    eng.populate([f"seeded question {i} on matter {i}" for i in range(3)],
+                 [f"seeded answer {i}" for i in range(3)])
+    sched = Scheduler(eng, SchedulerConfig(continuous=True, slots=2,
+                                           max_new_tokens=4),
+                      clock=SimClock())
+    trace = [(0.01 * i, f"tweaked churn query {i}") for i in range(5)]
+    done = replay_trace(sched, trace)
+    assert len(done) == 5 and eng.stats.tweak == 5
+    sp = small.pool
+    assert sp is not None and sp.pinned_pages > 0
+    assert sp.live_pages == sp.pinned_pages      # pins only — no leaks
+    assert big.pool is None or big.pool.live_pages == 0
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.lists(st.sampled_from([0.0, 0.005, 0.02, 0.1]),
+                min_size=2, max_size=10),
+       st.integers(min_value=0, max_value=2 ** 16))
+def test_property_continuous_churn_equivalence(paged_stack, gaps, seed):
+    """ANY arrival trace of distinct texts: continuous == barrier on
+    responses and EngineStats, zero leaked pages."""
+    t, trace = 0.0, []
+    for i, gap in enumerate(gaps):
+        t += gap
+        trace.append((t, f"property churn {seed} item {i} theme {i}"))
+    svc = lambda k: 0.01 + 0.002 * k
+    rb, eng_b, _ = _churn_run(paged_stack, trace, continuous=False, svc=svc)
+    rc, eng_c, _ = _churn_run(paged_stack, trace, continuous=True, svc=svc)
+    assert rb == rc
+    assert eng_b.stats == eng_c.stats
+    assert paged_stack[3].pool.live_pages == 0
