@@ -2,10 +2,19 @@
 
 PYTHONPATH_PREFIX := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-sanitize analyze bench bench-scheduler bench-index bench-generate bench-prefill bench-smoke bench-baseline dev-deps lint
+.PHONY: test test-sanitize test-multidevice analyze bench bench-scheduler bench-replicas bench-index bench-generate bench-prefill bench-smoke bench-baseline dev-deps lint
 
 test:
 	$(PYTHONPATH_PREFIX) python -m pytest -x -q
+
+# multi-device CI lane (DESIGN.md §12): the distributed / replica /
+# scheduler / engine suites on 8 forced host devices, so the sharded
+# bank's shard_map paths run IN-PROCESS (the subprocess device scripts
+# in test_distributed.py force their own device count regardless)
+test-multidevice:
+	$(PYTHONPATH_PREFIX) XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		python -m pytest -q tests/test_distributed.py tests/test_replicas.py \
+		tests/test_scheduler.py tests/test_engine_e2e.py
 
 # hot-path invariant analyzer (DESIGN.md §10): AST lint + registry parity,
 # then jaxpr/HLO contract checks traced over the bucket sets
@@ -25,6 +34,10 @@ bench:
 
 bench-scheduler:
 	$(PYTHONPATH_PREFIX) python -m benchmarks.bench_scheduler
+
+# multi-replica scaling + shared-bank hit convergence (DESIGN.md §12)
+bench-replicas:
+	$(PYTHONPATH_PREFIX) python -m benchmarks.run --only replicas --json BENCH_replicas.json
 
 # full IVF-vs-flat sweep; emits the repo-standard trajectory file
 bench-index:

@@ -6,8 +6,10 @@
 Policy (why two classes of metric):
 
 * **Gated** — quality fields (``recall``, ``band_agree``,
-  ``decision_agree``) transfer exactly across machines and FAIL the job
-  when they drop more than ``--tol`` (default 25%) below baseline;
+  ``decision_agree``, plus the deterministic replica ratios
+  ``scaling_eff`` and ``hit_ratio``) transfer exactly across machines
+  and FAIL the job when they drop more than ``--tol`` (default 25%)
+  below baseline;
   ``speedup`` ratios transfer approximately (cache-hierarchy differences
   leak into gather-vs-GEMM ratios) and fail at double the tolerance —
   wide enough to absorb runner heterogeneity, tight enough to catch a
@@ -34,7 +36,8 @@ import sys
 # denominator scale with the machine, but cache-hierarchy differences
 # leak in), so they get double the tolerance to keep the gate from
 # flaking on runner heterogeneity while still catching real collapses.
-QUALITY_KEYS = ("recall", "band_agree", "decision_agree")
+QUALITY_KEYS = ("recall", "band_agree", "decision_agree",
+                "scaling_eff", "hit_ratio")
 RATIO_KEYS = ("speedup",)
 LATENCY_KEYS = ("us_per_call",)
 

@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   microbench  per-component latencies                      (paper Table 1)
   roofline_*  dry-run roofline terms per (arch x shape)    (§Roofline)
   scheduler   coalesced-vs-per-request + latency sweeps    (DESIGN.md §6)
+  replicas    multi-replica scaling + shared-bank hits     (DESIGN.md §12)
   index       clustered (IVF) vs flat cache lookup         (DESIGN.md §7)
   generate    fused on-device vs host-loop decode          (DESIGN.md §8)
   prefill     prefix-KV reuse + suffix buckets vs full     (DESIGN.md §9)
@@ -32,8 +33,9 @@ import time
 import traceback
 
 SUITES = ("fig2", "fig34567", "fig89", "microbench", "roofline", "scheduler",
-          "index", "generate", "prefill")
-SMOKE_SUITES = ("microbench", "index", "scheduler", "generate", "prefill")
+          "replicas", "index", "generate", "prefill")
+SMOKE_SUITES = ("microbench", "index", "scheduler", "replicas", "generate",
+                "prefill")
 SCHEMA = "tweakllm-bench/v1"
 
 
@@ -69,8 +71,9 @@ def main() -> None:
     only = tuple(args.only.split(",")) if args.only else default
 
     from . import (bench_generate, bench_index, bench_prefill,
-                   bench_scheduler, fig2_precision_recall, fig34567_quality,
-                   fig89_cost_analysis, microbench, roofline)
+                   bench_replicas, bench_scheduler, fig2_precision_recall,
+                   fig34567_quality, fig89_cost_analysis, microbench,
+                   roofline)
     mods = {
         "fig2": fig2_precision_recall,
         "fig34567": fig34567_quality,
@@ -78,6 +81,7 @@ def main() -> None:
         "microbench": microbench,
         "roofline": roofline,
         "scheduler": bench_scheduler,
+        "replicas": bench_replicas,
         "index": bench_index,
         "generate": bench_generate,
         "prefill": bench_prefill,

@@ -87,9 +87,10 @@ JIT_REGISTRY: Tuple[JitSite, ...] = (
                  "(contract tests build the no-donate variant on purpose)"),
     JitSite("core/engine.py", "TweakLLMEngine.__init__",
             note="embedder encode; params/tokens are read-only"),
-    JitSite("core/engine.py", "TweakLLMEngine.__init__", donate=(0,),
-            note="fused lookup+route+touch; donates cache state so hit "
-                 "accounting happens in place (DESIGN.md §5)"),
+    JitSite("core/engine.py", "SharedCacheBank.__init__", donate=(0,),
+            note="fused lookup+route+touch on the shared bank; donates "
+                 "cache state so hit accounting happens in place "
+                 "(DESIGN.md §5/§12)"),
     JitSite("core/baseline.py", "GPTCacheBaseline.__init__",
             note="baseline embedder encode"),
     JitSite("core/baseline.py", "GPTCacheBaseline.__init__",
@@ -109,6 +110,12 @@ JIT_REGISTRY: Tuple[JitSite, ...] = (
     JitSite("core/distributed.py", "make_distributed_insert.insert",
             note="single-entry sharded insert (reference path, no "
                  "donation: keeps the differential oracle's inputs alive)"),
+    JitSite("core/distributed.py",
+            "make_distributed_lookup_and_touch.lookup_touch", donate=(0,),
+            note="sharded fused lookup+route+touch: per-shard scan + "
+                 "winner merge + replicated-index scatter on the sharded "
+                 "recency arrays, one device call per serve batch "
+                 "(DESIGN.md §12)"),
     JitSite("core/distributed.py", "make_distributed_insert_batch.insert_batch",
             donate=(0,),
             note="sharded miss-batch commit; donates state like the local "

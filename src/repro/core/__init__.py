@@ -4,5 +4,6 @@ from .cache import (CacheConfig, init_cache, insert, insert_batch,
                     make_insert_batch, lookup, lookup_and_touch, fetch)
 from .index import build_index, maybe_reindex
 from .router import RouterConfig, route, band_of, MISS, TWEAK, EXACT
-from .engine import TweakLLMEngine, EngineStats, BatchResult
+from .engine import (TweakLLMEngine, EngineStats, BatchResult,
+                     SharedCacheBank, ReplicaGroup)
 from .baseline import GPTCacheBaseline, BaselineConfig

@@ -29,6 +29,7 @@ from jax.experimental.shard_map import shard_map
 from repro.kernels.cosine_topk.ops import cosine_topk, cosine_topk_gather
 from . import cache as cache_lib
 from . import index as index_lib
+from . import router as router_lib
 
 
 def shard_cache_state(state, mesh: Mesh, axis: str = "data"):
@@ -92,9 +93,20 @@ def shard_ivf_cache_state(state, mesh: Mesh, cfg: cache_lib.CacheConfig,  # host
     return out
 
 
-def make_distributed_lookup(mesh: Mesh, cfg: cache_lib.CacheConfig,
-                            axis: str = "data"):
-    """Builds a jitted (state, q_embs) -> (scores, idx) sharded lookup."""
+def _merge_shard_topk(s, gi, axis: str, n_shards: int, k: int):
+    """All-gather the (B, k) per-shard winners and merge to a global top-k."""
+    all_s = jax.lax.all_gather(s, axis)                # (n_shards, B, k)
+    all_i = jax.lax.all_gather(gi, axis)
+    b = s.shape[0]
+    flat_s = jnp.moveaxis(all_s, 0, 1).reshape(b, n_shards * k)
+    flat_i = jnp.moveaxis(all_i, 0, 1).reshape(b, n_shards * k)
+    top_s, sel = jax.lax.top_k(flat_s, k)
+    top_i = jnp.take_along_axis(flat_i, sel, axis=1)
+    return top_s, top_i
+
+
+def _flat_shard_lookup(mesh: Mesh, cfg: cache_lib.CacheConfig, axis: str):
+    """shard_map'd flat per-shard scan + merge: ``(emb, valid, q) -> (s, i)``."""
     n_shards = mesh.shape[axis]
     assert cfg.capacity % n_shards == 0, (cfg.capacity, n_shards)
     local_c = cfg.capacity // n_shards
@@ -106,25 +118,59 @@ def make_distributed_lookup(mesh: Mesh, cfg: cache_lib.CacheConfig,
                            block_n=min(cfg.block_n, local_c))
         shard = jax.lax.axis_index(axis)
         gi = jnp.where(i >= 0, i + shard * local_c, -1)
-        # all-gather the (B,k) winners from every shard and merge
-        all_s = jax.lax.all_gather(s, axis)            # (n_shards, B, k)
-        all_i = jax.lax.all_gather(gi, axis)
-        b = q.shape[0]
-        flat_s = jnp.moveaxis(all_s, 0, 1).reshape(b, n_shards * k)
-        flat_i = jnp.moveaxis(all_i, 0, 1).reshape(b, n_shards * k)
-        top_s, pos = jax.lax.top_k(flat_s, k)
-        top_i = jnp.take_along_axis(flat_i, pos, axis=1)
-        return top_s, top_i
+        return _merge_shard_topk(s, gi, axis, n_shards, k)
 
-    sm = shard_map(
+    return shard_map(
         local_lookup, mesh=mesh,
         in_specs=(P(axis), P(axis), P()),
         out_specs=(P(), P()),
         check_rep=False)
 
+
+def _ivf_shard_lookup(mesh: Mesh, cfg: cache_lib.CacheConfig, axis: str):
+    """shard_map'd IVF probe + merge over the 7 IVF state arrays + queries."""
+    n_shards = mesh.shape[axis]
+    assert cfg.capacity % n_shards == 0, (cfg.capacity, n_shards)
+    local_c = cfg.capacity // n_shards
+    p = index_lib.resolve(cfg)
+    k = min(cfg.topk, local_c)
+
+    def local_lookup(emb, valid, members, count, assign, pos, centroids, q):
+        # members (nclusters, bucket): this shard's table, LOCAL slot ids
+        cand, live = index_lib.candidates(members, count, valid, assign,
+                                          pos, centroids, q, p.nprobe)
+        s, i = cosine_topk_gather(q, emb, cand, live, k=k,
+                                  impl=cfg.lookup_impl,
+                                  block_m=min(cfg.block_n, cand.shape[1]))
+        shard = jax.lax.axis_index(axis)
+        gi = jnp.where(i >= 0, i + shard * local_c, -1)
+        top_s, top_i = _merge_shard_topk(s, gi, axis, n_shards, k)
+        return top_s, jnp.where(jnp.isfinite(top_s), top_i, -1)
+
+    return shard_map(
+        local_lookup, mesh=mesh,
+        in_specs=(P(axis),) * 6 + (P(), P()),
+        out_specs=(P(), P()),
+        check_rep=False)
+
+
+def _sharded_lookup_call(sm, state, q_embs, ivf: bool):
+    """Applies a shard-mapped lookup to the state dict's arrays."""
+    if ivf:
+        return sm(state["emb"], state["valid"], state["ivf_members"],
+                  state["ivf_count"], state["ivf_assign"], state["ivf_pos"],
+                  state["ivf_centroids"], q_embs)
+    return sm(state["emb"], state["valid"], q_embs)
+
+
+def make_distributed_lookup(mesh: Mesh, cfg: cache_lib.CacheConfig,
+                            axis: str = "data"):
+    """Builds a jitted (state, q_embs) -> (scores, idx) sharded lookup."""
+    sm = _flat_shard_lookup(mesh, cfg, axis)
+
     @jax.jit
     def lookup(state, q_embs):
-        return sm(state["emb"], state["valid"], q_embs)
+        return _sharded_lookup_call(sm, state, q_embs, ivf=False)
 
     return lookup
 
@@ -141,43 +187,47 @@ def make_distributed_ivf_lookup(mesh: Mesh, cfg: cache_lib.CacheConfig,
     ``local_capacity``.
     """
     assert cfg.index == "ivf", "use make_distributed_lookup for flat caches"
-    n_shards = mesh.shape[axis]
-    assert cfg.capacity % n_shards == 0, (cfg.capacity, n_shards)
-    local_c = cfg.capacity // n_shards
-    p = index_lib.resolve(cfg)
-    k = min(cfg.topk, local_c)
-
-    def local_lookup(emb, valid, members, count, assign, pos, centroids, q):
-        # members (nclusters, bucket): this shard's table, LOCAL slot ids
-        cand, live = index_lib.candidates(members, count, valid, assign,
-                                          pos, centroids, q, p.nprobe)
-        s, i = cosine_topk_gather(q, emb, cand, live, k=k,
-                                  impl=cfg.lookup_impl,
-                                  block_m=min(cfg.block_n, cand.shape[1]))
-        shard = jax.lax.axis_index(axis)
-        gi = jnp.where(i >= 0, i + shard * local_c, -1)
-        all_s = jax.lax.all_gather(s, axis)            # (n_shards, B, k)
-        all_i = jax.lax.all_gather(gi, axis)
-        b = q.shape[0]
-        flat_s = jnp.moveaxis(all_s, 0, 1).reshape(b, n_shards * k)
-        flat_i = jnp.moveaxis(all_i, 0, 1).reshape(b, n_shards * k)
-        top_s, sel = jax.lax.top_k(flat_s, k)
-        top_i = jnp.take_along_axis(flat_i, sel, axis=1)
-        return top_s, jnp.where(jnp.isfinite(top_s), top_i, -1)
-
-    sm = shard_map(
-        local_lookup, mesh=mesh,
-        in_specs=(P(axis),) * 6 + (P(), P()),
-        out_specs=(P(), P()),
-        check_rep=False)
+    sm = _ivf_shard_lookup(mesh, cfg, axis)
 
     @jax.jit
     def lookup(state, q_embs):
-        return sm(state["emb"], state["valid"], state["ivf_members"],
-                  state["ivf_count"], state["ivf_assign"], state["ivf_pos"],
-                  state["ivf_centroids"], q_embs)
+        return _sharded_lookup_call(sm, state, q_embs, ivf=True)
 
     return lookup
+
+
+def make_distributed_lookup_and_touch(mesh: Mesh, cfg: cache_lib.CacheConfig,
+                                      router_cfg, axis: str = "data"):
+    """Sharded analogue of :func:`repro.core.cache.lookup_and_touch`.
+
+    One jitted device call per serve batch, exactly like the local fused
+    path (DESIGN.md §5): the shard-mapped scan (flat or IVF per
+    ``cfg.index``) merges per-shard winners to a replicated global top-k,
+    the router bands the top-1 scores, and the hit-accounting scatter
+    (``last_used``/``hits``/``clock``) lands on the row-sharded arrays
+    with replicated indices — GSPMD routes each update to the owning
+    shard, so replicas sharing the bank pay no extra collectives for
+    touch bookkeeping.  State is donated for in-place update.
+    """
+    ivf = cfg.index == "ivf"
+    sm = (_ivf_shard_lookup if ivf else _flat_shard_lookup)(mesh, cfg, axis)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def lookup_touch(state, q_embs):
+        scores, idx = _sharded_lookup_call(sm, state, q_embs, ivf=ivf)
+        decisions = router_lib.route(scores[:, 0], router_cfg)
+        top1 = idx[:, 0]
+        hit = (decisions != router_lib.MISS) & (top1 >= 0)
+        # misses scatter out of bounds and drop, mirroring cache.touch
+        w = jnp.where(hit, top1, cfg.capacity)
+        new = dict(state)
+        new["last_used"] = state["last_used"].at[w].set(state["clock"],
+                                                        mode="drop")
+        new["hits"] = state["hits"].at[w].add(1, mode="drop")
+        new["clock"] = state["clock"] + 1
+        return new, scores, idx, decisions
+
+    return lookup_touch
 
 
 def make_distributed_insert(mesh: Mesh, cfg: cache_lib.CacheConfig,

@@ -90,6 +90,30 @@ class EngineStats:
     def hit_rate(self) -> float:
         return (self.tweak + self.exact) / max(self.total, 1)
 
+    @classmethod
+    def aggregate(cls, parts) -> "EngineStats":
+        """Sum counters across replicas (DESIGN.md §12).
+
+        Cost rates must agree — silently averaging them would make the
+        aggregate ``cost`` property meaningless.
+        """
+        parts = list(parts)
+        if not parts:
+            return cls()
+        rates = {(p.big_cost_per_token, p.small_cost_per_token)
+                 for p in parts}
+        if len(rates) != 1:
+            raise ValueError(
+                f"replicas disagree on cost rates: {sorted(rates)}")
+        big_rate, small_rate = rates.pop()
+        out = cls(big_cost_per_token=big_rate,
+                  small_cost_per_token=small_rate)
+        for f in ("total", "miss", "tweak", "exact", "big_tokens",
+                  "small_tokens", "big_prompt_tokens", "small_prompt_tokens",
+                  "baseline_prompt_tokens"):
+            setattr(out, f, sum(getattr(p, f) for p in parts))
+        return out
+
 
 @dataclasses.dataclass
 class BatchResult:
@@ -109,25 +133,142 @@ class BatchResult:
     small_prompt_tokens: int = 0  # real (unpadded) prompt tokens, Small LLM
 
 
+class SharedCacheBank:
+    """The semantic cache as a first-class shareable object (DESIGN.md §12).
+
+    Owns the device-side cache state, the host text mirror, and the two
+    jitted state-mutating entry points — the fused lookup+route+touch and
+    the batched miss commit.  One bank serves ONE engine (the PR 1–7
+    topology, ``mesh=None``) or N replicas through a :class:`ReplicaGroup`:
+    every replica routes lookups and commits misses through the same
+    object, so a response cached by replica A is visible to replica B on
+    B's very next lookup.
+
+    With a ``mesh``, the embedding bank, token buffers, and IVF member
+    tables are row-sharded over ``axis`` (centroids and ring scalars
+    replicated) and the entry points come from ``repro.core.distributed``:
+    lookups merge per-shard top-k winners, and inserts are
+    single-writer-per-shard — the globally rotating ring pointer names the
+    owning shard for every slot, so concurrent replica commits serialize
+    through the bank with no cross-shard write traffic.
+    """
+
+    def __init__(self, cache_cfg: cache_lib.CacheConfig,
+                 router_cfg: Optional[router_lib.RouterConfig] = None, *,
+                 mesh=None, axis: str = "data", state=None):
+        if router_cfg is None:
+            router_cfg = router_lib.RouterConfig()
+        self.cfg = cache_cfg
+        self.router_cfg = router_cfg
+        self.mesh = mesh
+        self.axis = axis
+        # host-side mirror of cached texts (display only; tokens are truth)
+        self.text_store: Dict[int, Tuple[str, str]] = {}
+        self.insert_seq = 0
+        if state is None:
+            state = cache_lib.init_cache(cache_cfg)
+        if mesh is None:
+            self.state = state
+            # fused lookup + route + hit-accounting; cache state donated so
+            # the touch happens in place (DESIGN.md §5)
+            self._lookup_touch = jax.jit(
+                lambda s, q: cache_lib.lookup_and_touch(s, cache_cfg,
+                                                        router_cfg, q),
+                donate_argnums=(0,))
+            self._insert = cache_lib.make_insert_batch(cache_cfg)
+        else:
+            from . import distributed as dist_lib
+            if cache_cfg.index == "ivf":
+                self.state = dist_lib.shard_ivf_cache_state(
+                    state, mesh, cache_cfg, axis)
+            else:
+                self.state = dist_lib.shard_cache_state(state, mesh, axis)
+            self._lookup_touch = dist_lib.make_distributed_lookup_and_touch(
+                mesh, cache_cfg, router_cfg, axis)
+            self._insert = dist_lib.make_distributed_insert_batch(
+                mesh, cache_cfg, axis)
+
+    @property
+    def sharded(self) -> bool:
+        return self.mesh is not None
+
+    def lookup_and_touch(self, q_embs):
+        """One fused device call: returns (scores, idx, decisions)."""
+        self.state, scores, idx, dec = self._lookup_touch(self.state, q_embs)
+        return scores, idx, dec
+
+    def insert_batch(self, embs, q_tokens, q_mask, r_tokens, r_mask, count):
+        """One jitted commit; returns the device ``slots`` array."""
+        self.state, slots = self._insert(self.state, embs, q_tokens, q_mask,
+                                         r_tokens, r_mask, count)
+        return slots
+
+    def maybe_reindex(self) -> bool:
+        """IVF maintenance after a commit; no-op for flat caches.
+
+        Always advances ``insert_seq`` (the reindex seed stream) so
+        local and sharded banks rebuild from the same seed sequence.
+        """
+        rebuilt = False
+        if self.cfg.index == "ivf":
+            if self.mesh is None:
+                self.state, rebuilt = index_lib.maybe_reindex(
+                    self.state, self.cfg, seed=self.insert_seq)
+            else:
+                rebuilt = self._maybe_reindex_sharded()
+        self.insert_seq += 1
+        return rebuilt
+
+    def _maybe_reindex_sharded(self) -> bool:  # hostsync: ok host-driven maintenance, mirrors index.maybe_reindex
+        """Gather -> rebuild -> reshard, the sharded k-means recluster.
+
+        ``build_index`` resets the IVF arrays to a fresh LOCAL layout, so
+        pulling the (tiny, capacity-bounded) bank to host, rebuilding, and
+        resharding reproduces exactly what a local bank would hold — at a
+        maintenance cadence, not per request.
+        """
+        overflow, pending = jax.device_get(
+            (self.state["ivf_overflow"], self.state["ivf_pending"]))
+        p = index_lib.resolve(self.cfg)
+        if not (bool(overflow) or int(pending) >= p.reindex_every):
+            return False
+        from . import distributed as dist_lib
+        host = jax.device_get(self.state)
+        rebuilt = index_lib.build_index(host, self.cfg, seed=self.insert_seq)
+        self.state = dist_lib.shard_ivf_cache_state(
+            rebuilt, self.mesh, self.cfg, self.axis)
+        return True
+
+
 class TweakLLMEngine:
     def __init__(self, *, tokenizer: HashWordTokenizer,
                  embedder_params, embedder_cfg,
                  big: Generator, small: Generator,
-                 cache_cfg: cache_lib.CacheConfig,
+                 cache_cfg: Optional[cache_lib.CacheConfig] = None,
                  router_cfg: Optional[router_lib.RouterConfig] = None,
-                 max_query_len: int = 64, use_prefix_cache: bool = True):
-        if router_cfg is None:
-            router_cfg = router_lib.RouterConfig()
+                 max_query_len: int = 64, use_prefix_cache: bool = True,
+                 bank: Optional[SharedCacheBank] = None,
+                 replica_id: int = 0):
+        if bank is None:
+            if cache_cfg is None:
+                raise ValueError("pass cache_cfg or a SharedCacheBank")
+            bank = SharedCacheBank(cache_cfg, router_cfg)
+        else:
+            if cache_cfg is not None and cache_cfg != bank.cfg:
+                raise ValueError("cache_cfg disagrees with the shared bank")
+            if router_cfg is not None and router_cfg != bank.router_cfg:
+                raise ValueError("router_cfg disagrees with the shared bank")
+        self.bank = bank
+        self.replica_id = replica_id
         self.tok = tokenizer
         self.embedder_params = embedder_params
         self.embedder_cfg = embedder_cfg
         self.big = big
         self.small = small
-        self.cache_cfg = cache_cfg
-        self.router_cfg = router_cfg
+        self.cache_cfg = bank.cfg
+        self.router_cfg = bank.router_cfg
         self.max_query_len = max_query_len
         self.use_prefix_cache = use_prefix_cache
-        self.state = cache_lib.init_cache(cache_cfg)
         self.stats = EngineStats()
         # Shared tweak-instruction prefix KV, one PrefixCache per batch
         # bucket (DESIGN.md §9), invalidated when the small generator's
@@ -136,9 +277,6 @@ class TweakLLMEngine:
         self._prefix_caches: Dict[int, object] = {}
         self._prefix_sig = None
         self._static_counts: Optional[Tuple[int, int]] = None
-        # host-side mirror of cached texts (display only; tokens are truth)
-        self._text_store: Dict[int, Tuple[str, str]] = {}
-        self._insert_seq = 0
         # per-batch seed counter threaded into every Big/Small generate
         # call: distinct serve batches sample from distinct key streams
         # (the seed replayed PRNGKey(0) for every batch)
@@ -146,13 +284,20 @@ class TweakLLMEngine:
 
         self._embed = jax.jit(
             lambda p, t, m: embed_encode(p, t, m, embedder_cfg))
-        # fused lookup + route + hit-accounting; cache state donated so the
-        # touch happens in place (DESIGN.md §5)
-        self._lookup_touch = jax.jit(
-            lambda s, q: cache_lib.lookup_and_touch(s, cache_cfg,
-                                                    router_cfg, q),
-            donate_argnums=(0,))
-        self._insert_batch = cache_lib.make_insert_batch(cache_cfg)
+
+    # cache state + text mirror live on the bank (shared across replicas);
+    # these aliases keep the single-engine API unchanged
+    @property
+    def state(self):
+        return self.bank.state
+
+    @state.setter
+    def state(self, value):
+        self.bank.state = value
+
+    @property
+    def _text_store(self) -> Dict[int, Tuple[str, str]]:
+        return self.bank.text_store
 
     # ------------------------------------------------------------- embed
     def embed_texts(self, texts: List[str]) -> jnp.ndarray:
@@ -190,7 +335,7 @@ class TweakLLMEngine:
         self._tweak_encode_len(max_new_tokens)
         embs, qlens = self._embed_with_lengths(queries)
         self.stats.baseline_prompt_tokens += sum(qlens)
-        self.state, scores, idxs, dec = self._lookup_touch(self.state, embs)
+        scores, idxs, dec = self.bank.lookup_and_touch(embs)
         # THE per-serve-batch device->host sync (DESIGN.md §5): scores,
         # slots, and routing decisions pulled in one device_get; the
         # top-1 column is sliced on host (device-side `[:, 0]` would
@@ -504,8 +649,8 @@ class TweakLLMEngine:
             if nb > n else embs
         # the traced `count` scalar is device_put explicitly — passing the
         # bare python int would transfer it implicitly at every dispatch
-        self.state, slots = self._insert_batch(
-            self.state, embs, jnp.asarray(pad(qt)), jnp.asarray(pad(qm)),
+        slots = self.bank.insert_batch(
+            embs, jnp.asarray(pad(qt)), jnp.asarray(pad(qm)),
             jnp.asarray(pad(rt)), jnp.asarray(pad(rm)),
             jax.device_put(np.int32(n)))
         # single device->host sync per insert batch
@@ -514,9 +659,7 @@ class TweakLLMEngine:
             self._text_store[slots[j]] = (texts[j], resp_texts[j])
         # IVF maintenance: k-means recluster when enough writes piled up
         # (or the member table overflowed).  No-op for flat caches.
-        self.state, _ = index_lib.maybe_reindex(self.state, self.cache_cfg,
-                                                seed=self._insert_seq)
-        self._insert_seq += 1
+        self.bank.maybe_reindex()
 
     def _run_miss(self, queries, ids, embs, responses, max_new_tokens,
                   gen_tokens, prompt_tokens):
@@ -563,3 +706,72 @@ class TweakLLMEngine:
         resp_tokens = [[t for t, m in zip(rt_l[i], rm_l[i]) if m > 0]
                        for i in range(len(queries))]
         self._insert_entries(queries, resp_tokens, responses, embs)
+
+
+class ReplicaGroup:
+    """N engine replicas over shared (or deliberately private) cache banks.
+
+    The replica topology (DESIGN.md §12): model weights are per-replica
+    handles (replicated params, or TP-sharded via launch/sharding.py param
+    specs — the Generator objects may even be shared when the caller wants
+    one set of compiled functions), while the cache bank is ONE
+    :class:`SharedCacheBank` serving every replica.  ``shared=False``
+    builds a private bank per replica instead — the degraded baseline the
+    replica bench compares against (hit rate then converges per replica
+    stream, not per aggregate stream).
+    """
+
+    def __init__(self, engines: List[TweakLLMEngine]):
+        if not engines:
+            raise ValueError("ReplicaGroup needs at least one engine")
+        self.engines = list(engines)
+
+    @classmethod
+    def build(cls, n: int, *, tokenizer, embedder_params, embedder_cfg,
+              big, small, cache_cfg: cache_lib.CacheConfig,
+              router_cfg: Optional[router_lib.RouterConfig] = None,
+              shared: bool = True, mesh=None, axis: str = "data",
+              **engine_kw) -> "ReplicaGroup":
+        """Builds ``n`` replicas.  ``big``/``small`` are Generators shared
+        by every replica, or callables ``replica_id -> Generator`` for
+        per-replica handles (distinct KV pools)."""
+        bank = (SharedCacheBank(cache_cfg, router_cfg, mesh=mesh, axis=axis)
+                if shared else None)
+        engines = []
+        for rid in range(n):
+            engines.append(TweakLLMEngine(
+                tokenizer=tokenizer, embedder_params=embedder_params,
+                embedder_cfg=embedder_cfg,
+                big=big(rid) if callable(big) else big,
+                small=small(rid) if callable(small) else small,
+                bank=bank if shared else SharedCacheBank(
+                    cache_cfg, router_cfg, mesh=mesh, axis=axis),
+                replica_id=rid, **engine_kw))
+        return cls(engines)
+
+    def __len__(self) -> int:
+        return len(self.engines)
+
+    def __getitem__(self, rid: int) -> TweakLLMEngine:
+        return self.engines[rid]
+
+    @property
+    def shared(self) -> bool:
+        return all(e.bank is self.engines[0].bank for e in self.engines)
+
+    @property
+    def bank(self) -> SharedCacheBank:
+        if not self.shared:
+            raise ValueError("replicas hold private banks; no single bank")
+        return self.engines[0].bank
+
+    @property
+    def stats(self) -> EngineStats:
+        """Aggregate serve counters across every replica."""
+        return EngineStats.aggregate(e.stats for e in self.engines)
+
+    def leaked_kv_pages(self) -> List[int]:
+        """Per-replica leaked (live minus pinned) KV pages, paged pools
+        only — every entry must be 0 once all work is harvested."""
+        from repro.serving.continuous import leaked_pages
+        return [leaked_pages(e.big, e.small) for e in self.engines]

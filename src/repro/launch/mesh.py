@@ -22,6 +22,25 @@ def make_host_mesh(model: int = 1):
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
+def make_cache_mesh(n_shards: int, model: int = 1):
+    """Mesh over an explicit device count, for cache row-sharding.
+
+    Serving replicas share ONE row-sharded bank (DESIGN.md §12) and the
+    shard count is a deployment choice, so this takes it explicitly
+    instead of consuming every device like ``make_host_mesh``.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+    need = n_shards * model
+    devices = jax.devices()
+    if need > len(devices):
+        raise ValueError(f"({n_shards}, {model}) mesh needs {need} devices, "
+                         f"have {len(devices)} (set XLA_FLAGS="
+                         f"--xla_force_host_platform_device_count=N on CPU)")
+    return Mesh(np.asarray(devices[:need]).reshape(n_shards, model),
+                ("data", "model"))
+
+
 def batch_axes(mesh) -> tuple:
     """Mesh axes the batch dimension shards over."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -15,22 +15,25 @@ import time
 
 import jax
 
-from repro.core import CacheConfig, RouterConfig, TweakLLMEngine
+from repro.core import (CacheConfig, ReplicaGroup, RouterConfig,
+                        TweakLLMEngine)
 from repro.data import WorkloadGenerator
+from repro.launch.mesh import make_cache_mesh
 from repro.models import ModelConfig, build_model
 from repro.models.embedder import tiny_embedder_config, init_embedder
-from repro.serving import (GenerateConfig, Generator, SamplerConfig,
-                           Scheduler, SchedulerConfig, SimClock,
-                           poisson_trace, replay_trace)
+from repro.serving import (GenerateConfig, Generator, ReplicaScheduler,
+                           SamplerConfig, Scheduler, SchedulerConfig,
+                           SimClock, poisson_trace, replay_trace)
 from repro.tokenizer import HashWordTokenizer
 from repro.training.embedder_train import train_embedder
 
 
-def build_engine(*, vocab: int = 8192, threshold: float = 0.7,
-                 capacity: int = 4096, train_embedder_steps: int = 60,
-                 policy: str = "fifo", lookup_impl: str = "xla",
-                 index: str = "flat", nclusters: int = 0, nprobe: int = 8,
-                 seed: int = 0):
+def build_stack(*, vocab: int = 8192, capacity: int = 4096,
+                train_embedder_steps: int = 60, policy: str = "fifo",
+                lookup_impl: str = "xla", index: str = "flat",
+                nclusters: int = 0, nprobe: int = 8, threshold: float = 0.7,
+                seed: int = 0):
+    """Shared model stack + configs for one engine or a replica group."""
     tok = HashWordTokenizer(vocab)
     ecfg = tiny_embedder_config(vocab)
     eparams = init_embedder(jax.random.PRNGKey(seed), ecfg)
@@ -53,14 +56,26 @@ def build_engine(*, vocab: int = 8192, threshold: float = 0.7,
                              sampler=SamplerConfig(vocab_size=vocab))
     big = Generator(big_m, big_m.init(jax.random.PRNGKey(1)), gen_cfg)  # seed: ok demo CLI, fixed init for reproducibility
     small = Generator(small_m, small_m.init(jax.random.PRNGKey(2)), gen_cfg)  # seed: ok demo CLI, fixed init for reproducibility
-    return TweakLLMEngine(
-        tokenizer=tok, embedder_params=eparams, embedder_cfg=ecfg,
-        big=big, small=small,
-        cache_cfg=CacheConfig(capacity=capacity, dim=ecfg.d_model,
-                              policy=policy, lookup_impl=lookup_impl,
-                              index=index, nclusters=nclusters,
-                              nprobe=nprobe),
-        router_cfg=RouterConfig(tweak_threshold=threshold))
+    cache_cfg = CacheConfig(capacity=capacity, dim=ecfg.d_model,
+                            policy=policy, lookup_impl=lookup_impl,
+                            index=index, nclusters=nclusters, nprobe=nprobe)
+    return dict(tokenizer=tok, embedder_params=eparams, embedder_cfg=ecfg,
+                big=big, small=small, cache_cfg=cache_cfg,
+                router_cfg=RouterConfig(tweak_threshold=threshold))
+
+
+def build_engine(**kw):
+    return TweakLLMEngine(**build_stack(**kw))
+
+
+def build_replica_group(n: int, *, shared: bool = True,
+                        cache_shards: int = 0, **kw) -> ReplicaGroup:
+    """``n`` replicas over one shared bank (model weights replicated —
+    the Generators are shared handles, so compiled functions are too).
+    ``cache_shards > 1`` row-shards the bank over that many devices."""
+    stack = build_stack(**kw)
+    mesh = make_cache_mesh(cache_shards) if cache_shards > 1 else None
+    return ReplicaGroup.build(n, shared=shared, mesh=mesh, **stack)
 
 
 def main():
@@ -78,31 +93,55 @@ def main():
     ap.add_argument("--index", default="flat", choices=["flat", "ivf"],
                     help="cache lookup index (ivf = clustered, DESIGN.md §7)")
     ap.add_argument("--embedder-steps", type=int, default=60)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas over ONE shared cache bank "
+                         "(DESIGN.md §12)")
+    ap.add_argument("--cache-shards", type=int, default=0,
+                    help="row-shard the shared bank over this many devices "
+                         "(needs forced host devices on CPU; 0 = local)")
+    ap.add_argument("--private-caches", action="store_true",
+                    help="give each replica a private bank (the degraded "
+                         "baseline the replica bench compares against)")
     args = ap.parse_args()
 
     print("building TweakLLM stack (training embedder contrastively)...")
-    eng = build_engine(threshold=args.threshold, policy=args.policy,
-                       index=args.index,
-                       train_embedder_steps=args.embedder_steps)
+    kw = dict(threshold=args.threshold, policy=args.policy, index=args.index,
+              train_embedder_steps=args.embedder_steps)
+    scfg = SchedulerConfig(max_wait=args.max_wait, max_batch=args.batch,
+                           max_new_tokens=8)
+    if args.replicas > 1 or args.cache_shards > 1:
+        group = build_replica_group(args.replicas,
+                                    shared=not args.private_caches,
+                                    cache_shards=args.cache_shards, **kw)
+        sched = ReplicaScheduler(group.engines, scfg, clock=SimClock())
+        stats_src = group
+    else:
+        eng = build_engine(**kw)
+        sched = Scheduler(eng, scfg, clock=SimClock())
+        stats_src = eng
     wl = WorkloadGenerator(profile=args.profile, seed=0)  # seed: ok demo CLI, reproducible trace
     texts = [q.text for q in wl.sample(args.queries)]
     trace = poisson_trace(texts, args.rate, seed=0)  # seed: ok demo CLI, reproducible trace
-    sched = Scheduler(
-        eng, SchedulerConfig(max_wait=args.max_wait, max_batch=args.batch,
-                             max_new_tokens=8),
-        clock=SimClock())
     t0 = time.time()
     done = replay_trace(sched, trace)
     dt = time.time() - t0
     # shedding (QueueFull) is a designed outcome under overload, not a bug
     assert len(done) == len(texts) - sched.stats.rejected
 
-    s, ss = eng.stats, sched.stats
+    s, ss = stats_src.stats, sched.stats
     print(f"\n== TweakLLM serving report ({args.profile} profile) ==")
     print(f"requests: {ss.completed}  ({dt/max(ss.completed,1)*1e3:.1f} "
           f"ms/request wall on CPU)")
     print(f"scheduler: batches={ss.batches} mean_batch={ss.mean_batch:.1f} "
           f"dedup_joined={ss.joined} rejected={ss.rejected}")
+    if args.replicas > 1:
+        lanes = " ".join(
+            f"r{i}:{lane.dispatched}d/{lane.batches}b+{lane.stolen_in}st"
+            for i, lane in enumerate(sched.lanes))
+        print(f"replicas: {args.replicas} "
+              f"({'shared' if not args.private_caches else 'private'} bank, "
+              f"shards={max(args.cache_shards, 1)}) {lanes} "
+              f"stolen={ss.stolen}")
     print(f"routing: miss={s.miss} tweak={s.tweak} exact={s.exact} "
           f"hit_rate={s.hit_rate:.2%} (+{ss.joined} joined in flight)")
     print(f"tokens:  big={s.big_tokens} small={s.small_tokens}")

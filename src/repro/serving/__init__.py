@@ -2,8 +2,8 @@ from .sampler import SamplerConfig, sample
 from .generate import GenerateConfig, Generator, PrefixCache
 from .batcher import pad_to_buckets, bucket_batch, bucket_len, floor_len_bucket
 from .scheduler import (Clock, SimClock, WallClock, QueueFull, Request,
-                        Scheduler, SchedulerConfig, SchedulerStats,
-                        poisson_trace, replay_trace)
+                        ReplicaScheduler, Scheduler, SchedulerConfig,
+                        SchedulerStats, poisson_trace, replay_trace)
 from .paged_kv import (PagePool, PagePoolConfig, PagePoolExhausted,
                        PinnedPrefix)
-from .continuous import DecodeSession, FinishedRow, NoFreeSlots
+from .continuous import DecodeSession, FinishedRow, NoFreeSlots, leaked_pages

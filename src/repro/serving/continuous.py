@@ -381,3 +381,21 @@ class DecodeSession:
             self.run_chunk(steps, fused=fused)
             out.extend(self.harvest())
         return out
+
+
+def leaked_pages(*generators) -> int:
+    """Total leaked (live minus pinned) KV pages across paged generators.
+
+    A replica's page accounting must return to zero once every in-flight
+    request is harvested (DESIGN.md §11/§12): ``live_pages`` counts refs
+    the pool still holds, ``pinned_pages`` the deliberately persistent
+    shared-prefix pins.  Dense (non-paged) generators have no pool and
+    contribute nothing.  Deduplicates repeated generator objects so a
+    big/small pair sharing one Generator is not double-counted.
+    """
+    total = 0
+    for gen in {id(g): g for g in generators}.values():
+        pool = getattr(gen, "pool", None)
+        if pool is not None:
+            total += pool.live_pages - pool.pinned_pages
+    return total

@@ -106,6 +106,10 @@ class SchedulerConfig:
     # decode together and one finishing does not stall the rest.
     continuous: bool = False
     slots: int = 8
+    # ReplicaScheduler only: let an idle replica steal queued groups from
+    # a backed-up one (DESIGN.md §12).  Ignored by the single-lane
+    # Scheduler.
+    steal: bool = True
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -147,6 +151,7 @@ class SchedulerStats:
     joined: int = 0               # dedup-coalesced copies (N-1 per group)
     batches: int = 0              # engine dispatches
     dispatched: int = 0           # unique queries sent to the engine
+    stolen: int = 0               # groups moved between replica lanes
     big_tokens: int = 0
     small_tokens: int = 0
     busy_time: float = 0.0        # modeled engine-busy simulated seconds
@@ -290,6 +295,233 @@ class Scheduler:
         result = self.engine.handle_batch_result(
             texts, max_new_tokens=self.cfg.max_new_tokens)
         del self._groups[:len(texts)]
+        if self.cfg.dedup:
+            for t in texts:
+                self._by_text.pop(t, None)
+        return result
+
+    def _complete(self, groups, result, finish: float) -> None:
+        self.stats.batches += 1
+        self.stats.dispatched += len(groups)
+        self.stats.big_tokens += result.big_tokens
+        self.stats.small_tokens += result.small_tokens
+        for group, resp, meta in zip(groups, result.responses, result.meta):
+            for j, req in enumerate(group):
+                req.response = resp
+                req.meta = dict(meta)
+                req.joined = j > 0
+                req.finish = finish
+                self.stats.completed += 1
+                self.stats.joined += int(j > 0)
+                lat = finish - req.arrival
+                self.stats.latency_sum += lat
+                self.stats.latency_max = max(self.stats.latency_max, lat)
+                self._completed.append(req)
+        self._n_pending -= sum(len(g) for g in groups)
+
+
+# ------------------------------------------------------------ replicas
+@dataclasses.dataclass
+class _Lane:
+    """One replica's dispatch state: its queue and busy horizons.
+
+    Mirrors the single-lane Scheduler's fields — ``groups`` is the FIFO of
+    dedup groups assigned to this replica, ``busy_until`` the barrier-mode
+    horizon, ``slot_free`` the continuous-mode per-slot horizons (the PR 7
+    slot accounting, now PER REPLICA: each replica owns one DecodeSession's
+    worth of persistent decode slots).
+    """
+    engine: object
+    groups: List[List[Request]] = dataclasses.field(default_factory=list)
+    busy_until: float = 0.0
+    slot_free: List[float] = dataclasses.field(default_factory=list)
+    dispatched: int = 0
+    batches: int = 0
+    stolen_in: int = 0
+
+
+class ReplicaScheduler:
+    """Replica-aware frontend: N engines, one submit surface (DESIGN.md §12).
+
+    Same ``submit`` / ``poll`` / ``flush`` / ``next_wakeup`` protocol as
+    :class:`Scheduler` (``replay_trace`` drives either), with three
+    replica-level mechanisms:
+
+    * **Least-loaded dispatch** — a new group lands on the lane with the
+      shortest queue, ties broken by the earlier free horizon, then lane
+      index (deterministic under SimClock).
+    * **Global dedup** — the dedup map spans lanes: N concurrent copies of
+      one text join one group on ONE lane, so the whole fleet still runs
+      exactly one generation per unique in-flight query.  With a shared
+      cache bank the single MISS commit then serves every replica.
+    * **Work stealing** — at each poll, a replica that is idle with an
+      empty queue takes the newest half of the backlog a busy lane cannot
+      dispatch right now (``cfg.steal``).  Least-loaded admission keeps
+      queues balanced in steady state; stealing is the safety net when
+      they drift (a replica stalls, heterogeneous service times).
+
+    Backpressure (``queue_capacity``) and ``stats`` are fleet-global;
+    per-lane counters live on ``lanes[i]``.
+    """
+
+    def __init__(self, engines, cfg: Optional[SchedulerConfig] = None, *,
+                 clock: Optional[Clock] = None,
+                 service_model: Optional[Callable[[int], float]] = None):
+        if not engines:
+            raise ValueError("ReplicaScheduler needs at least one engine")
+        self.cfg = cfg if cfg is not None else SchedulerConfig()
+        self.clock = clock if clock is not None else WallClock()
+        self.service_model = service_model
+        self.stats = SchedulerStats()
+        self.lanes = [_Lane(engine=e, slot_free=[0.0] * self.cfg.slots)
+                      for e in engines]
+        self._by_text: Dict[str, List[Request]] = {}
+        self._completed: List[Request] = []
+        self._n_pending = 0
+        self._rid = itertools.count()
+
+    @property
+    def engines(self) -> List[object]:
+        return [lane.engine for lane in self.lanes]
+
+    @property
+    def pending(self) -> int:
+        return self._n_pending
+
+    # -------------------------------------------------------- admission
+    def _free_at(self, lane: _Lane) -> float:
+        return min(lane.slot_free) if self.cfg.continuous else lane.busy_until
+
+    def submit(self, text: str) -> Request:
+        """Admit one request at ``clock.now()``; raises QueueFull."""
+        if self._n_pending >= self.cfg.queue_capacity:
+            self.stats.rejected += 1
+            raise QueueFull(
+                f"request queue at capacity ({self.cfg.queue_capacity})")
+        req = Request(next(self._rid), text, self.clock.now())
+        self.stats.submitted += 1
+        group = self._by_text.get(text) if self.cfg.dedup else None
+        if group is not None:
+            group.append(req)           # joins its group's lane, wherever
+        else:
+            group = [req]
+            lane = min(self.lanes,
+                       key=lambda l: (len(l.groups), self._free_at(l)))
+            lane.groups.append(group)
+            if self.cfg.dedup:
+                self._by_text[text] = group
+        self._n_pending += 1
+        return req
+
+    # --------------------------------------------------------- dispatch
+    def _lane_wakeup(self, lane: _Lane) -> Optional[float]:
+        if not lane.groups:
+            return None
+        t = lane.groups[0][0].arrival
+        if self.cfg.continuous:
+            return max(t, min(lane.slot_free))
+        if len(lane.groups) < self.cfg.max_batch:
+            t += self.cfg.max_wait
+        return max(t, lane.busy_until)
+
+    def next_wakeup(self) -> Optional[float]:
+        """Earliest time any lane would dispatch; None when all idle."""
+        wakeups = [w for w in (self._lane_wakeup(lane) for lane in self.lanes)
+                   if w is not None]
+        return min(wakeups) if wakeups else None
+
+    def _steal(self, now: float) -> None:
+        """Rebalance: idle-empty lanes take backlog busy lanes can't serve.
+
+        A donor's *surplus* is whatever its queue holds beyond what it can
+        dispatch at ``now`` (nothing while busy; one batch / its free slots
+        when free).  The thief takes the newest ceil(surplus/2) groups —
+        the donor keeps its oldest, deadline-closest work.
+        """
+        if not self.cfg.steal or len(self.lanes) < 2:
+            return
+        for thief in self.lanes:
+            if thief.groups or self._free_at(thief) > now:
+                continue
+            donor = max(self.lanes, key=lambda l: len(l.groups))
+            if donor is thief:
+                continue
+            surplus = len(donor.groups)
+            if self._free_at(donor) <= now:
+                if self.cfg.continuous:
+                    cap = sum(t <= now for t in donor.slot_free)
+                else:
+                    cap = self.cfg.max_batch
+                surplus -= min(cap, self.cfg.max_batch)
+            if surplus <= 0:
+                continue
+            take = surplus - surplus // 2
+            moved = donor.groups[-take:]
+            del donor.groups[-take:]
+            # dedup-map entries follow their group objects; only lane
+            # ownership moves
+            thief.groups.extend(moved)
+            thief.stolen_in += len(moved)
+            self.stats.stolen += len(moved)
+
+    def poll(self) -> List[Request]:
+        """Dispatch every due lane at ``clock.now()`` (earliest-wakeup
+        first); returns completions parked so far."""
+        while True:
+            now = self.clock.now()
+            self._steal(now)
+            due = [(w, i) for i, lane in enumerate(self.lanes)
+                   if (w := self._lane_wakeup(lane)) is not None and w <= now]
+            if not due:
+                out, self._completed = self._completed, []
+                return out
+            self._dispatch(self.lanes[min(due)[1]])
+
+    def flush(self) -> List[Request]:
+        """Drain every lane now, ignoring deadlines (end-of-stream)."""
+        while True:
+            served = False
+            for lane in self.lanes:
+                if lane.groups:
+                    self._dispatch(lane)
+                    served = True
+            if not served:
+                break
+        out, self._completed = self._completed, []
+        return out
+
+    def _dispatch(self, lane: _Lane) -> None:
+        if self.cfg.continuous:
+            start = max(self.clock.now(), min(lane.slot_free))
+            free = [i for i, t in enumerate(lane.slot_free) if t <= start]
+            take = min(len(lane.groups), len(free), self.cfg.max_batch)
+            groups = lane.groups[:take]
+            result = self._serve(lane, [g[0].text for g in groups])
+            service = (self.service_model(self.cfg.slots) / self.cfg.slots
+                       if self.service_model else 0.0)
+            finish = start + service
+            for i in free[:take]:
+                lane.slot_free[i] = finish
+            self.stats.busy_time += service * take
+        else:
+            take = min(len(lane.groups), self.cfg.max_batch)
+            groups = lane.groups[:take]
+            result = self._serve(lane, [g[0].text for g in groups])
+            start = max(self.clock.now(), lane.busy_until)
+            service = self.service_model(take) if self.service_model else 0.0
+            finish = start + service
+            lane.busy_until = finish
+            self.stats.busy_time += service
+        lane.dispatched += len(groups)
+        lane.batches += 1
+        self._complete(groups, result, finish)
+
+    def _serve(self, lane: _Lane, texts: List[str]):
+        # engine first, queue mutation after — same crash discipline as
+        # the single-lane Scheduler
+        result = lane.engine.handle_batch_result(
+            texts, max_new_tokens=self.cfg.max_new_tokens)
+        del lane.groups[:len(texts)]
         if self.cfg.dedup:
             for t in texts:
                 self._by_text.pop(t, None)

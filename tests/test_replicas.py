@@ -1,0 +1,326 @@
+"""Multi-replica serving semantics (DESIGN.md §12), under SimClock.
+
+The acceptance properties:
+  (a) a trace replayed through 2 and 4 replicas yields responses AND
+      aggregated EngineStats byte-identical to the single-engine serial
+      replay (exact-or-miss routing, same visibility ordering),
+  (b) a shared-bank write from one replica is an EXACT hit on another
+      replica's very next lookup; private banks deliberately are not,
+  (c) zero leaked KV pages per replica once every request is harvested,
+  (d) replica-level scheduling: least-loaded dispatch, global dedup
+      (one generation per unique in-flight text, fleet-wide), and work
+      stealing rebalances drifted queues.
+
+Everything runs in-process on however many devices exist; the sharded-bank
+test needs >= 4 and is exercised by ``make test-multidevice``
+(XLA_FLAGS=--xla_force_host_platform_device_count=8).
+"""
+import jax
+import pytest
+
+from repro.core import CacheConfig, ReplicaGroup, RouterConfig
+from repro.core.engine import SharedCacheBank, TweakLLMEngine
+from repro.models import ModelConfig, build_model
+from repro.models.embedder import init_embedder, tiny_embedder_config
+from repro.serving import (GenerateConfig, Generator, ReplicaScheduler,
+                           SamplerConfig, Scheduler, SchedulerConfig,
+                           SimClock, leaked_pages, replay_trace)
+from repro.tokenizer import HashWordTokenizer
+
+VOCAB = 4096
+EXACT_OR_MISS = {"tweak_threshold": 0.9999}
+
+
+@pytest.fixture(scope="module")
+def stack():
+    tok = HashWordTokenizer(VOCAB)
+    ecfg = tiny_embedder_config(VOCAB)
+    eparams = init_embedder(jax.random.PRNGKey(0), ecfg)
+    lm = ModelConfig(num_layers=1, d_model=32, num_heads=2, num_kv_heads=1,
+                     d_ff=64, vocab_size=VOCAB, max_seq_len=512,
+                     dtype="float32")
+    gc = GenerateConfig(max_new_tokens=4,
+                        sampler=SamplerConfig(vocab_size=VOCAB))
+    big_m = build_model(lm)
+    small_m = build_model(lm)
+    big = Generator(big_m, big_m.init(jax.random.PRNGKey(1)), gc)
+    small = Generator(small_m, small_m.init(jax.random.PRNGKey(2)), gc)
+    return tok, ecfg, eparams, big, small
+
+
+def _cache_cfg(ecfg):
+    return CacheConfig(capacity=128, dim=ecfg.d_model, topk=4)
+
+
+def _group(stack, n, *, shared=True, mesh=None, router_kw=None):
+    tok, ecfg, eparams, big, small = stack
+    return ReplicaGroup.build(
+        n, tokenizer=tok, embedder_params=eparams, embedder_cfg=ecfg,
+        big=big, small=small, cache_cfg=_cache_cfg(ecfg),
+        router_cfg=RouterConfig(**(router_kw or EXACT_OR_MISS)),
+        shared=shared, mesh=mesh)
+
+
+def _serial(stack, texts, router_kw=None):
+    """Reference: ONE engine, one handle_batch call per request in order."""
+    tok, ecfg, eparams, big, small = stack
+    eng = TweakLLMEngine(
+        tokenizer=tok, embedder_params=eparams, embedder_cfg=ecfg,
+        big=big, small=small, cache_cfg=_cache_cfg(ecfg),
+        router_cfg=RouterConfig(**(router_kw or EXACT_OR_MISS)))
+    return [eng.handle_batch([t], max_new_tokens=4)[0] for t in texts], eng
+
+
+# ---------------------------------------------- (b) cross-replica cache
+def test_shared_bank_write_visible_across_replicas(stack):
+    group = _group(stack, 2)
+    r0, r1 = group.engines
+    text = "a question first answered by replica zero"
+    a = r0.handle_batch([text], max_new_tokens=4)
+    b = r1.handle_batch([text], max_new_tokens=4)
+    assert a == b
+    assert (r0.stats.miss, r0.stats.exact) == (1, 0)
+    assert (r1.stats.miss, r1.stats.exact) == (0, 1)   # hit A's write
+    agg = group.stats
+    assert (agg.total, agg.miss, agg.exact) == (2, 1, 1)
+    assert group.shared and group.bank is r0.bank
+
+
+def test_private_banks_do_not_share(stack):
+    group = _group(stack, 2, shared=False)
+    r0, r1 = group.engines
+    text = "a question each private replica answers alone"
+    a = r0.handle_batch([text], max_new_tokens=4)
+    b = r1.handle_batch([text], max_new_tokens=4)
+    assert a == b                        # same weights -> same generation
+    assert r0.stats.miss == 1 and r1.stats.miss == 1   # both missed
+    assert not group.shared
+    with pytest.raises(ValueError, match="private banks"):
+        _ = group.bank
+
+
+def test_engine_rejects_mismatched_bank_config(stack):
+    tok, ecfg, eparams, big, small = stack
+    bank = SharedCacheBank(_cache_cfg(ecfg))
+    with pytest.raises(ValueError, match="disagrees"):
+        TweakLLMEngine(
+            tokenizer=tok, embedder_params=eparams, embedder_cfg=ecfg,
+            big=big, small=small, bank=bank,
+            cache_cfg=CacheConfig(capacity=64, dim=ecfg.d_model))
+
+
+# ------------------------------------------- (a) serial byte-identity
+def _replica_trace():
+    """8 distinct texts, then spaced repeats of the first 4: every repeat
+    arrives after its original's dispatch completed, so cache visibility
+    ordering matches the serial replay exactly."""
+    texts = [f"replica trace question {i} about topic {i}" for i in range(8)]
+    trace = [(0.01 * i, t) for i, t in enumerate(texts)]
+    trace += [(1.0 + 0.3 * j, texts[j]) for j in range(4)]
+    return trace
+
+
+@pytest.mark.parametrize("n", [2, 4])
+def test_replica_churn_byte_identical_to_serial(stack, n):
+    """The satellite contract: responses AND aggregated EngineStats from an
+    n-replica shared-bank replay are byte-identical to the single-engine
+    serial replay under exact-or-miss routing."""
+    trace = _replica_trace()
+    group = _group(stack, n)
+    sched = ReplicaScheduler(group.engines,
+                             SchedulerConfig(max_wait=0.05, max_batch=4,
+                                             max_new_tokens=4),
+                             clock=SimClock())
+    done = sorted(replay_trace(sched, trace), key=lambda r: r.rid)
+    seq, ref = _serial(stack, [t for _, t in trace])
+    assert [r.response for r in done] == seq           # byte-identical
+    assert group.stats == ref.stats                    # byte-identical
+    assert group.stats.miss == 8 and group.stats.exact == 4
+    assert sched.stats.completed == len(trace) and sched.stats.rejected == 0
+    # the fleet actually fanned out: more than one lane served traffic
+    assert sum(lane.dispatched > 0 for lane in sched.lanes) > 1
+
+
+def test_single_replica_matches_single_lane_scheduler(stack):
+    """ReplicaScheduler with one engine degenerates to Scheduler exactly."""
+    trace = _replica_trace()
+    cfg = SchedulerConfig(max_wait=0.05, max_batch=4, max_new_tokens=4)
+    group = _group(stack, 1)
+    rs = ReplicaScheduler(group.engines, cfg, clock=SimClock())
+    done_r = sorted(replay_trace(rs, trace), key=lambda r: r.rid)
+    eng = _group(stack, 1).engines[0]
+    ss = Scheduler(eng, cfg, clock=SimClock())
+    done_s = sorted(replay_trace(ss, trace), key=lambda r: r.rid)
+    assert [r.response for r in done_r] == [r.response for r in done_s]
+    assert group.stats == eng.stats
+    assert rs.stats.batches == ss.stats.batches
+    assert [r.finish for r in done_r] == [r.finish for r in done_s]
+
+
+# ------------------------------------------------- (c) page accounting
+@pytest.fixture(scope="module")
+def paged_parts():
+    """Model + params for building PER-REPLICA paged generators: each
+    replica owns its own KV page pool (the per-replica accounting the
+    leak test isolates), over identical weights."""
+    lm = ModelConfig(num_layers=1, d_model=32, num_heads=2, num_kv_heads=1,
+                     d_ff=64, vocab_size=VOCAB, max_seq_len=512,
+                     dtype="float32", attention_impl="xla_flash",
+                     flash_block_q=16, flash_block_k=16)
+    gc = GenerateConfig(max_new_tokens=4,
+                        sampler=SamplerConfig(vocab_size=VOCAB),
+                        paged=True, page_size=8, pool_pages=256)
+    big_m = build_model(lm)
+    small_m = build_model(lm)
+    return (big_m, big_m.init(jax.random.PRNGKey(1)),
+            small_m, small_m.init(jax.random.PRNGKey(2)), gc)
+
+
+def test_zero_leaked_kv_pages_per_replica(stack, paged_parts):
+    tok, ecfg, eparams, _, _ = stack
+    big_m, big_p, small_m, small_p, gc = paged_parts
+    group = ReplicaGroup.build(
+        2, tokenizer=tok, embedder_params=eparams, embedder_cfg=ecfg,
+        big=lambda rid: Generator(big_m, big_p, gc),
+        small=lambda rid: Generator(small_m, small_p, gc),
+        cache_cfg=_cache_cfg(ecfg), router_cfg=RouterConfig(**EXACT_OR_MISS))
+    bigs = {id(e.big) for e in group.engines}
+    assert len(bigs) == 2                # truly per-replica pools
+    sched = ReplicaScheduler(group.engines,
+                             SchedulerConfig(max_wait=0.02, max_batch=4,
+                                             max_new_tokens=4),
+                             clock=SimClock())
+    trace = [(0.01 * i, f"paged replica query {i} item {i}")
+             for i in range(10)]
+    done = replay_trace(sched, trace)
+    assert len(done) == 10
+    assert group.leaked_kv_pages() == [0, 0]
+    assert leaked_pages(*(e.big for e in group.engines),
+                        *(e.small for e in group.engines)) == 0
+
+
+# --------------------------------------- (d) replica-level scheduling
+def test_least_loaded_submit_balances_lanes(stack):
+    group = _group(stack, 2)
+    sched = ReplicaScheduler(group.engines,
+                             SchedulerConfig(max_wait=10.0, max_batch=8,
+                                             max_new_tokens=4),
+                             clock=SimClock())
+    for i in range(6):
+        sched.submit(f"balanced submit {i} subject {i}")
+    assert [len(lane.groups) for lane in sched.lanes] == [3, 3]
+
+
+def test_global_dedup_one_generation_fleet_wide(stack):
+    """K copies of one text across a 2-replica fleet: ONE group on ONE
+    lane, one engine dispatch, K-1 joins."""
+    group = _group(stack, 2)
+    sched = ReplicaScheduler(group.engines,
+                             SchedulerConfig(max_wait=1.0, max_batch=8,
+                                             max_new_tokens=4),
+                             clock=SimClock())
+    K = 5
+    reqs = [sched.submit("fleet duplicate question about tides")
+            for _ in range(K)]
+    assert sum(len(lane.groups) for lane in sched.lanes) == 1
+    sched.clock.advance(1.0)
+    done = sched.poll()
+    assert len(done) == K and all(r.done for r in reqs)
+    assert group.stats.total == 1 and group.stats.miss == 1
+    assert sched.stats.joined == K - 1 and sched.stats.dispatched == 1
+    assert len({r.response for r in reqs}) == 1
+
+
+def _drive(sched):
+    """Replay-to-empty: advance the SimClock wakeup-to-wakeup."""
+    done = []
+    while True:
+        w = sched.next_wakeup()
+        if w is None:
+            break
+        sched.clock.advance_to(w)
+        done.extend(sched.poll())
+    return done
+
+
+def _imbalanced_sched(stack, *, steal):
+    """4 groups piled on lane 0, lane 1 idle-empty — the drifted-queue
+    state stealing exists for (least-loaded admission prevents it
+    arising from admission alone; a replica restart or stall does not)."""
+    group = _group(stack, 2)
+    sched = ReplicaScheduler(group.engines,
+                             SchedulerConfig(max_wait=0.0, max_batch=1,
+                                             max_new_tokens=4, steal=steal),
+                             clock=SimClock(),
+                             service_model=lambda b: 1.0)
+    reqs = [sched.submit(f"steal target {i} area {i}") for i in range(4)]
+    l0, l1 = sched.lanes
+    l0.groups += l1.groups               # adversarial drift, by hand
+    l1.groups.clear()
+    return sched, reqs
+
+
+def test_work_stealing_rebalances_drifted_queues(stack):
+    sched, reqs = _imbalanced_sched(stack, steal=True)
+    done = _drive(sched)
+    assert len(done) == 4 and all(r.done for r in reqs)
+    assert sched.stats.stolen == 2       # ceil(surplus/2) of 3 surplus
+    l0, l1 = sched.lanes
+    assert l1.stolen_in == 2 and l1.dispatched == 2 and l0.dispatched == 2
+    # stealing halves the drain time vs the no-steal serial drain
+    assert max(r.finish for r in reqs) == pytest.approx(2.0)
+
+
+def test_steal_disabled_serializes_on_the_donor(stack):
+    sched, reqs = _imbalanced_sched(stack, steal=False)
+    done = _drive(sched)
+    assert len(done) == 4 and all(r.done for r in reqs)
+    assert sched.stats.stolen == 0
+    assert sched.lanes[1].dispatched == 0
+    assert max(r.finish for r in reqs) == pytest.approx(4.0)
+
+
+def test_continuous_mode_per_replica_slot_accounting(stack):
+    """Each lane owns its own slot horizons (the PR 7 accounting, per
+    replica): 2 replicas x 2 slots serve 4 concurrent requests at once."""
+    group = _group(stack, 2)
+    sched = ReplicaScheduler(group.engines,
+                             SchedulerConfig(continuous=True, slots=2,
+                                             max_new_tokens=4),
+                             clock=SimClock(),
+                             service_model=lambda b: 2.0 * b)
+    reqs = [sched.submit(f"continuous replica query {i} item {i}")
+            for i in range(6)]
+    sched.poll()                         # 2 lanes x 2 slots -> 4 in flight
+    per = 2.0 * 2 / 2                    # service_model(slots)/slots
+    assert [r.done for r in reqs] == [True] * 4 + [False] * 2
+    assert all(r.finish == pytest.approx(per) for r in reqs[:4])
+    sched.clock.advance_to(per)
+    sched.poll()
+    assert all(r.finish == pytest.approx(2 * per) for r in reqs[4:])
+
+
+# ------------------------------------------- sharded bank (multidevice)
+def test_sharded_bank_replicas_match_local(stack):
+    """Row-sharded shared bank == local shared bank, end to end: same
+    trace, same responses, same aggregated stats.  Needs >= 4 devices —
+    runs under ``make test-multidevice`` (8 forced host devices)."""
+    if jax.device_count() < 4:
+        pytest.skip("needs >= 4 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=8; "
+                    "run via `make test-multidevice`)")
+    from repro.launch.mesh import make_cache_mesh
+    trace = _replica_trace()
+    cfg = SchedulerConfig(max_wait=0.05, max_batch=4, max_new_tokens=4)
+    local = _group(stack, 2)
+    done_l = sorted(replay_trace(
+        ReplicaScheduler(local.engines, cfg, clock=SimClock()), trace),
+        key=lambda r: r.rid)
+    sharded = _group(stack, 2, mesh=make_cache_mesh(4))
+    assert sharded.bank.sharded
+    done_s = sorted(replay_trace(
+        ReplicaScheduler(sharded.engines, cfg, clock=SimClock()), trace),
+        key=lambda r: r.rid)
+    assert [r.response for r in done_s] == [r.response for r in done_l]
+    assert sharded.stats == local.stats
+    assert sharded.stats.exact == 4      # repeats hit across replicas
