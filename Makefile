@@ -2,7 +2,7 @@
 
 PYTHONPATH_PREFIX := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-sanitize test-multidevice analyze bench bench-scheduler bench-replicas bench-index bench-generate bench-prefill bench-smoke bench-baseline dev-deps lint
+.PHONY: test test-sanitize test-multidevice analyze bench bench-scheduler bench-replicas bench-index bench-generate bench-prefill bench-frontier bench-smoke bench-baseline dev-deps lint
 
 test:
 	$(PYTHONPATH_PREFIX) python -m pytest -x -q
@@ -50,6 +50,11 @@ bench-generate:
 # prefix-KV-reuse + suffix-bucketed vs full-bucket tweak prefill sweep
 bench-prefill:
 	$(PYTHONPATH_PREFIX) python -m benchmarks.run --only prefill --json BENCH_prefill.json
+
+# router cost-quality frontier: single-stage vs cascade operating points
+# (DESIGN.md §13); emits the repo-standard trajectory file
+bench-frontier:
+	$(PYTHONPATH_PREFIX) python -m benchmarks.run --only frontier --json BENCH_frontier.json
 
 # the CI perf gate, runnable locally: scaled-down suites + regression check
 bench-smoke:

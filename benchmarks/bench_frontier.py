@@ -1,0 +1,17 @@
+"""Suite entry point for the router cost-quality frontier (DESIGN.md §13).
+
+The sweep itself lives in ``fig2_precision_recall.run_frontier`` — it
+shares the Fig-2 stream protocol and trained fixtures; this module only
+gives it a suite name (``--only frontier``) and the smoke hook.
+"""
+from __future__ import annotations
+
+from .fig2_precision_recall import frontier_main
+
+
+def main(smoke: bool = False):
+    frontier_main(smoke=smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -37,7 +37,7 @@ import sys
 # leak in), so they get double the tolerance to keep the gate from
 # flaking on runner heterogeneity while still catching real collapses.
 QUALITY_KEYS = ("recall", "band_agree", "decision_agree",
-                "scaling_eff", "hit_ratio")
+                "scaling_eff", "hit_ratio", "frontier_auc")
 RATIO_KEYS = ("speedup",)
 LATENCY_KEYS = ("us_per_call",)
 

@@ -38,6 +38,21 @@ def get_trained_embedder(steps: int = 150):
     return _cache["emb"]
 
 
+def get_trained_reranker(steps: int = 300):
+    """Cross-encoder reranker trained on generated pairs (cascade stage 2,
+    DESIGN.md §13).  The frontier bench shares one training run across
+    operating points; first caller's ``steps`` wins."""
+    if "reranker" not in _cache:
+        from repro.models.reranker import init_reranker, tiny_reranker_config
+        from repro.training.reranker_train import train_reranker
+        cfg = tiny_reranker_config(VOCAB)
+        params = init_reranker(jax.random.PRNGKey(11), cfg)
+        params, _ = train_reranker(params, cfg, get_tokenizer(),
+                                   steps=steps, batch=32, seed=0)
+        _cache["reranker"] = (params, cfg)
+    return _cache["reranker"]
+
+
 def get_judge_lm(steps: int = 120):
     """Tiny reference LM trained on the synthetic corpus (judge model)."""
     if "judge" not in _cache:

@@ -2,6 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV rows:
   fig2_*      precision/recall of GPTCache-style caching   (paper Fig 2)
+  frontier_*  router cost-quality frontier, 1-stage vs cascade (DESIGN.md §13)
   fig3_*      satisfaction per similarity band             (paper Fig 3)
   fig5/6/7_*  LLM-debate verdicts per band + control       (paper Figs 5-7)
   fig89_*     cache-hit distribution + cost analysis       (paper Figs 8-9)
@@ -32,10 +33,10 @@ import sys
 import time
 import traceback
 
-SUITES = ("fig2", "fig34567", "fig89", "microbench", "roofline", "scheduler",
-          "replicas", "index", "generate", "prefill")
+SUITES = ("fig2", "frontier", "fig34567", "fig89", "microbench", "roofline",
+          "scheduler", "replicas", "index", "generate", "prefill")
 SMOKE_SUITES = ("microbench", "index", "scheduler", "replicas", "generate",
-                "prefill")
+                "prefill", "frontier")
 SCHEMA = "tweakllm-bench/v1"
 
 
@@ -70,12 +71,13 @@ def main() -> None:
     default = SMOKE_SUITES if args.smoke else SUITES
     only = tuple(args.only.split(",")) if args.only else default
 
-    from . import (bench_generate, bench_index, bench_prefill,
-                   bench_replicas, bench_scheduler, fig2_precision_recall,
-                   fig34567_quality, fig89_cost_analysis, microbench,
-                   roofline)
+    from . import (bench_frontier, bench_generate, bench_index,
+                   bench_prefill, bench_replicas, bench_scheduler,
+                   fig2_precision_recall, fig34567_quality,
+                   fig89_cost_analysis, microbench, roofline)
     mods = {
         "fig2": fig2_precision_recall,
+        "frontier": bench_frontier,
         "fig34567": fig34567_quality,
         "fig89": fig89_cost_analysis,
         "microbench": microbench,

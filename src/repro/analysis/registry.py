@@ -41,6 +41,7 @@ from typing import Optional, Tuple, Union
 # design (DESIGN.md §5).  Entries ending in "/" are directory prefixes.
 HOT_MODULES: Tuple[str, ...] = (
     "core/cache.py",
+    "core/router.py",
     "core/index.py",
     "core/engine.py",
     "core/distributed.py",
@@ -85,6 +86,11 @@ JIT_REGISTRY: Tuple[JitSite, ...] = (
             note="miss-batch commit; donates the cache state for in-place "
                  "update (DESIGN.md §5) unless the caller opts out "
                  "(contract tests build the no-donate variant on purpose)"),
+    JitSite("core/cache.py", "make_second_stage", donate=None,
+            note="cascade stage 2 (DESIGN.md §13): reranker shortlist "
+                 "scoring + uncertain-row resolution; donates state for "
+                 "in-place touch/admission updates unless the caller opts "
+                 "out (byte-identity tests keep the pre-state alive)"),
     JitSite("core/engine.py", "TweakLLMEngine.__init__",
             note="embedder encode; params/tokens are read-only"),
     JitSite("core/engine.py", "SharedCacheBank.__init__", donate=(0,),
@@ -194,6 +200,9 @@ JIT_REGISTRY: Tuple[JitSite, ...] = (
             note="eval-only loglik scorer"),
     JitSite("training/embedder_train.py", "train_embedder.step",
             note="contrastive embedder training step (offline)"),
+    JitSite("training/reranker_train.py", "train_reranker.step",
+            note="cross-encoder reranker training step (offline; feeds "
+                 "the cascade's second stage, DESIGN.md §13)"),
     JitSite("launch/train.py", "main",
             note="CLI training step; params/opt threaded functionally"),
     JitSite("launch/dryrun.py", "run_one", donate=None, static=None,

@@ -1,9 +1,11 @@
 # TweakLLM core: semantic cache + threshold router + tweak engine.
 from . import cache, index, router, tweak
 from .cache import (CacheConfig, init_cache, insert, insert_batch,
-                    make_insert_batch, lookup, lookup_and_touch, fetch)
+                    make_insert_batch, lookup, lookup_and_touch,
+                    lookup_route_touch, make_second_stage, fetch)
 from .index import build_index, maybe_reindex
-from .router import RouterConfig, route, band_of, MISS, TWEAK, EXACT
+from .router import (RouterConfig, route, route_cascade, threshold_for,
+                     band_of, bands_for, MISS, TWEAK, EXACT, UNCERTAIN)
 from .engine import (TweakLLMEngine, EngineStats, BatchResult,
                      SharedCacheBank, ReplicaGroup)
 from .baseline import GPTCacheBaseline, BaselineConfig

@@ -31,6 +31,12 @@ from . import router as router_lib
 POLICIES = ("fifo", "lru", "lfu")
 INDEXES = ("flat", "ivf")
 
+# admission-control state (IVF caches): per-cluster hit EMA + observation
+# count.  Deliberately NOT part of index.IVF_KEYS — the arrays replicate
+# in the sharded layout (updated identically everywhere from replicated
+# routing results), so the shard-routed insert specs never see them.
+ADM_KEYS = ("adm_ema", "adm_count")
+
 
 @dataclasses.dataclass(frozen=True)
 class CacheConfig:
@@ -70,7 +76,18 @@ def init_cache(cfg: CacheConfig):
     }
     if cfg.index == "ivf":
         state.update(index_lib.init_ivf(cfg))
+        state.update(init_admission(cfg))
     return state
+
+
+def init_admission(cfg: CacheConfig):
+    """Fresh per-cluster admission state: optimistic (every cluster admits
+    until ``admit_min`` observations say otherwise)."""
+    p = index_lib.resolve(cfg)
+    return {
+        "adm_ema": jnp.ones((p.nclusters,), jnp.float32),
+        "adm_count": jnp.zeros((p.nclusters,), jnp.int32),
+    }
 
 
 def _victim_slot(state, cfg: CacheConfig):
@@ -274,6 +291,121 @@ def lookup_and_touch(state, cfg: CacheConfig,
     new["hits"] = state["hits"].at[w].add(1, mode="drop")
     new["clock"] = state["clock"] + 1
     return new, scores, idx, decisions
+
+
+def route_touch_core(state, cfg: CacheConfig, router_cfg, q_embs, scores,
+                     idx, cost):
+    """Post-lookup stage-1 core, shared by the local and sharded fused
+    paths (so their routing/accounting semantics cannot drift).
+
+    Routes the merged top-k through the calibrated cascade
+    (``router.route_cascade`` at the per-row operating points), touches
+    only rows COMMITTED as hits (UNCERTAIN rows wait for stage 2), and —
+    for IVF caches — reads the per-cluster admission flag and folds the
+    batch's certain outcomes into the admission EMA.
+
+    Returns ``(new_state, decisions, tau, cluster, admit)``.
+    """
+    tau = router_lib.threshold_for(cost, router_cfg)
+    decisions = router_lib.route_cascade(scores[:, 0], tau, router_cfg)
+    top1 = idx[:, 0]
+    hit = ((decisions == router_lib.TWEAK)
+           | (decisions == router_lib.EXACT)) & (top1 >= 0)
+    w = jnp.where(hit, top1, cfg.capacity)  # OOB -> dropped for misses
+    new = dict(state)
+    new["last_used"] = state["last_used"].at[w].set(state["clock"],
+                                                    mode="drop")
+    new["hits"] = state["hits"].at[w].add(1, mode="drop")
+    new["clock"] = state["clock"] + 1
+    b = scores.shape[0]
+    if cfg.index == "ivf":
+        # centroids are replicated in the sharded layout, so the cluster
+        # ids (and everything downstream) agree between sharded and local
+        # routing.  A cold index (zero centroids) files everything under
+        # cluster 0 — harmless: the EMA starts optimistic.
+        cluster = index_lib.nearest_clusters(state["ivf_centroids"], q_embs)
+        admit = router_lib.admission_admit(
+            state["adm_ema"], state["adm_count"], cluster, router_cfg)
+        certain = decisions != router_lib.UNCERTAIN
+        ema, cnt = router_lib.admission_update(
+            state["adm_ema"], state["adm_count"], cluster, hit, certain,
+            router_cfg)
+        new["adm_ema"], new["adm_count"] = ema, cnt
+    else:
+        cluster = jnp.full((b,), -1, jnp.int32)
+        admit = jnp.ones((b,), bool)
+    return new, decisions, tau, cluster, admit
+
+
+def lookup_route_touch(state, cfg: CacheConfig, router_cfg, q_embs, cost):
+    """Fused stage-1 of the calibrated cascade (one device round-trip).
+
+    Like :func:`lookup_and_touch`, plus: per-request ``cost`` (B,) picks
+    each row's operating point, rows near the boundary come back
+    ``router.UNCERTAIN`` (untouched — stage 2 commits them), and IVF
+    caches surface the query's cluster id and admission flag.
+
+    Returns ``(new_state, scores (B,k), indices (B,k), decisions (B,),
+    tau (B,), cluster (B,), admit (B,) bool)``.
+    """
+    scores, idx = lookup(state, cfg, q_embs)
+    new, decisions, tau, cluster, admit = route_touch_core(
+        state, cfg, router_cfg, q_embs, scores, idx, cost)
+    return new, scores, idx, decisions, tau, cluster, admit
+
+
+def make_second_stage(cfg: CacheConfig, router_cfg, rr_params, rr_cfg,
+                      donate: bool = True):
+    """Builds the jitted stage-2 resolver for UNCERTAIN rows.
+
+    ``(state, q_tokens, q_mask, scores, idx, decisions, tau, cluster) ->
+    (new_state, final_decisions, slot (B,), conf (B,))``
+
+    Gathers the shortlist candidates' cached query tokens, scores them
+    with the cross-encoder reranker against the live query, and combines
+    reranker evidence with multi-probe top-k agreement
+    (``router.stage2_combine``) to commit TWEAK or MISS.  The serving
+    ``slot`` for committed rows is the RERANKER argmax candidate, not
+    necessarily the top-1 cosine neighbour — the misroute recovery.
+    Committed rows are touched here (stage 1 skipped them; the clock
+    ticks once more for the batch) and uncertain outcomes fold into the
+    admission EMA.  Works unchanged on sharded states: the token gather
+    and touch scatters run in the GSPMD region with replicated indices.
+    """
+    from repro.models import reranker as rr_lib
+
+    def second_stage(state, q_tokens, q_mask, scores, idx, decisions, tau,
+                     cluster):
+        live = idx >= 0
+        safe = jnp.clip(idx, 0, cfg.capacity - 1)
+        cand_t = jnp.take(state["q_tokens"], safe, axis=0)   # (B, K, S)
+        cand_m = jnp.take(state["q_mask"], safe, axis=0) \
+            * live[..., None].astype(state["q_mask"].dtype)
+        rr = rr_lib.score_shortlist(rr_params, q_tokens, q_mask,
+                                    cand_t, cand_m, rr_cfg)
+        commit, best, conf = router_lib.stage2_combine(
+            scores, rr, live, tau, router_cfg)
+        unc = decisions == router_lib.UNCERTAIN
+        final = jnp.where(
+            unc, jnp.where(commit, router_lib.TWEAK, router_lib.MISS),
+            decisions).astype(jnp.int32)
+        chosen = jnp.take_along_axis(idx, best[:, None], axis=1)[:, 0]
+        slot = jnp.where(unc & commit, chosen, idx[:, 0])
+        touch = unc & commit & (slot >= 0)
+        w = jnp.where(touch, slot, cfg.capacity)
+        new = dict(state)
+        new["last_used"] = state["last_used"].at[w].set(state["clock"],
+                                                        mode="drop")
+        new["hits"] = state["hits"].at[w].add(1, mode="drop")
+        new["clock"] = state["clock"] + 1
+        if cfg.index == "ivf":
+            ema, cnt = router_lib.admission_update(
+                state["adm_ema"], state["adm_count"], cluster, commit, unc,
+                router_cfg)
+            new["adm_ema"], new["adm_count"] = ema, cnt
+        return new, final, slot, conf
+
+    return jax.jit(second_stage, donate_argnums=(0,) if donate else ())
 
 
 def fetch(state, indices):

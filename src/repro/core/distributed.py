@@ -198,34 +198,32 @@ def make_distributed_ivf_lookup(mesh: Mesh, cfg: cache_lib.CacheConfig,
 
 def make_distributed_lookup_and_touch(mesh: Mesh, cfg: cache_lib.CacheConfig,
                                       router_cfg, axis: str = "data"):
-    """Sharded analogue of :func:`repro.core.cache.lookup_and_touch`.
+    """Sharded analogue of :func:`repro.core.cache.lookup_route_touch`.
 
     One jitted device call per serve batch, exactly like the local fused
     path (DESIGN.md §5): the shard-mapped scan (flat or IVF per
     ``cfg.index``) merges per-shard winners to a replicated global top-k,
-    the router bands the top-1 scores, and the hit-accounting scatter
-    (``last_used``/``hits``/``clock``) lands on the row-sharded arrays
-    with replicated indices — GSPMD routes each update to the owning
-    shard, so replicas sharing the bank pay no extra collectives for
-    touch bookkeeping.  State is donated for in-place update.
+    and everything downstream — the calibrated cascade routing, the
+    hit-accounting scatter, and the admission EMA — is the SAME
+    ``cache.route_touch_core`` the local path runs, applied AFTER the
+    all_gather merge on replicated (B, k) winners.  That ordering is what
+    keeps sharded and local routing decision-identical: the cascade only
+    ever sees the merged global shortlist, never per-shard partial top-k
+    (stage 2 likewise runs post-merge, see ``SharedCacheBank``).  The
+    touch scatters land on the row-sharded arrays with replicated indices
+    — GSPMD routes each update to the owning shard — while the admission
+    arrays replicate (identical update everywhere).  State is donated for
+    in-place update.
     """
     ivf = cfg.index == "ivf"
     sm = (_ivf_shard_lookup if ivf else _flat_shard_lookup)(mesh, cfg, axis)
 
     @functools.partial(jax.jit, donate_argnums=(0,))
-    def lookup_touch(state, q_embs):
+    def lookup_touch(state, q_embs, cost):
         scores, idx = _sharded_lookup_call(sm, state, q_embs, ivf=ivf)
-        decisions = router_lib.route(scores[:, 0], router_cfg)
-        top1 = idx[:, 0]
-        hit = (decisions != router_lib.MISS) & (top1 >= 0)
-        # misses scatter out of bounds and drop, mirroring cache.touch
-        w = jnp.where(hit, top1, cfg.capacity)
-        new = dict(state)
-        new["last_used"] = state["last_used"].at[w].set(state["clock"],
-                                                        mode="drop")
-        new["hits"] = state["hits"].at[w].add(1, mode="drop")
-        new["clock"] = state["clock"] + 1
-        return new, scores, idx, decisions
+        new, decisions, tau, cluster, admit = cache_lib.route_touch_core(
+            state, cfg, router_cfg, q_embs, scores, idx, cost)
+        return new, scores, idx, decisions, tau, cluster, admit
 
     return lookup_touch
 

@@ -57,6 +57,12 @@ class EngineStats:
     miss: int = 0
     tweak: int = 0
     exact: int = 0
+    # calibrated-cascade counters (DESIGN.md §13): rows that entered the
+    # stage-2 uncertainty band, how many of those committed as TWEAK
+    # (recovered hits), and inserts suppressed by cluster admission.
+    uncertain: int = 0
+    recovered: int = 0
+    suppressed_inserts: int = 0
     big_tokens: int = 0             # REAL generated tokens, Big LLM
     small_tokens: int = 0           # REAL generated tokens, Small LLM
     # The paper's §5.2.3 cost analysis bills INPUT tokens too.  Prompt
@@ -108,7 +114,8 @@ class EngineStats:
         big_rate, small_rate = rates.pop()
         out = cls(big_cost_per_token=big_rate,
                   small_cost_per_token=small_rate)
-        for f in ("total", "miss", "tweak", "exact", "big_tokens",
+        for f in ("total", "miss", "tweak", "exact", "uncertain",
+                  "recovered", "suppressed_inserts", "big_tokens",
                   "small_tokens", "big_prompt_tokens", "small_prompt_tokens",
                   "baseline_prompt_tokens"):
             setattr(out, f, sum(getattr(p, f) for p in parts))
@@ -155,9 +162,13 @@ class SharedCacheBank:
 
     def __init__(self, cache_cfg: cache_lib.CacheConfig,
                  router_cfg: Optional[router_lib.RouterConfig] = None, *,
-                 mesh=None, axis: str = "data", state=None):
+                 mesh=None, axis: str = "data", state=None, reranker=None):
         if router_cfg is None:
             router_cfg = router_lib.RouterConfig()
+        if router_cfg.band > 0.0 and reranker is None:
+            raise ValueError(
+                "router band > 0 enables the stage-2 cascade, which needs "
+                "reranker=(params, model_cfg) on the bank")
         self.cfg = cache_cfg
         self.router_cfg = router_cfg
         self.mesh = mesh
@@ -165,15 +176,18 @@ class SharedCacheBank:
         # host-side mirror of cached texts (display only; tokens are truth)
         self.text_store: Dict[int, Tuple[str, str]] = {}
         self.insert_seq = 0
+        # per-batch-size default-cost arrays (explicit device_put once per
+        # size — the hot loop must not transfer implicitly per dispatch)
+        self._default_costs: Dict[int, jnp.ndarray] = {}
         if state is None:
             state = cache_lib.init_cache(cache_cfg)
         if mesh is None:
             self.state = state
-            # fused lookup + route + hit-accounting; cache state donated so
-            # the touch happens in place (DESIGN.md §5)
+            # fused lookup + calibrated route + hit-accounting; cache state
+            # donated so the touch happens in place (DESIGN.md §5)
             self._lookup_touch = jax.jit(
-                lambda s, q: cache_lib.lookup_and_touch(s, cache_cfg,
-                                                        router_cfg, q),
+                lambda s, q, c: cache_lib.lookup_route_touch(
+                    s, cache_cfg, router_cfg, q, c),
                 donate_argnums=(0,))
             self._insert = cache_lib.make_insert_batch(cache_cfg)
         else:
@@ -187,15 +201,71 @@ class SharedCacheBank:
                 mesh, cache_cfg, router_cfg, axis)
             self._insert = dist_lib.make_distributed_insert_batch(
                 mesh, cache_cfg, axis)
+        # stage-2 resolver (shared by local and sharded states: the token
+        # gather + touch run in the GSPMD region with replicated indices)
+        self._second_stage = None
+        if reranker is not None:
+            rr_params, rr_cfg = reranker
+            self._second_stage = cache_lib.make_second_stage(
+                cache_cfg, router_cfg, rr_params, rr_cfg)
 
     @property
     def sharded(self) -> bool:
         return self.mesh is not None
 
+    @property
+    def cascading(self) -> bool:
+        """Is the stage-2 cascade active (band > 0 + reranker wired)?"""
+        return self.router_cfg.band > 0.0 and self._second_stage is not None
+
+    def default_cost(self, batch: int):
+        """The (batch,)-shaped default-cost array, device-put once."""
+        c = self._default_costs.get(batch)
+        if c is None:
+            c = jax.device_put(np.full((batch,), self.router_cfg.default_cost,
+                                       np.float32))
+            self._default_costs[batch] = c
+        return c
+
+    def route_batch(self, q_embs, cost=None):
+        """Stage-1 fused device call at per-request operating points.
+
+        ``cost`` (B,) float32 on device, or None for the config default.
+        Returns the device-array tuple ``(scores, idx, decisions, tau,
+        cluster, admit)`` — decisions may contain ``router.UNCERTAIN``
+        when the cascade is on; resolve those with :meth:`second_stage`.
+        """
+        if cost is None:
+            cost = self.default_cost(q_embs.shape[0])
+        (self.state, scores, idx, dec, tau, cluster,
+         admit) = self._lookup_touch(self.state, q_embs, cost)
+        return scores, idx, dec, tau, cluster, admit
+
     def lookup_and_touch(self, q_embs):
-        """One fused device call: returns (scores, idx, decisions)."""
-        self.state, scores, idx, dec = self._lookup_touch(self.state, q_embs)
+        """One fused device call: returns (scores, idx, decisions).
+
+        The fixed-operating-point wrapper around :meth:`route_batch`
+        (kept for single-stage callers; at the default config it is
+        decision-identical to the legacy two-threshold router).
+        """
+        scores, idx, dec, *_ = self.route_batch(q_embs)
         return scores, idx, dec
+
+    def second_stage(self, q_tokens, q_mask, scores, idx, decisions, tau,
+                     cluster):
+        """Resolve UNCERTAIN rows: returns (final_decisions, slot, conf).
+
+        All inputs are device arrays (stage-1 outputs pass through
+        unconverted); ``slot`` (B,) is the per-row serving slot — the
+        reranker's pick for committed uncertain rows, top-1 otherwise.
+        """
+        if self._second_stage is None:
+            raise ValueError("bank built without a reranker; stage 2 "
+                             "unavailable")
+        self.state, final, slot, conf = self._second_stage(
+            self.state, q_tokens, q_mask, scores, idx, decisions, tau,
+            cluster)
+        return final, slot, conf
 
     def insert_batch(self, embs, q_tokens, q_mask, r_tokens, r_mask, count):
         """One jitted commit; returns the device ``slots`` array."""
@@ -248,11 +318,11 @@ class TweakLLMEngine:
                  router_cfg: Optional[router_lib.RouterConfig] = None,
                  max_query_len: int = 64, use_prefix_cache: bool = True,
                  bank: Optional[SharedCacheBank] = None,
-                 replica_id: int = 0):
+                 replica_id: int = 0, reranker=None):
         if bank is None:
             if cache_cfg is None:
                 raise ValueError("pass cache_cfg or a SharedCacheBank")
-            bank = SharedCacheBank(cache_cfg, router_cfg)
+            bank = SharedCacheBank(cache_cfg, router_cfg, reranker=reranker)
         else:
             if cache_cfg is not None and cache_cfg != bank.cfg:
                 raise ValueError("cache_cfg disagrees with the shared bank")
@@ -304,27 +374,49 @@ class TweakLLMEngine:
         return self._embed_with_lengths(texts)[0]
 
     def _embed_with_lengths(self, texts: List[str]):
-        """(embeddings (n, D), real query-token lengths: list of n ints).
+        """(embeddings (n, D), real query-token lengths, query tokens/mask).
 
-        Lengths come from the host-side tokenizer mask, not the device."""
+        Lengths come from the host-side tokenizer mask, not the device;
+        the (n, max_query_len) token arrays stay host-side — the stage-2
+        cascade device_puts them only when uncertain rows exist."""
         toks, mask = self.tok.encode_batch(texts, self.max_query_len)
         qlens = mask.sum(axis=1).astype(np.int64).tolist()
-        toks, mask, b = pad_to_buckets(toks, mask)
-        embs = self._embed(self.embedder_params, jnp.asarray(toks),
-                           jnp.asarray(mask))[:b]
-        return embs, qlens
+        ptoks, pmask, b = pad_to_buckets(toks, mask)
+        embs = self._embed(self.embedder_params, jnp.asarray(ptoks),
+                           jnp.asarray(pmask))[:b]
+        return embs, qlens, toks, mask
 
     # ------------------------------------------------------------- serve
     def handle_batch(self, queries: List[str], *, max_new_tokens: int = 32,
-                     collect_meta: bool = False):
-        res = self.handle_batch_result(queries, max_new_tokens=max_new_tokens)
+                     collect_meta: bool = False, cost_thresholds=None):
+        res = self.handle_batch_result(queries, max_new_tokens=max_new_tokens,
+                                       cost_thresholds=cost_thresholds)
         if collect_meta:
             return res.responses, res.meta
         return res.responses
 
+    def _resolve_costs(self, n: int, cost_thresholds) -> List[float]:
+        """Per-row cost thresholds: scalar, per-row list (None entries ->
+        config default), or None for the all-default batch."""
+        dc = self.router_cfg.default_cost
+        if cost_thresholds is None:
+            return [dc] * n
+        if np.isscalar(cost_thresholds):
+            return [float(cost_thresholds)] * n  # hostsync: ok caller-provided host scalar
+        if len(cost_thresholds) != n:
+            raise ValueError(f"{len(cost_thresholds)} cost thresholds for "
+                             f"{n} queries")
+        return [dc if c is None else float(c) for c in cost_thresholds]  # hostsync: ok caller-provided host scalars
+
     def handle_batch_result(self, queries: List[str], *,
-                            max_new_tokens: int = 32) -> BatchResult:
-        """Serve a batch and return responses plus per-request metadata."""
+                            max_new_tokens: int = 32,
+                            cost_thresholds=None) -> BatchResult:
+        """Serve a batch and return responses plus per-request metadata.
+
+        ``cost_thresholds`` selects each request's operating point on the
+        calibrated routing curve (scalar, per-row list with None = config
+        default, or None for all-default).
+        """
         queries = [tweak_lib.preprocess_query(q) for q in queries]
         n = len(queries)
         if n == 0:
@@ -333,19 +425,37 @@ class TweakLLMEngine:
         # mutation (lookup touches recency on device; EXACT rows bill
         # stats) so a ValueError cannot leave half-served accounting
         self._tweak_encode_len(max_new_tokens)
-        embs, qlens = self._embed_with_lengths(queries)
+        cost_l = self._resolve_costs(n, cost_thresholds)
+        embs, qlens, qtoks, qmask = self._embed_with_lengths(queries)
         self.stats.baseline_prompt_tokens += sum(qlens)
-        scores, idxs, dec = self.bank.lookup_and_touch(embs)
+        cost_dev = (self.bank.default_cost(n) if cost_thresholds is None
+                    else jax.device_put(np.asarray(cost_l, np.float32)))  # hostsync: ok host list H2D, explicit put
+        d_scores, d_idx, d_dec, d_tau, d_cluster, d_admit = \
+            self.bank.route_batch(embs, cost_dev)
         # THE per-serve-batch device->host sync (DESIGN.md §5): scores,
-        # slots, and routing decisions pulled in one device_get; the
-        # top-1 column is sliced on host (device-side `[:, 0]` would
-        # dispatch its index as an H2D transfer) and everything below
-        # works on host scalars.
-        scores, idxs, decisions = jax.device_get(  # hostsync: ok the one per-batch sync
-            (scores, idxs, dec))
+        # slots, routing decisions, and admission flags pulled in one
+        # device_get; the top-1 column is sliced on host (device-side
+        # `[:, 0]` would dispatch its index as an H2D transfer) and
+        # everything below works on host scalars.  The stage-2 resolve
+        # below adds a SECOND sync, but only on batches that actually
+        # carry uncertain rows — the certain path stays O(1).
+        scores, idxs, decisions, admit = jax.device_get(  # hostsync: ok the one per-batch sync
+            (d_scores, d_idx, d_dec, d_admit))
         top1 = scores[:, 0]
+        slot_arr = idxs[:, 0]
+        stage2_rows = decisions == router_lib.UNCERTAIN
+        n_unc = int(stage2_rows.sum())  # hostsync: ok numpy after the batch sync
+        if n_unc:
+            final, slot, _conf = self.bank.second_stage(
+                jax.device_put(qtoks), jax.device_put(qmask),
+                d_scores, d_idx, d_dec, d_tau, d_cluster)
+            decisions, slot_arr = jax.device_get(  # hostsync: ok stage-2 resolve, fires only when uncertain rows exist
+                (final, slot))
+            self.stats.uncertain += n_unc
+            self.stats.recovered += int(  # hostsync: ok numpy after the stage-2 sync
+                (decisions[stage2_rows] == router_lib.TWEAK).sum())
         top1_l = top1.tolist()
-        slot_l = idxs[:, 0].tolist()
+        slot_l = slot_arr.tolist()
         dec_l = decisions.tolist()
 
         responses: List[Optional[str]] = [None] * n
@@ -363,21 +473,25 @@ class TweakLLMEngine:
         if len(tweak_ids):
             self._run_tweak(queries, tweak_ids, slot_l, responses,
                             max_new_tokens, gen_tokens, prompt_tokens)
-        # MISS: big LLM generates from scratch + cache insert
+        # MISS: big LLM generates from scratch + cache insert (suppressed
+        # for rows whose query cluster the admission EMA has shut)
         miss_ids = np.nonzero(decisions == router_lib.MISS)[0]
         if len(miss_ids):
             self._run_miss(queries, miss_ids, embs, responses,
-                           max_new_tokens, gen_tokens, prompt_tokens)
+                           max_new_tokens, gen_tokens, prompt_tokens,
+                           admit)
 
         self.stats.total += n
-        # band_of mirrored on host: top1 is already here, so no extra
-        # device dispatch + sync per serve batch just for meta
+        # band_of mirrored on host with the ACTIVE config's edges: top1 is
+        # already here, so no extra device dispatch + sync just for meta
         bands = np.full(n, -1, np.int32)
-        for bi, (lo, hi) in enumerate(router_lib.BANDS):
+        for bi, (lo, hi) in enumerate(router_lib.bands_for(self.router_cfg)):
             bands[(top1 >= lo) & (top1 < hi)] = bi
         band_l = bands.tolist()
         meta = [{"sim": top1_l[i], "decision": dec_l[i],
-                 "band": band_l[i], "gen_tokens": gen_tokens[i]}
+                 "band": band_l[i], "gen_tokens": gen_tokens[i],
+                 "cost": cost_l[i],
+                 "stage2": bool(stage2_rows[i])}  # hostsync: ok numpy after sync
                 for i in range(n)]
         miss_mask = decisions == router_lib.MISS
         return BatchResult(
@@ -662,7 +776,7 @@ class TweakLLMEngine:
         self.bank.maybe_reindex()
 
     def _run_miss(self, queries, ids, embs, responses, max_new_tokens,
-                  gen_tokens, prompt_tokens):
+                  gen_tokens, prompt_tokens, admit=None):
         texts = [queries[i] for i in ids]
         toks, mask = self.tok.encode_batch(texts, self.max_query_len)
         real_lens = mask.sum(axis=1).astype(np.int64).tolist()
@@ -685,10 +799,21 @@ class TweakLLMEngine:
             self.stats.miss += 1
             gen_tokens[i] = n_gen
             prompt_tokens[i] = real_lens[j]
+        # admission control (DESIGN.md §13): the response is still served,
+        # but clusters the hit EMA has shut don't pollute the cache
+        keep = list(range(len(ids))) if admit is None else \
+            [j for j, i in enumerate(ids) if bool(admit[i])]  # hostsync: ok numpy after the batch sync
+        self.stats.suppressed_inserts += len(ids) - len(keep)
+        if not keep:
+            return
+        kept_ids = np.asarray([ids[j] for j in keep])  # hostsync: ok host list of slot ids
         # explicit device_put of the row indices: a host-array gather
         # would move them implicitly (transfer-guard unsafe)
-        self._insert_entries(texts, resp_tokens, resp_texts,
-                             jnp.take(embs, jax.device_put(ids), axis=0))
+        self._insert_entries([texts[j] for j in keep],
+                             [resp_tokens[j] for j in keep],
+                             [resp_texts[j] for j in keep],
+                             jnp.take(embs, jax.device_put(kept_ids),
+                                      axis=0))
 
     # ------------------------------------------------- offline population
     def populate(self, queries: List[str], responses: List[str]):
@@ -731,11 +856,12 @@ class ReplicaGroup:
               big, small, cache_cfg: cache_lib.CacheConfig,
               router_cfg: Optional[router_lib.RouterConfig] = None,
               shared: bool = True, mesh=None, axis: str = "data",
-              **engine_kw) -> "ReplicaGroup":
+              reranker=None, **engine_kw) -> "ReplicaGroup":
         """Builds ``n`` replicas.  ``big``/``small`` are Generators shared
         by every replica, or callables ``replica_id -> Generator`` for
         per-replica handles (distinct KV pools)."""
-        bank = (SharedCacheBank(cache_cfg, router_cfg, mesh=mesh, axis=axis)
+        bank = (SharedCacheBank(cache_cfg, router_cfg, mesh=mesh, axis=axis,
+                                reranker=reranker)
                 if shared else None)
         engines = []
         for rid in range(n):
@@ -745,7 +871,8 @@ class ReplicaGroup:
                 big=big(rid) if callable(big) else big,
                 small=small(rid) if callable(small) else small,
                 bank=bank if shared else SharedCacheBank(
-                    cache_cfg, router_cfg, mesh=mesh, axis=axis),
+                    cache_cfg, router_cfg, mesh=mesh, axis=axis,
+                    reranker=reranker),
                 replica_id=rid, **engine_kw))
         return cls(engines)
 

@@ -250,6 +250,13 @@ def build_index(state, cfg, seed: int = 0, sample: int = 65536):  # hostsync: ok
     rows = np.nonzero(valid)[0]
     out = dict(state)
     out.update(init_ivf(cfg))
+    # a recluster renames every cluster, so the per-cluster admission EMA
+    # (cache.ADM_KEYS, riding outside IVF_KEYS) restarts optimistic —
+    # carrying stats across incompatible cluster identities would
+    # suppress inserts on whatever clusters inherit a shut id
+    if "adm_ema" in state:
+        out["adm_ema"] = jnp.ones_like(state["adm_ema"])
+        out["adm_count"] = jnp.zeros_like(state["adm_count"])
     if len(rows) == 0:
         return out
     rng = np.random.default_rng(seed)

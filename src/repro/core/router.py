@@ -1,20 +1,47 @@
-"""Threshold-based routing — the decision layer of TweakLLM (§3.1).
+"""Calibrated routing cascade — the decision layer of TweakLLM (§3.1).
 
-Routes each query by its top-1 cache similarity:
-  sim >= exact_threshold  -> EXACT  (return cached response verbatim, §6.1)
-  sim >= tweak_threshold  -> TWEAK  (Small LLM refines the cached response)
-  otherwise               -> MISS   (Big LLM generates; result is cached)
+The paper routes on two fixed cosine thresholds.  This module generalises
+that into a staged, calibrated decision pipeline (ROADMAP #3):
+
+* **Operating curve** — a per-request ``cost_threshold ∈ [0, 1]`` (0 =
+  cheapest, serve from cache aggressively; 1 = highest quality, regenerate
+  aggressively) selects the operating point on a piecewise-linear
+  score→decision calibration curve: :func:`threshold_for` maps cost to the
+  TWEAK/MISS boundary ``tau``.  The default curve is derived from
+  ``tweak_threshold`` with a knot pinned AT ``default_cost``, so the
+  legacy two-threshold router is exactly the ``cost = default_cost``
+  operating point (bit-identical decisions — the byte-identity contract
+  the regression tests pin).
+* **Stage 1** (:func:`route_cascade`, fused into the cache lookup):
+  threshold the top-1 similarity at ``tau`` like the paper, but rows
+  inside the ``band``-wide uncertainty window around ``tau`` come back
+  as the provisional :data:`UNCERTAIN` decision instead of committing.
+  ``band = 0`` (the default) disables the cascade entirely.
+* **Stage 2** (:func:`stage2_combine`, a second jitted pass only when
+  uncertain rows exist): multi-probe agreement over the already-retrieved
+  ``cosine_topk`` shortlist plus a cross-encoder reranker pass
+  (``models/reranker.py``) decide TWEAK-vs-MISS, and the argmax of the
+  blended per-candidate evidence re-selects the serving candidate —
+  recovering misroutes where the best tweak source is not the top-1
+  cosine neighbour.
+* **Admission control** (:func:`admission_update`, IVF caches): a
+  per-cluster hit EMA rides on the IVF centroid assignments; clusters
+  that persistently miss are suppressed from insertion (SCALM-style
+  "is this even worth caching").  ``admit_floor = 0`` disables it.
 
 Also reports the paper's cosine-similarity bands (0.7-0.8, 0.8-0.9,
-0.9-1.0) used throughout the evaluation figures.
+0.9-1.0) used throughout the evaluation figures — derived from the
+active config's ``tweak_threshold`` (paper bands at the default 0.7).
 """
 from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 
 MISS, TWEAK, EXACT = 0, 1, 2
+UNCERTAIN = 3          # provisional stage-1 decision; never leaves the bank
 BANDS = ((0.7, 0.8), (0.8, 0.9), (0.9, 1.01))
 
 
@@ -22,19 +49,194 @@ BANDS = ((0.7, 0.8), (0.8, 0.9), (0.9, 1.01))
 class RouterConfig:
     tweak_threshold: float = 0.7   # paper Table 1 initial threshold
     exact_threshold: float = 0.9999
+    # --- calibrated operating curve (cost -> TWEAK/MISS boundary tau) ---
+    # () = derive knots from tweak_threshold: (0, default_cost, 1) ->
+    # (tweak_threshold - cal_span, tweak_threshold, 1.0).  Custom curves
+    # must keep cal_costs strictly increasing within [0, 1].
+    default_cost: float = 0.5
+    cal_costs: tuple = ()
+    cal_taus: tuple = ()
+    cal_span: float = 0.2
+    # --- stage-2 uncertainty cascade (width of the |top1 - tau| window;
+    # 0 disables stage 2 and reproduces the single-stage router) ---
+    band: float = 0.0
+    probe_temp: float = 0.05       # sharpness of the multi-probe agreement
+    w_agree: float = 0.4           # weight of top-k agreement in stage 2
+    w_rerank: float = 0.6          # weight of the cross-encoder evidence
+    commit_at: float = 0.5         # normalized confidence needed for TWEAK
+    # --- per-cluster admission control (IVF caches; floor 0 disables) ---
+    admit_alpha: float = 0.05      # hit-EMA step per observation
+    admit_floor: float = 0.0       # suppress inserts when cluster EMA < floor
+    admit_min: int = 16            # observations before a cluster can be shut
+
+    def __post_init__(self):
+        if len(self.cal_costs) != len(self.cal_taus):
+            raise ValueError(
+                f"calibration knots disagree: {len(self.cal_costs)} costs "
+                f"vs {len(self.cal_taus)} taus")
+        if self.cal_costs and len(self.cal_costs) < 2:
+            raise ValueError("calibration needs >= 2 knots")
+        if not 0.0 <= self.default_cost <= 1.0:
+            raise ValueError(f"default_cost {self.default_cost} not in [0,1]")
+
+
+def calibration(cfg: RouterConfig):
+    """The (cal_costs, cal_taus) knot arrays, derived when not given."""
+    if cfg.cal_costs:
+        return (jnp.asarray(cfg.cal_costs, jnp.float32),
+                jnp.asarray(cfg.cal_taus, jnp.float32))
+    t = float(cfg.tweak_threshold)  # hostsync: ok config scalar, never traced
+    dc = min(max(float(cfg.default_cost), 1e-3), 1.0 - 1e-3)  # hostsync: ok config scalar
+    return (jnp.asarray((0.0, dc, 1.0), jnp.float32),
+            jnp.asarray((t - cfg.cal_span, t, 1.0), jnp.float32))
+
+
+def threshold_for(cost, cfg: RouterConfig):
+    """Per-request TWEAK/MISS boundary tau from cost thresholds (B,).
+
+    With the derived calibration, ``cost == default_cost`` is pinned to
+    ``tweak_threshold`` EXACTLY (not through interp float arithmetic) —
+    the legacy router is that single operating point, bit for bit.
+    """
+    cost = jnp.asarray(cost, jnp.float32)
+    xs, ys = calibration(cfg)
+    tau = jnp.interp(cost, xs, ys)
+    if not cfg.cal_costs:
+        tau = jnp.where(cost == cfg.default_cost, cfg.tweak_threshold, tau)
+    return tau
 
 
 def route(scores, cfg: RouterConfig):
-    """scores: (B,) top-1 cosine similarity -> decisions (B,) int32."""
+    """scores: (B,) top-1 cosine similarity -> decisions (B,) int32.
+
+    The legacy single-stage router: the fixed operating point at
+    ``cost = default_cost`` with no uncertainty band.
+    """
     d = jnp.zeros(scores.shape, jnp.int32)
     d = jnp.where(scores >= cfg.tweak_threshold, TWEAK, d)
     d = jnp.where(scores >= cfg.exact_threshold, EXACT, d)
     return d
 
 
-def band_of(scores):
-    """Similarity band index per query: -1 below 0.7, else 0/1/2."""
+def route_cascade(top1, tau, cfg: RouterConfig):
+    """Stage-1 decisions at per-row operating points.
+
+    top1 (B,) top-1 similarity, tau (B,) from :func:`threshold_for`.
+    EXACT keeps absolute precedence (verbatim hits never cascade); rows
+    within ``band/2`` of tau come back :data:`UNCERTAIN` for stage 2.
+    ``band == 0`` is statically elided — decisions are then bitwise the
+    two-threshold :func:`route` at ``tau``.
+    """
+    d = jnp.where(top1 >= tau, TWEAK, MISS)
+    d = jnp.where(top1 >= cfg.exact_threshold, EXACT, d)
+    if cfg.band > 0.0:
+        unc = (jnp.abs(top1 - tau) < 0.5 * cfg.band) \
+            & (top1 < cfg.exact_threshold)
+        d = jnp.where(unc, UNCERTAIN, d)
+    return d.astype(jnp.int32)
+
+
+def stage2_combine(scores, rerank_logits, live, tau, cfg: RouterConfig):
+    """Second-stage evidence combine over the (B, K) shortlist.
+
+    ``scores`` are the cosine top-k, ``rerank_logits`` the cross-encoder
+    logits over the same candidates, ``live`` the valid-candidate mask
+    (padded/-1 shortlist rows excluded), ``tau`` (B,) the operating point.
+
+    * multi-probe agreement: mean over live candidates of
+      ``sigmoid((s_j - tau) / probe_temp)`` — how much of the shortlist
+      clears the boundary, not just the argmax;
+    * reranker evidence: ``sigmoid(max_j logit_j)`` — the best joint-read
+      duplicate probability.
+
+    Returns ``(commit (B,) bool, best (B,) int32 shortlist position,
+    conf (B,) float32)``; ``best`` maximises the BLENDED per-candidate
+    evidence ``w_agree * sigmoid((s_j - tau)/probe_temp) + w_rerank *
+    sigmoid(logit_j)`` and may differ from position 0 — that re-selection
+    is the misroute recovery.  (Reranker-only argmax re-selects too
+    eagerly: on the frontier protocol it flips ~40% of already-correct
+    in-band top-1s, the cosine term anchors them.)  Rows with no live
+    candidate get conf 0 and never commit.
+    """
+    nlive = jnp.maximum(jnp.sum(live, axis=1), 1)
+    probe = jax.nn.sigmoid((scores - tau[:, None]) / cfg.probe_temp)
+    agree = jnp.sum(jnp.where(live, probe, 0.0), axis=1) / nlive
+    rr = jnp.where(live, rerank_logits, -jnp.inf)
+    evidence = jax.nn.sigmoid(jnp.max(rr, axis=1))
+    conf = cfg.w_agree * agree + cfg.w_rerank * evidence
+    commit = conf >= cfg.commit_at * (cfg.w_agree + cfg.w_rerank)
+    cand = cfg.w_agree * probe + cfg.w_rerank * jax.nn.sigmoid(rr)
+    best = jnp.argmax(jnp.where(live, cand, -jnp.inf), axis=1)
+    return commit, best.astype(jnp.int32), conf.astype(jnp.float32)
+
+
+# ------------------------------------------------------------- admission
+
+def admission_admit(adm_ema, adm_count, cluster, cfg: RouterConfig):
+    """Per-row admit flag from the PRE-update cluster EMA.
+
+    Rows outside any cluster (``cluster < 0``: flat caches, cold index)
+    always admit; a cluster is shut only after ``admit_min`` observations
+    put its hit EMA below ``admit_floor``.
+    """
+    c = jnp.clip(cluster, 0, adm_ema.shape[0] - 1)
+    shut = (adm_count[c] >= cfg.admit_min) & (adm_ema[c] < cfg.admit_floor)
+    return (cluster < 0) | ~shut
+
+
+def admission_update(adm_ema, adm_count, cluster, hit, obs,
+                     cfg: RouterConfig):
+    """Order-independent batched EMA update of the per-cluster hit rate.
+
+    ``cluster``/``hit``/``obs`` are (B,); rows with ``obs`` False (or no
+    cluster) contribute nothing.  A batch with ``n_c`` observations of
+    cluster c applies the closed form of n_c sequential EMA steps against
+    the batch's mean hit rate:
+
+        ema_c <- (1-a)^n_c * ema_c + (1 - (1-a)^n_c) * (hits_c / n_c)
+
+    so the result does not depend on row order within the batch (the
+    sharded and local paths must agree bit for bit).
+    """
+    nclusters = adm_ema.shape[0]
+    w = jnp.where(obs & (cluster >= 0), cluster, nclusters)  # OOB -> dropped
+    n_c = jnp.zeros((nclusters,), jnp.float32).at[w].add(1.0, mode="drop")
+    h_c = jnp.zeros((nclusters,), jnp.float32).at[w].add(
+        hit.astype(jnp.float32), mode="drop")
+    decay = jnp.power(1.0 - cfg.admit_alpha, n_c)
+    mean = h_c / jnp.maximum(n_c, 1.0)
+    ema = jnp.where(n_c > 0, decay * adm_ema + (1.0 - decay) * mean, adm_ema)
+    count = adm_count + n_c.astype(adm_count.dtype)
+    return ema, count
+
+
+# ------------------------------------------------------------- band stats
+
+def band_edges(cfg: RouterConfig = None):
+    """The similarity-band edges for the ACTIVE config.
+
+    The paper's bands (0.7/0.8/0.9/1.0) are the thirds of the hit range
+    ``[tweak_threshold, 1]``; deriving them from the config keeps band
+    stats attributed correctly when the threshold moves (previously they
+    were hardcoded and silently misattributed TWEAK/MISS traffic).  The
+    top edge stays 1.01 so sim == 1.0 lands in the last band.
+    """
+    lo = 0.7 if cfg is None else float(cfg.tweak_threshold)  # hostsync: ok config scalar
+    width = max((1.0 - lo) / 3.0, 0.0)
+    e = [round(lo + i * width, 9) for i in range(3)]
+    return (*e, max(1.01, lo))
+
+
+def bands_for(cfg: RouterConfig = None):
+    """((lo, hi), ...) band intervals for the active config."""
+    e = band_edges(cfg)
+    return tuple((e[i], e[i + 1]) for i in range(3))
+
+
+def band_of(scores, cfg: RouterConfig = None):
+    """Similarity band index per query: -1 below the tweak threshold,
+    else 0/1/2 (config-derived edges; paper bands at the default)."""
     b = jnp.full(scores.shape, -1, jnp.int32)
-    for i, (lo, hi) in enumerate(BANDS):
+    for i, (lo, hi) in enumerate(bands_for(cfg)):
         b = jnp.where((scores >= lo) & (scores < hi), i, b)
     return b

@@ -21,19 +21,28 @@ from repro.data import WorkloadGenerator
 from repro.launch.mesh import make_cache_mesh
 from repro.models import ModelConfig, build_model
 from repro.models.embedder import tiny_embedder_config, init_embedder
+from repro.models.reranker import tiny_reranker_config, init_reranker
 from repro.serving import (GenerateConfig, Generator, ReplicaScheduler,
                            SamplerConfig, Scheduler, SchedulerConfig,
                            SimClock, poisson_trace, replay_trace)
 from repro.tokenizer import HashWordTokenizer
 from repro.training.embedder_train import train_embedder
+from repro.training.reranker_train import train_reranker
 
 
 def build_stack(*, vocab: int = 8192, capacity: int = 4096,
                 train_embedder_steps: int = 60, policy: str = "fifo",
                 lookup_impl: str = "xla", index: str = "flat",
                 nclusters: int = 0, nprobe: int = 8, threshold: float = 0.7,
-                seed: int = 0):
-    """Shared model stack + configs for one engine or a replica group."""
+                band: float = 0.0, train_reranker_steps: int = 120,
+                admit_floor: float = 0.0, seed: int = 0):
+    """Shared model stack + configs for one engine or a replica group.
+
+    ``band > 0`` turns on the router cascade (DESIGN.md §13): the stack
+    then also builds + trains the cross-encoder reranker the second
+    stage scores shortlists with, returned under the ``reranker`` key
+    that ``TweakLLMEngine`` / ``ReplicaGroup.build`` accept.
+    """
     tok = HashWordTokenizer(vocab)
     ecfg = tiny_embedder_config(vocab)
     eparams = init_embedder(jax.random.PRNGKey(seed), ecfg)
@@ -59,9 +68,18 @@ def build_stack(*, vocab: int = 8192, capacity: int = 4096,
     cache_cfg = CacheConfig(capacity=capacity, dim=ecfg.d_model,
                             policy=policy, lookup_impl=lookup_impl,
                             index=index, nclusters=nclusters, nprobe=nprobe)
-    return dict(tokenizer=tok, embedder_params=eparams, embedder_cfg=ecfg,
-                big=big, small=small, cache_cfg=cache_cfg,
-                router_cfg=RouterConfig(tweak_threshold=threshold))
+    stack = dict(tokenizer=tok, embedder_params=eparams, embedder_cfg=ecfg,
+                 big=big, small=small, cache_cfg=cache_cfg,
+                 router_cfg=RouterConfig(tweak_threshold=threshold,
+                                         band=band, admit_floor=admit_floor))
+    if band > 0.0:
+        rr_cfg = tiny_reranker_config(vocab)
+        rr_params = init_reranker(jax.random.PRNGKey(seed + 3), rr_cfg)
+        if train_reranker_steps:
+            rr_params, _ = train_reranker(rr_params, rr_cfg, tok,
+                                          steps=train_reranker_steps)
+        stack["reranker"] = (rr_params, rr_cfg)
+    return stack
 
 
 def build_engine(**kw):
@@ -89,6 +107,19 @@ def main():
                     help="scheduler coalescing deadline (simulated s)")
     ap.add_argument("--profile", default="lmsys", choices=["lmsys", "wildchat"])
     ap.add_argument("--threshold", type=float, default=0.7)
+    ap.add_argument("--cost-threshold", type=float, default=None,
+                    help="routing operating point in [0,1] applied to every "
+                         "request (DESIGN.md §13); default: the router's "
+                         "calibrated default cost")
+    ap.add_argument("--band", type=float, default=0.0,
+                    help="uncertainty band width around the TWEAK/MISS "
+                         "boundary; > 0 enables the reranker second stage")
+    ap.add_argument("--reranker-steps", type=int, default=120,
+                    help="training steps for the cascade reranker "
+                         "(only used when --band > 0)")
+    ap.add_argument("--admit-floor", type=float, default=0.0,
+                    help="suppress cache inserts for IVF clusters whose "
+                         "hit EMA falls below this (0 = admit everything)")
     ap.add_argument("--policy", default="fifo", choices=["fifo", "lru", "lfu"])
     ap.add_argument("--index", default="flat", choices=["flat", "ivf"],
                     help="cache lookup index (ivf = clustered, DESIGN.md §7)")
@@ -106,9 +137,12 @@ def main():
 
     print("building TweakLLM stack (training embedder contrastively)...")
     kw = dict(threshold=args.threshold, policy=args.policy, index=args.index,
-              train_embedder_steps=args.embedder_steps)
+              train_embedder_steps=args.embedder_steps, band=args.band,
+              train_reranker_steps=args.reranker_steps,
+              admit_floor=args.admit_floor)
     scfg = SchedulerConfig(max_wait=args.max_wait, max_batch=args.batch,
-                           max_new_tokens=8)
+                           max_new_tokens=8,
+                           cost_threshold=args.cost_threshold)
     if args.replicas > 1 or args.cache_shards > 1:
         group = build_replica_group(args.replicas,
                                     shared=not args.private_caches,
@@ -144,6 +178,11 @@ def main():
               f"stolen={ss.stolen}")
     print(f"routing: miss={s.miss} tweak={s.tweak} exact={s.exact} "
           f"hit_rate={s.hit_rate:.2%} (+{ss.joined} joined in flight)")
+    if args.band > 0 or args.admit_floor > 0:
+        print(f"cascade: uncertain={s.uncertain} recovered={s.recovered} "
+              f"suppressed_inserts={s.suppressed_inserts} "
+              f"(band={args.band} cost="
+              f"{args.cost_threshold if args.cost_threshold is not None else 'default'})")
     print(f"tokens:  big={s.big_tokens} small={s.small_tokens}")
     print(f"cost:    {s.cost:,.0f} vs all-big {s.baseline_cost:,.0f} "
           f"-> {s.cost/max(s.baseline_cost,1):.2%} of baseline")

@@ -1,18 +1,29 @@
-"""Cross-encoder re-ranker — the GPTCache baseline's second stage.
+"""Cross-encoder re-ranker — joint (query, candidate) duplicate scoring.
 
 Scores a (query, candidate-query) pair jointly: both sequences are
 concatenated with a separator, run through a small bidirectional encoder,
 and a scalar duplicate-probability head reads the pooled state.  Plays the
-role of ``albert-duplicate-onnx`` / ``quora-distilroberta-base`` in Fig 2.
+role of ``albert-duplicate-onnx`` / ``quora-distilroberta-base`` in Fig 2
+(GPTCache baseline) and serves as the second-stage evidence source of the
+calibrated router cascade (``core/router.py``): :func:`score_shortlist`
+scores the live query against the cache lookup's top-k candidates in one
+jitted batch.
+
+Positions are PACKED (rank among valid tokens, ``cumsum(mask) - 1``), not
+raw sequence offsets: padding inside the first segment must not shift the
+second segment's rotary phases, or scores would depend on how the inputs
+were padded rather than on their content (the padding-independence
+property the tests pin).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from . import attention as attn_lib
 from . import embedder as emb_lib
 from .config import ModelConfig
-from .layers import dense_init
+from .layers import apply_mlp, apply_norm, dense_init
 
 
 def tiny_reranker_config(vocab_size: int = 4096) -> ModelConfig:
@@ -31,16 +42,17 @@ def init_reranker(key, cfg: ModelConfig):
 def score_pairs(params, tokens_a, mask_a, tokens_b, mask_b, cfg: ModelConfig,
                 sep_token: int = 3):
     """Joint encoding of pairs -> duplicate logit (B,)."""
-    b, sa = tokens_a.shape
+    b = tokens_a.shape[0]
     sep = jnp.full((b, 1), sep_token, jnp.int32)
     tokens = jnp.concatenate([tokens_a, sep, tokens_b], axis=1)
-    mask = jnp.concatenate([mask_a, jnp.ones((b, 1), mask_a.dtype), mask_b], axis=1)
+    mask = jnp.concatenate([mask_a, jnp.ones((b, 1), mask_a.dtype), mask_b],
+                           axis=1)
     x = jnp.take(params["embed"], tokens, axis=0)
-    s = tokens.shape[1]
-    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    # packed positions: the i-th VALID token sits at rotary phase i,
+    # wherever padding falls — see module docstring
+    positions = jnp.maximum(
+        jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1, 0)
     valid = mask.astype(bool)
-    from .layers import apply_mlp, apply_norm
-    from . import attention as attn_lib
 
     def body(x, lp):
         h = apply_norm(lp["norm1"], x, cfg.norm_type)
@@ -59,3 +71,20 @@ def score_pairs(params, tokens_a, mask_a, tokens_b, mask_b, cfg: ModelConfig,
     pooled = jnp.sum(x.astype(jnp.float32) * m, axis=1) / jnp.maximum(
         jnp.sum(m, axis=1), 1.0)
     return jnp.einsum("bd,do->bo", pooled, params["score_head"])[:, 0]
+
+
+def score_shortlist(params, q_tokens, q_mask, cand_tokens, cand_mask,
+                    cfg: ModelConfig, sep_token: int = 3):
+    """Score one query against its K shortlist candidates -> logits (B, K).
+
+    ``q_tokens``/``q_mask`` (B, Sq); ``cand_tokens``/``cand_mask``
+    (B, K, Sc).  Flattens to a (B*K) pair batch for :func:`score_pairs` —
+    candidates are scored independently, so the result is
+    permutation-equivariant over the candidate axis by construction.
+    """
+    b, k, sc = cand_tokens.shape
+    qt = jnp.repeat(q_tokens, k, axis=0)
+    qm = jnp.repeat(q_mask, k, axis=0)
+    flat = score_pairs(params, qt, qm, cand_tokens.reshape(b * k, sc),
+                       cand_mask.reshape(b * k, sc), cfg, sep_token)
+    return flat.reshape(b, k)

@@ -110,6 +110,10 @@ class SchedulerConfig:
     # a backed-up one (DESIGN.md §12).  Ignored by the single-lane
     # Scheduler.
     steal: bool = True
+    # Default per-request routing operating point (DESIGN.md §13); None
+    # defers to the engine's RouterConfig.default_cost.  A request-level
+    # ``submit(text, cost_threshold=...)`` overrides this.
+    cost_threshold: Optional[float] = None
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -129,6 +133,10 @@ class Request:
     rid: int
     text: str
     arrival: float
+    # routing operating point for this request (None = engine default);
+    # part of the dedup key — two copies of one text at different
+    # operating points may route differently, so they must not coalesce
+    cost_threshold: Optional[float] = None
     response: Optional[str] = None
     meta: Optional[dict] = None
     joined: bool = False          # rode along on another request's dispatch
@@ -189,7 +197,8 @@ class Scheduler:
         # FIFO of dedup groups; each group shares one query text and is
         # ordered by arrival (index 0 = primary, the rest join its dispatch)
         self._groups: List[List[Request]] = []
-        self._by_text: Dict[str, List[Request]] = {}
+        self._by_text: Dict[Tuple[str, Optional[float]],
+                            List[Request]] = {}
         # completions park here until a poll/flush RETURNS them: if one
         # dispatch in a multi-batch poll raises, earlier batches' completed
         # requests survive and are delivered by the next call
@@ -207,22 +216,32 @@ class Scheduler:
     def pending(self) -> int:
         return self._n_pending
 
-    def submit(self, text: str) -> Request:
-        """Admit one request at ``clock.now()``; raises QueueFull."""
+    def submit(self, text: str,
+               cost_threshold: Optional[float] = None) -> Request:
+        """Admit one request at ``clock.now()``; raises QueueFull.
+
+        ``cost_threshold`` picks this request's routing operating point
+        (DESIGN.md §13); None falls back to ``cfg.cost_threshold``, then
+        to the engine's default.
+        """
         if self._n_pending >= self.cfg.queue_capacity:
             self.stats.rejected += 1
             raise QueueFull(
                 f"request queue at capacity ({self.cfg.queue_capacity})")
-        req = Request(next(self._rid), text, self.clock.now())
+        if cost_threshold is None:
+            cost_threshold = self.cfg.cost_threshold
+        req = Request(next(self._rid), text, self.clock.now(),
+                      cost_threshold=cost_threshold)
         self.stats.submitted += 1
-        group = self._by_text.get(text) if self.cfg.dedup else None
+        key = (text, cost_threshold)
+        group = self._by_text.get(key) if self.cfg.dedup else None
         if group is not None:
             group.append(req)
         else:
             group = [req]
             self._groups.append(group)
             if self.cfg.dedup:
-                self._by_text[text] = group
+                self._by_text[key] = group
         self._n_pending += 1
         return req
 
@@ -262,7 +281,7 @@ class Scheduler:
             return
         take = min(len(self._groups), self.cfg.max_batch)
         groups = self._groups[:take]
-        result = self._serve([g[0].text for g in groups])
+        result = self._serve(groups)
         start = max(self.clock.now(), self._busy_until)
         service = self.service_model(take) if self.service_model else 0.0
         finish = start + service
@@ -278,7 +297,7 @@ class Scheduler:
         free = [i for i, t in enumerate(self._slot_free) if t <= start]
         take = min(len(self._groups), len(free), self.cfg.max_batch)
         groups = self._groups[:take]
-        result = self._serve([g[0].text for g in groups])
+        result = self._serve(groups)
         # each request holds one slot for its steady-state share of a
         # full-slot fused decode: finishing frees ONLY that slot
         service = (self.service_model(self.cfg.slots) / self.cfg.slots
@@ -289,15 +308,21 @@ class Scheduler:
         self.stats.busy_time += service * take
         self._complete(groups, result, finish)
 
-    def _serve(self, texts: List[str]):
+    def _serve(self, groups):
         # engine first, queue mutation after: if the engine raises, every
         # request stays pending (and countable) for a retry or flush
+        texts = [g[0].text for g in groups]
+        costs = [g[0].cost_threshold for g in groups]
+        # only surface the kwarg when an operating point was actually set:
+        # cost-oblivious engines (baselines, test doubles) keep working
+        kw = ({"cost_thresholds": costs}
+              if any(c is not None for c in costs) else {})
         result = self.engine.handle_batch_result(
-            texts, max_new_tokens=self.cfg.max_new_tokens)
-        del self._groups[:len(texts)]
+            texts, max_new_tokens=self.cfg.max_new_tokens, **kw)
+        del self._groups[:len(groups)]
         if self.cfg.dedup:
-            for t in texts:
-                self._by_text.pop(t, None)
+            for g in groups:
+                self._by_text.pop((g[0].text, g[0].cost_threshold), None)
         return result
 
     def _complete(self, groups, result, finish: float) -> None:
@@ -375,7 +400,8 @@ class ReplicaScheduler:
         self.stats = SchedulerStats()
         self.lanes = [_Lane(engine=e, slot_free=[0.0] * self.cfg.slots)
                       for e in engines]
-        self._by_text: Dict[str, List[Request]] = {}
+        self._by_text: Dict[Tuple[str, Optional[float]],
+                            List[Request]] = {}
         self._completed: List[Request] = []
         self._n_pending = 0
         self._rid = itertools.count()
@@ -392,15 +418,20 @@ class ReplicaScheduler:
     def _free_at(self, lane: _Lane) -> float:
         return min(lane.slot_free) if self.cfg.continuous else lane.busy_until
 
-    def submit(self, text: str) -> Request:
+    def submit(self, text: str,
+               cost_threshold: Optional[float] = None) -> Request:
         """Admit one request at ``clock.now()``; raises QueueFull."""
         if self._n_pending >= self.cfg.queue_capacity:
             self.stats.rejected += 1
             raise QueueFull(
                 f"request queue at capacity ({self.cfg.queue_capacity})")
-        req = Request(next(self._rid), text, self.clock.now())
+        if cost_threshold is None:
+            cost_threshold = self.cfg.cost_threshold
+        req = Request(next(self._rid), text, self.clock.now(),
+                      cost_threshold=cost_threshold)
         self.stats.submitted += 1
-        group = self._by_text.get(text) if self.cfg.dedup else None
+        key = (text, cost_threshold)
+        group = self._by_text.get(key) if self.cfg.dedup else None
         if group is not None:
             group.append(req)           # joins its group's lane, wherever
         else:
@@ -409,7 +440,7 @@ class ReplicaScheduler:
                        key=lambda l: (len(l.groups), self._free_at(l)))
             lane.groups.append(group)
             if self.cfg.dedup:
-                self._by_text[text] = group
+                self._by_text[key] = group
         self._n_pending += 1
         return req
 
@@ -496,7 +527,7 @@ class ReplicaScheduler:
             free = [i for i, t in enumerate(lane.slot_free) if t <= start]
             take = min(len(lane.groups), len(free), self.cfg.max_batch)
             groups = lane.groups[:take]
-            result = self._serve(lane, [g[0].text for g in groups])
+            result = self._serve(lane, groups)
             service = (self.service_model(self.cfg.slots) / self.cfg.slots
                        if self.service_model else 0.0)
             finish = start + service
@@ -506,7 +537,7 @@ class ReplicaScheduler:
         else:
             take = min(len(lane.groups), self.cfg.max_batch)
             groups = lane.groups[:take]
-            result = self._serve(lane, [g[0].text for g in groups])
+            result = self._serve(lane, groups)
             start = max(self.clock.now(), lane.busy_until)
             service = self.service_model(take) if self.service_model else 0.0
             finish = start + service
@@ -516,15 +547,19 @@ class ReplicaScheduler:
         lane.batches += 1
         self._complete(groups, result, finish)
 
-    def _serve(self, lane: _Lane, texts: List[str]):
+    def _serve(self, lane: _Lane, groups):
         # engine first, queue mutation after — same crash discipline as
         # the single-lane Scheduler
+        texts = [g[0].text for g in groups]
+        costs = [g[0].cost_threshold for g in groups]
+        kw = ({"cost_thresholds": costs}
+              if any(c is not None for c in costs) else {})
         result = lane.engine.handle_batch_result(
-            texts, max_new_tokens=self.cfg.max_new_tokens)
-        del lane.groups[:len(texts)]
+            texts, max_new_tokens=self.cfg.max_new_tokens, **kw)
+        del lane.groups[:len(groups)]
         if self.cfg.dedup:
-            for t in texts:
-                self._by_text.pop(t, None)
+            for g in groups:
+                self._by_text.pop((g[0].text, g[0].cost_threshold), None)
         return result
 
     def _complete(self, groups, result, finish: float) -> None:

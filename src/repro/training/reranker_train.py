@@ -1,0 +1,57 @@
+"""Supervised training for the cross-encoder reranker.
+
+Binary duplicate classification over generated pairs: true duplicates are
+positives; hard negatives (polarity flips / entity swaps — exactly the
+near-miss regime the router cascade's 0.7–0.9 uncertainty band contains)
+and random negatives are negatives.  The trained head is what lets the
+cascade's second stage separate "same question, different words" from
+"close embedding, different question" where cosine similarity alone
+cannot (the misroutes the frontier bench measures recovery on).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.questions import QuestionPairGenerator
+from repro.models.reranker import score_pairs
+from repro.tokenizer import HashWordTokenizer
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def pair_bce_loss(params, cfg, ta, ma, tb, mb, labels):
+    """Sigmoid BCE on duplicate logits; labels (B,) in {0, 1}."""
+    logits = score_pairs(params, ta, ma, tb, mb, cfg)
+    logp = jax.nn.log_sigmoid(logits)
+    lognp = jax.nn.log_sigmoid(-logits)
+    return -jnp.mean(labels * logp + (1.0 - labels) * lognp)
+
+
+def train_reranker(params, cfg, tokenizer: HashWordTokenizer, *,
+                   steps: int = 150, batch: int = 32, max_len: int = 24,
+                   lr: float = 1e-3, hard_frac: float = 0.5, seed: int = 0):
+    """Returns (trained params, losses).  CPU-friendly at tiny configs."""
+    gen = QuestionPairGenerator(seed=seed)
+    opt_cfg = AdamWConfig(lr=lr, weight_decay=0.0)
+    opt = init_opt_state(params)
+
+    @jax.jit
+    def step(params, opt, ta, ma, tb, mb, y):
+        loss, grads = jax.value_and_grad(pair_bce_loss)(
+            params, cfg, ta, ma, tb, mb, y)
+        params, opt = adamw_update(params, grads, opt, opt_cfg)
+        return params, opt, loss
+
+    losses = []
+    for _s in range(steps):
+        pairs = gen.generate(batch, dup_frac=0.5, hard_frac=hard_frac)
+        ta, ma = tokenizer.encode_batch([a.text for a, b, y in pairs],
+                                        max_len)
+        tb, mb = tokenizer.encode_batch([b.text for a, b, y in pairs],
+                                        max_len)
+        y = jnp.asarray([float(y) for a, b, y in pairs], jnp.float32)
+        params, opt, loss = step(params, opt, jnp.asarray(ta),
+                                 jnp.asarray(ma), jnp.asarray(tb),
+                                 jnp.asarray(mb), y)
+        losses.append(float(loss))
+    return params, losses

@@ -239,3 +239,165 @@ def test_router_monotone_in_threshold(scores, t):
 def test_band_of():
     b = np.asarray(router_lib.band_of(jnp.asarray([0.5, 0.7, 0.85, 0.95, 1.0])))
     assert list(b) == [-1, 0, 1, 2, 2]
+
+
+def test_band_of_derives_from_active_config():
+    """Regression: the band edges were hardcoded 0.7/0.8/0.9, so a run at
+    tweak_threshold=0.55 misattributed every sim in [0.55, 0.7) to "no
+    band" and squeezed real TWEAK traffic out of the band table."""
+    assert router_lib.band_edges() == (0.7, 0.8, 0.9, 1.01)   # paper default
+    cfg = router_lib.RouterConfig(tweak_threshold=0.55)
+    assert router_lib.band_edges(cfg) == (0.55, 0.7, 0.85, 1.01)
+    scores = jnp.asarray([0.56, 0.72, 0.9, 1.0])
+    # active config: 0.56 is real hit traffic and lands in band 0
+    assert list(np.asarray(router_lib.band_of(scores, cfg))) == [0, 1, 2, 2]
+    # the old hardcoded behaviour (no config) drops it on the floor
+    assert int(router_lib.band_of(scores)[0]) == -1
+
+
+def test_threshold_for_default_cost_snaps_to_legacy_threshold():
+    cfg = router_lib.RouterConfig()
+    tau = router_lib.threshold_for(
+        jnp.full((3,), cfg.default_cost, jnp.float32), cfg)
+    # bit-exact at the default operating point (in float32, the dtype the
+    # routing comparison runs in) — the byte-identity anchor
+    assert all(t == np.float32(cfg.tweak_threshold)
+               for t in np.asarray(tau))
+    taus = np.asarray(router_lib.threshold_for(
+        jnp.linspace(0.0, 1.0, 11).astype(jnp.float32), cfg))
+    assert np.all(np.diff(taus) >= 0)                 # monotone in cost
+    np.testing.assert_allclose(taus[0], cfg.tweak_threshold - cfg.cal_span,
+                               atol=1e-6)
+    np.testing.assert_allclose(taus[-1], 1.0, atol=1e-6)
+
+
+def test_threshold_for_explicit_knots():
+    cfg = router_lib.RouterConfig(cal_costs=(0.0, 1.0), cal_taus=(0.6, 0.95))
+    taus = np.asarray(router_lib.threshold_for(
+        jnp.asarray([0.0, 0.5, 1.0], jnp.float32), cfg))
+    np.testing.assert_allclose(taus, [0.6, 0.775, 0.95], atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(-1, 1.0), min_size=1, max_size=32),
+       st.floats(0.3, 0.95))
+def test_cascade_band_zero_is_legacy_route(scores, t):
+    """band=0 statically elides the uncertainty stage: route_cascade must
+    be decision-identical to the legacy route at tau=tweak_threshold."""
+    cfg = router_lib.RouterConfig(tweak_threshold=t)
+    s = jnp.asarray(scores, jnp.float32)
+    tau = router_lib.threshold_for(
+        jnp.full(s.shape, cfg.default_cost, jnp.float32), cfg)
+    np.testing.assert_array_equal(
+        np.asarray(router_lib.route_cascade(s, tau, cfg)),
+        np.asarray(router_lib.route(s, cfg)))
+
+
+def test_cascade_band_marks_uncertain():
+    cfg = router_lib.RouterConfig(tweak_threshold=0.7, band=0.1)
+    s = jnp.asarray([0.5, 0.66, 0.74, 0.76, 0.9999, 1.0])
+    tau = jnp.full(s.shape, 0.7, jnp.float32)
+    d = list(np.asarray(router_lib.route_cascade(s, tau, cfg)))
+    assert d == [router_lib.MISS, router_lib.UNCERTAIN,
+                 router_lib.UNCERTAIN, router_lib.TWEAK,
+                 router_lib.EXACT, router_lib.EXACT]
+
+
+@pytest.mark.parametrize("index", ["flat", "ivf"])
+def test_lookup_route_touch_byte_identical_to_legacy(index):
+    """The cascade entry point at band=0 + default calibration + default
+    cost must reproduce cache.lookup_and_touch BYTE-for-byte: decisions,
+    scores, shortlist, and every touched state array."""
+    kw = dict(capacity=16, dim=8, topk=4)
+    if index == "ivf":
+        kw.update(index="ivf", nclusters=4, nprobe=4)
+    cfg = _cfg(**kw)
+    rcfg = router_lib.RouterConfig()
+    st_ = cache_lib.init_cache(cfg)
+    for i in range(12):
+        e, *rest = _rand_entry(jax.random.PRNGKey(i), cfg)
+        st_ = cache_lib.insert(st_, cfg, e, *rest)
+    if index == "ivf":
+        from repro.core import index as index_lib
+        st_ = index_lib.build_index(st_, cfg, seed=0)
+    # exact hits, near-band perturbations, cold misses
+    q = jnp.concatenate([
+        st_["emb"][:3],
+        0.9 * st_["emb"][3:6]
+        + 0.3 * jax.random.normal(jax.random.PRNGKey(50), (3, cfg.dim)),
+        jax.random.normal(jax.random.PRNGKey(51), (3, cfg.dim))])
+    q = q / jnp.linalg.norm(q, axis=-1, keepdims=True)
+    ref_state, ref_s, ref_i, ref_d = cache_lib.lookup_and_touch(
+        dict(st_), cfg, rcfg, q)
+    cost = jnp.full((q.shape[0],), rcfg.default_cost, jnp.float32)
+    new, s, i, d, tau, cluster, admit = cache_lib.lookup_route_touch(
+        dict(st_), cfg, rcfg, q, cost)
+    np.testing.assert_array_equal(np.asarray(ref_d), np.asarray(d))
+    np.testing.assert_array_equal(np.asarray(ref_s), np.asarray(s))
+    np.testing.assert_array_equal(np.asarray(ref_i), np.asarray(i))
+    for k in ref_state:
+        if k in cache_lib.ADM_KEYS:
+            continue        # legacy never updates the admission EMA
+        np.testing.assert_array_equal(np.asarray(ref_state[k]),
+                                      np.asarray(new[k]), err_msg=k)
+    # admission defaults: everything admitted
+    assert bool(np.all(np.asarray(admit)))
+
+
+def test_admission_update_closed_form_and_gating():
+    cfg = router_lib.RouterConfig(admit_alpha=0.5, admit_floor=0.4,
+                                  admit_min=2)
+    ema = jnp.ones((4,), jnp.float32)
+    cnt = jnp.zeros((4,), jnp.int32)
+    cluster = jnp.asarray([0, 0, 1, -1])
+    hit = jnp.asarray([False, False, True, True])
+    obs = jnp.ones((4,), bool)
+    ema2, cnt2 = router_lib.admission_update(ema, cnt, cluster, hit, obs,
+                                             cfg)
+    # cluster 0 took 2 misses: (1-a)^2 * 1 + (1-(1-a)^2) * 0 = 0.25
+    # cluster 1 took 1 hit:    (1-a) * 1 + a * 1           = 1.0
+    # cluster -1 (flat / no cluster) is dropped entirely
+    np.testing.assert_allclose(np.asarray(ema2), [0.25, 1.0, 1.0, 1.0],
+                               atol=1e-6)
+    assert list(np.asarray(cnt2)) == [2, 1, 0, 0]
+    # the batched closed form == two sequential single-row updates
+    e_seq, c_seq = jnp.ones((4,), jnp.float32), jnp.zeros((4,), jnp.int32)
+    for r in range(2):
+        e_seq, c_seq = router_lib.admission_update(
+            e_seq, c_seq, cluster[r:r + 1], hit[r:r + 1], obs[r:r + 1], cfg)
+    np.testing.assert_allclose(float(e_seq[0]), float(ema2[0]), atol=1e-6)
+    # gating: cluster 0 is shut (count >= admit_min, ema < floor);
+    # cluster 1 stays open; unclustered rows are always admitted
+    adm = np.asarray(router_lib.admission_admit(
+        ema2, cnt2, jnp.asarray([0, 1, -1]), cfg))
+    assert list(adm) == [False, True, True]
+    # below admit_min observations, never shut (cold clusters get a chance)
+    adm_cold = np.asarray(router_lib.admission_admit(
+        jnp.zeros((4,), jnp.float32), jnp.asarray([1, 0, 0, 0]),
+        jnp.asarray([0]), cfg))
+    assert list(adm_cold) == [True]
+
+
+def test_admission_floor_zero_admits_everything():
+    cfg = router_lib.RouterConfig()          # admit_floor defaults to 0
+    adm = router_lib.admission_admit(
+        jnp.zeros((4,), jnp.float32), jnp.full((4,), 100, jnp.int32),
+        jnp.asarray([0, 1, 2, 3]), cfg)
+    assert bool(np.all(np.asarray(adm)))
+
+
+def test_stage2_combine_commit_and_recovery():
+    cfg = router_lib.RouterConfig(band=0.1)
+    tau = jnp.asarray([0.7, 0.7], jnp.float32)
+    # row 0: strong agreement + confident reranker -> commit, and the
+    # blended-evidence argmax (slot 2) beats the cosine top-1 (misroute
+    # fix); row 1: no live candidates -> never commits
+    scores = jnp.asarray([[0.74, 0.73, 0.72, 0.1],
+                          [-np.inf] * 4], jnp.float32)
+    rerank = jnp.asarray([[2.0, 1.0, 6.0, -3.0], [0.0] * 4], jnp.float32)
+    live = jnp.asarray([[True, True, True, True], [False] * 4])
+    commit, best, conf = router_lib.stage2_combine(scores, rerank, live,
+                                                   tau, cfg)
+    assert bool(commit[0]) and not bool(commit[1])
+    assert int(best[0]) == 2
+    assert 0.0 <= float(conf[1]) <= float(conf[0]) <= 1.0

@@ -201,11 +201,14 @@ def test_distributed_lookup_and_touch_matches_local():
             lt_local = jax.jit(functools.partial(
                 cache_lib.lookup_and_touch, cfg=cfg, router_cfg=rcfg))
             ref_state, ref_s, ref_i, ref_d = lt_local(dict(state), q_embs=q)
+            cost = jnp.full((q.shape[0],), rcfg.default_cost, jnp.float32)
+            (_, _, _, nref_d, nref_tau, nref_cl, nref_ad) = \\
+                cache_lib.lookup_route_touch(dict(state), cfg, rcfg, q, cost)
             sstate = (shard_ivf_cache_state(state, mesh, cfg)
                       if cfg.index == "ivf"
                       else shard_cache_state(state, mesh))
             lt = make_distributed_lookup_and_touch(mesh, cfg, rcfg)
-            new, ds, di, dd = lt(sstate, q)
+            new, ds, di, dd, dtau, dcl, dad = lt(sstate, q, cost)
             out[name] = {
                 "scores": bool(np.allclose(np.asarray(ds),
                                            np.asarray(ref_s), atol=1e-5)),
@@ -219,12 +222,90 @@ def test_distributed_lookup_and_touch_matches_local():
                 "hits": bool(np.array_equal(np.asarray(new["hits"]),
                                             np.asarray(ref_state["hits"]))),
                 "clock": int(new["clock"]) == int(ref_state["clock"]),
+                # band=0 at the default cost: the new cascade path must
+                # reproduce the legacy decisions bit-for-bit, and the
+                # sharded cascade outputs must match the local ones
+                "new_path_legacy": bool(np.array_equal(np.asarray(nref_d),
+                                                       np.asarray(ref_d))),
+                "tau": bool(np.allclose(np.asarray(dtau),
+                                        np.asarray(nref_tau), atol=1e-6)),
+                "cluster": bool(np.array_equal(np.asarray(dcl),
+                                               np.asarray(nref_cl))),
+                "admit": bool(np.array_equal(np.asarray(dad),
+                                             np.asarray(nref_ad))),
             }
         print(json.dumps(out))
     """)
     assert res["n_dev"] == 8
     for name in ("flat", "ivf"):
         assert all(res[name].values()), (name, res[name])
+
+
+def test_distributed_cascade_matches_local():
+    """Sharded stage-1 cascade routing (uncertainty band > 0, varying
+    per-request cost) must be decision-identical to the local
+    lookup_route_touch — the cascade runs AFTER the all_gather top-k
+    merge, so both paths score the same merged shortlist — and the
+    replicated admission EMA must evolve identically (DESIGN.md §13)."""
+    res = run_device_script("""
+        from repro.core import cache as cache_lib
+        from repro.core import index as index_lib
+        from repro.core import router as router_lib
+        from repro.core.distributed import (
+            make_distributed_lookup_and_touch, shard_ivf_cache_state)
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        rcfg = router_lib.RouterConfig(band=0.2, admit_floor=0.4,
+                                       admit_min=1)
+        cfg = cache_lib.CacheConfig(capacity=64, dim=16, topk=4,
+                                    index="ivf", nclusters=8, nprobe=8)
+        B = 48
+        embs = jax.random.normal(jax.random.PRNGKey(0), (B, cfg.dim))
+        qt = jnp.zeros((B, cfg.max_query_tokens), jnp.int32)
+        qm = jnp.ones((B, cfg.max_query_tokens), jnp.float32)
+        rt = jnp.zeros((B, cfg.max_response_tokens), jnp.int32)
+        rm = jnp.ones((B, cfg.max_response_tokens), jnp.float32)
+        state, _ = cache_lib.insert_batch(cache_lib.init_cache(cfg), cfg,
+                                          embs, qt, qm, rt, rm, 40)
+        state = index_lib.build_index(state, cfg, seed=0)
+        # exact hits, band-straddling perturbations, and cold misses
+        q = jnp.concatenate([
+            state["emb"][:8],
+            0.9 * state["emb"][8:16]
+            + 0.45 * jax.random.normal(jax.random.PRNGKey(5), (8, cfg.dim)),
+            jax.random.normal(jax.random.PRNGKey(6), (8, cfg.dim))])
+        q = q / jnp.linalg.norm(q, axis=-1, keepdims=True)
+        cost = jnp.linspace(0.0, 1.0, q.shape[0]).astype(jnp.float32)
+        (ref_state, _, _, ref_d, ref_tau, ref_cl, ref_ad) = \\
+            cache_lib.lookup_route_touch(dict(state), cfg, rcfg, q, cost)
+        lt = make_distributed_lookup_and_touch(mesh, cfg, rcfg)
+        new, ds, di, dd, dtau, dcl, dad = lt(
+            shard_ivf_cache_state(state, mesh, cfg), q, cost)
+        print(json.dumps({
+            "n_dev": len(jax.devices()),
+            "n_uncertain": int((np.asarray(ref_d)
+                                == router_lib.UNCERTAIN).sum()),
+            "decisions": bool(np.array_equal(np.asarray(dd),
+                                             np.asarray(ref_d))),
+            "tau": bool(np.allclose(np.asarray(dtau), np.asarray(ref_tau),
+                                    atol=1e-6)),
+            "cluster": bool(np.array_equal(np.asarray(dcl),
+                                           np.asarray(ref_cl))),
+            "admit": bool(np.array_equal(np.asarray(dad),
+                                         np.asarray(ref_ad))),
+            "adm_ema": bool(np.allclose(np.asarray(new["adm_ema"]),
+                                        np.asarray(ref_state["adm_ema"]),
+                                        atol=1e-6)),
+            "adm_count": bool(np.array_equal(
+                np.asarray(new["adm_count"]),
+                np.asarray(ref_state["adm_count"]))),
+        }))
+    """)
+    assert res["n_dev"] == 8
+    assert res["n_uncertain"] > 0, res       # the band is actually exercised
+    for k in ("decisions", "tau", "cluster", "admit", "adm_ema",
+              "adm_count"):
+        assert res[k], (k, res)
 
 
 def test_sharded_bank_cross_replica_visibility():

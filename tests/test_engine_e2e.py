@@ -182,8 +182,13 @@ def test_handle_batch_result_metadata(stack):
     assert len(res.responses) == 2 and len(res.meta) == 2
     assert {m["decision"] for m in res.meta} <= {router.MISS, router.TWEAK,
                                                  router.EXACT}
-    assert all(set(m) == {"sim", "decision", "band", "gen_tokens"}
+    assert all(set(m) == {"sim", "decision", "band", "gen_tokens",
+                          "cost", "stage2"}
                for m in res.meta)
+    # single-stage engine at the default operating point: every row is
+    # routed at the configured default cost and never hits stage 2
+    assert all(m["cost"] == eng.router_cfg.default_cost for m in res.meta)
+    assert not any(m["stage2"] for m in res.meta)
     assert res.big_tokens + res.small_tokens == \
         sum(m["gen_tokens"] for m in res.meta)
     assert res.big_tokens == eng.stats.big_tokens
@@ -271,3 +276,76 @@ def test_gptcache_baseline_verbatim(stack):
     assert score > 0.999
     cq2, cr2, s2 = bl.get("completely unrelated mortgage question")
     assert cr2 is None
+
+
+def test_engine_band_zero_decisions_match_legacy_route(stack):
+    """Byte-identity satellite: at band=0 + default calibration, the full
+    handle_batch path makes exactly the legacy per-score decisions and
+    never enters stage 2."""
+    import jax.numpy as jnp
+    eng = _engine(stack)
+    assert not eng.bank.cascading
+    eng.handle_batch(["identity question one", "identity question two"],
+                     max_new_tokens=4)
+    res = eng.handle_batch_result(
+        ["identity question one", "identity question two",
+         "identity question one", "a brand new identity question"],
+        max_new_tokens=4)
+    for m in res.meta:
+        want = int(router.route(jnp.asarray([m["sim"]], jnp.float32),
+                                eng.router_cfg)[0])
+        assert m["decision"] == want
+        assert not m["stage2"]
+    assert eng.stats.uncertain == 0
+
+
+def test_engine_band_without_reranker_rejected(stack):
+    with pytest.raises(ValueError, match="reranker"):
+        _engine(stack, band=0.2)
+
+
+def test_engine_cascade_resolves_uncertain_rows(stack):
+    """band > 0 + reranker: uncertain rows cross stage 2 and come back
+    with a terminal decision; the serve path still completes."""
+    tok, ecfg, eparams, big, small = stack
+    rr_cfg = tiny_reranker_config(VOCAB)
+    rr_params = init_reranker(jax.random.PRNGKey(9), rr_cfg)
+    eng = TweakLLMEngine(
+        tokenizer=tok, embedder_params=eparams, embedder_cfg=ecfg,
+        big=big, small=small,
+        cache_cfg=CacheConfig(capacity=64, dim=ecfg.d_model, topk=4),
+        # a band wide enough that every non-EXACT score is uncertain:
+        # stage 2 must fire and resolve on this batch deterministically
+        router_cfg=RouterConfig(tweak_threshold=0.5, band=2.0),
+        reranker=(rr_params, rr_cfg))
+    assert eng.bank.cascading
+    eng.handle_batch(["how to cook pasta sauce quickly"], max_new_tokens=4)
+    res = eng.handle_batch_result(
+        ["how to cook a pasta sauce fast", "unrelated zebra migration"],
+        max_new_tokens=4)
+    assert eng.stats.uncertain >= 1
+    assert any(m["stage2"] for m in res.meta)
+    assert all(m["decision"] in (router.MISS, router.TWEAK, router.EXACT)
+               for m in res.meta)
+    assert all(isinstance(r, str) and r != "" for r in res.responses)
+
+
+def test_engine_cost_threshold_moves_operating_point(stack):
+    """The per-request cost threshold selects the operating point: cost=1
+    pins tau at 1.0 (nothing short of exact hits), cost=0 relaxes it, and
+    decisions stay monotone across operating points."""
+    seed_q = "the capital city of france is paris"
+    probe = ["the capital town of france is paris"]
+    res = {}
+    for c in (0.0, 1.0):
+        eng = _engine(stack)            # fresh bank per operating point
+        eng.handle_batch([seed_q], max_new_tokens=4)
+        r = eng.handle_batch_result(probe, max_new_tokens=4,
+                                    cost_thresholds=c)
+        res[c] = r.meta[0]
+    assert res[0.0]["cost"] == 0.0 and res[1.0]["cost"] == 1.0
+    assert res[0.0]["sim"] == res[1.0]["sim"]   # same state, same embedder
+    if res[1.0]["sim"] < RouterConfig().exact_threshold:
+        assert res[1.0]["decision"] == router.MISS
+    hit = lambda d: d != router.MISS
+    assert hit(res[0.0]["decision"]) or not hit(res[1.0]["decision"])

@@ -1,0 +1,136 @@
+"""Cross-encoder reranker invariants (cascade stage 2, DESIGN.md §13).
+
+The router cascade trusts ``score_shortlist`` to compare a query against
+its cosine shortlist; these tests pin the properties that trust rests on:
+scores must depend on CONTENT only (not on how inputs were padded, and
+not on where a candidate sits in the shortlist), and the shortlist entry
+point must agree with independent per-pair scoring.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from _hypothesis_shim import given, settings, st
+
+from repro.models.reranker import (init_reranker, score_pairs,
+                                   score_shortlist, tiny_reranker_config)
+
+CFG = tiny_reranker_config(vocab_size=512)
+PARAMS = init_reranker(jax.random.PRNGKey(0), CFG)
+
+
+def _tok(key, n, length, real_len=None):
+    """(tokens, mask) batch with ids in [4, vocab) and ``real_len`` valid
+    positions (defaults to full)."""
+    toks = jax.random.randint(key, (n, length), 4, CFG.vocab_size,
+                              dtype=jnp.int32)
+    if real_len is None:
+        mask = jnp.ones((n, length), jnp.float32)
+    else:
+        mask = jnp.broadcast_to(
+            (jnp.arange(length)[None, :] < real_len).astype(jnp.float32),
+            (n, length))
+        toks = jnp.where(mask.astype(bool), toks, 0)
+    return toks, mask
+
+
+def test_score_pairs_shapes():
+    ta, ma = _tok(jax.random.PRNGKey(1), 3, 8)
+    tb, mb = _tok(jax.random.PRNGKey(2), 3, 6)
+    out = score_pairs(PARAMS, ta, ma, tb, mb, CFG)
+    assert out.shape == (3,)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_score_pairs_padding_independence():
+    """Scores are a function of the VALID tokens only: re-padding either
+    segment to a longer buffer must not move the logit (packed positions;
+    float tolerance — XLA may reassociate reductions over the padding)."""
+    ta, ma = _tok(jax.random.PRNGKey(3), 2, 5, real_len=5)
+    tb, mb = _tok(jax.random.PRNGKey(4), 2, 4, real_len=4)
+    ref = score_pairs(PARAMS, ta, ma, tb, mb, CFG)
+
+    def pad(t, m, extra):
+        return (jnp.pad(t, ((0, 0), (0, extra))),
+                jnp.pad(m, ((0, 0), (0, extra))))
+
+    for ea, eb in [(3, 0), (0, 5), (4, 2)]:
+        ta2, ma2 = pad(ta, ma, ea)
+        tb2, mb2 = pad(tb, mb, eb)
+        got = score_pairs(PARAMS, ta2, ma2, tb2, mb2, CFG)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-5,
+                                   err_msg=f"pad a+{ea} b+{eb}")
+
+
+def test_score_pairs_masked_tokens_are_invisible():
+    """Garbage under the mask must not change the score."""
+    ta, ma = _tok(jax.random.PRNGKey(5), 2, 6, real_len=3)
+    tb, mb = _tok(jax.random.PRNGKey(6), 2, 6, real_len=4)
+    ref = score_pairs(PARAMS, ta, ma, tb, mb, CFG)
+    junk = jax.random.randint(jax.random.PRNGKey(7), ta.shape, 4,
+                              CFG.vocab_size, dtype=jnp.int32)
+    ta_junk = jnp.where(ma.astype(bool), ta, junk)
+    got = score_pairs(PARAMS, ta_junk, ma, tb, mb, CFG)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_score_shortlist_matches_per_pair():
+    """The batched shortlist entry point is exactly K independent
+    score_pairs calls."""
+    b, k, sq, sc = 2, 3, 5, 4
+    qt, qm = _tok(jax.random.PRNGKey(8), b, sq)
+    ct = jax.random.randint(jax.random.PRNGKey(9), (b, k, sc), 4,
+                            CFG.vocab_size, dtype=jnp.int32)
+    cm = jnp.ones((b, k, sc), jnp.float32)
+    out = score_shortlist(PARAMS, qt, qm, ct, cm, CFG)
+    assert out.shape == (b, k)
+    for i in range(b):
+        for j in range(k):
+            ref = score_pairs(PARAMS, qt[i:i + 1], qm[i:i + 1],
+                              ct[i, j][None], cm[i, j][None], CFG)
+            np.testing.assert_allclose(float(out[i, j]), float(ref[0]),
+                                       rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), k=st.integers(2, 5))
+def test_score_shortlist_permutation_equivariant(seed, k):
+    """Permuting the candidate axis permutes the scores identically — a
+    candidate's score cannot depend on its position in the shortlist."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    qt, qm = _tok(k1, 2, 5)
+    ct = jax.random.randint(k2, (2, k, 4), 4, CFG.vocab_size,
+                            dtype=jnp.int32)
+    cm = jnp.ones((2, k, 4), jnp.float32)
+    perm = jax.random.permutation(k3, k)
+    ref = score_shortlist(PARAMS, qt, qm, ct, cm, CFG)
+    got = score_shortlist(PARAMS, qt, qm, ct[:, perm], cm[:, perm], CFG)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref)[:, perm],
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_reranker_training_separates_duplicates():
+    """A short training run must push duplicate pairs above non-duplicates
+    on held-out generated pairs — the separation the cascade's second
+    stage relies on inside the uncertainty band."""
+    from repro.data.questions import QuestionPairGenerator
+    from repro.tokenizer import HashWordTokenizer
+    from repro.training.reranker_train import train_reranker
+
+    tok = HashWordTokenizer(CFG.vocab_size)
+    params = init_reranker(jax.random.PRNGKey(1), CFG)
+    params, losses = train_reranker(params, CFG, tok, steps=150, batch=32,
+                                    seed=0)
+    # per-batch loss is noisy; compare first/last windows
+    assert np.mean(losses[-10:]) < np.mean(losses[:10])
+    gen = QuestionPairGenerator(seed=123)
+    pairs = gen.generate(64, dup_frac=0.5, hard_frac=0.5)
+    ta, ma = tok.encode_batch([a.text for a, _, _ in pairs], 24)
+    tb, mb = tok.encode_batch([b.text for _, b, _ in pairs], 24)
+    logits = np.asarray(score_pairs(params, jnp.asarray(ta), jnp.asarray(ma),
+                                    jnp.asarray(tb), jnp.asarray(mb), CFG))
+    y = np.asarray([y for _, _, y in pairs], bool)
+    assert y.any() and (~y).any()
+    assert logits[y].mean() > logits[~y].mean() + 0.5
