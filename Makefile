@@ -2,7 +2,7 @@
 
 PYTHONPATH_PREFIX := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-sanitize test-multidevice analyze bench bench-scheduler bench-replicas bench-index bench-generate bench-prefill bench-frontier bench-smoke bench-baseline dev-deps lint
+.PHONY: test test-sanitize test-multidevice analyze bench bench-scheduler bench-replicas bench-index bench-generate bench-prefill bench-frontier bench-speculative bench-smoke bench-baseline dev-deps lint
 
 test:
 	$(PYTHONPATH_PREFIX) python -m pytest -x -q
@@ -55,6 +55,11 @@ bench-prefill:
 # (DESIGN.md §13); emits the repo-standard trajectory file
 bench-frontier:
 	$(PYTHONPATH_PREFIX) python -m benchmarks.run --only frontier --json BENCH_frontier.json
+
+# cached-response draft-verify vs plain fused decode, swept over draft
+# overlap x batch x spec_k, plus TWEAK-stream acceptance (DESIGN.md §14)
+bench-speculative:
+	$(PYTHONPATH_PREFIX) python -m benchmarks.run --only speculative --json BENCH_speculative.json
 
 # the CI perf gate, runnable locally: scaled-down suites + regression check
 bench-smoke:

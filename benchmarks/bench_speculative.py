@@ -1,0 +1,203 @@
+"""Speculative decode: cached-response drafts vs plain fused decode (§14).
+
+The TWEAK path's output is, by construction, a light edit of a cached
+response whose token ids the bank already holds — so the engine feeds
+them to ``Generator`` as a free draft and the fused loop verifies
+``spec_k`` positions per forward pass, accepting the longest greedy-
+matching prefix (lossless; DESIGN.md §14).  Two parts:
+
+* ``bench_spec_generate`` — spec-vs-plain fused decode swept over draft
+  overlap fraction {1.0, 0.9, 0.5, 0.0} x batch x spec_k.  The draft is
+  the plain run's own output with its tail rewritten to a provably
+  never-matching pattern, so the overlap fraction — and therefore the
+  measured ``acceptance_rate`` — is exact and machine-independent.
+  ``spec_speedup`` (plain us / spec us, interleaved A/B medians) is the
+  gated perf ratio: the acceptance floor is >= 1.5x at full overlap and
+  >= 0.95x (no regression) at zero overlap, where every verify block
+  is rejected and speculation degenerates to per-row fallback decode.
+* ``bench_tweak_acceptance`` — measured acceptance on a REAL
+  dup/confusable TWEAK stream: a trained tiny LM serves as both big and
+  small model of a ``TweakLLMEngine``, anchor queries seed the bank,
+  their paired duplicates / hard negatives route through the router,
+  and the engine drafts each cached response into the tweak decode.
+  The training matters: an UNDERtrained LM's greedy continuation is so
+  prompt-sensitive that the tweak output diverges from the cached
+  response at token 0 and speculation never arms — 600 steps collapses
+  it enough that cached and tweaked responses genuinely agree (the
+  paper's premise).  The resulting ``EngineStats.acceptance_rate`` is
+  deterministic (greedy decode, seeded traffic) and gated as a quality
+  metric.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CacheConfig, RouterConfig, TweakLLMEngine
+from repro.data import QuestionPairGenerator, token_stream_batches
+from repro.models import ModelConfig, build_model
+from repro.serving import GenerateConfig, Generator, SamplerConfig
+from .common import VOCAB, csv_row, get_tokenizer, get_trained_embedder
+
+GEN_VOCAB = 4096
+PROMPT_LEN = 16
+MNT = 64
+_cache: dict = {}
+
+
+def _generator(mnt: int, k: int) -> Generator:
+    cfg = ModelConfig(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                      d_ff=128, vocab_size=GEN_VOCAB, max_seq_len=1024,
+                      dtype="float32")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return Generator(m, params, GenerateConfig(
+        max_new_tokens=mnt, sampler=SamplerConfig(vocab_size=GEN_VOCAB),
+        spec_k=k))
+
+
+def _overlap_drafts(ref, overlap: float, mnt: int):
+    """Drafts agreeing with ``ref`` on exactly the first overlap*mnt
+    positions; the tail is shifted into a disjoint token (never 0-2, never
+    the reference id), so greedy verify rejects every tail position."""
+    n = int(round(overlap * mnt))
+    wrong = (ref + 1 - 3) % (GEN_VOCAB - 3) + 3
+    pos = np.arange(mnt)[None, :]
+    did = np.where(pos < n, ref, wrong).astype(np.int32)
+    return did, np.full((ref.shape[0],), mnt, np.int32)
+
+
+def _time_spec(gen, batch, drafts, mnt, reps):
+    """Median seconds per call for (spec, plain-fused), interleaved A/B
+    pairs like bench_generate so runner stalls hit both arms alike."""
+    gen.generate_with_lengths(batch, max_new_tokens=mnt, seed=0,
+                              drafts=drafts)                  # compile spec
+    acc_rate = (gen.last_spec_stats["accepted"]
+                / max(gen.last_spec_stats["proposed"], 1))
+    gen.generate_with_lengths(batch, max_new_tokens=mnt, seed=0)  # plain
+    ts_spec, ts_plain = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        gen.generate_with_lengths(batch, max_new_tokens=mnt, seed=0,
+                                  drafts=drafts)
+        ts_spec.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        gen.generate_with_lengths(batch, max_new_tokens=mnt, seed=0)
+        ts_plain.append(time.perf_counter() - t0)
+    return statistics.median(ts_spec), statistics.median(ts_plain), acc_rate
+
+
+def bench_spec_generate(batches=(1, 8), ks=(4, 8),
+                        overlaps=(1.0, 0.9, 0.5, 0.0), reps=5):
+    """Spec-vs-plain decode throughput per (batch, k, overlap) bucket.
+
+    Greedy output is draft-independent (lossless contract), so the plain
+    run's tokens ARE the model's true continuation — rewriting their tail
+    dials in the overlap exactly."""
+    for k in ks:
+        gen = _generator(MNT, k)
+        for b in batches:
+            batch = {"tokens": jax.random.randint(
+                jax.random.PRNGKey(1), (b, PROMPT_LEN), 5, GEN_VOCAB)}
+            ref, lengths, _ = gen.generate_with_lengths(
+                batch, max_new_tokens=MNT, seed=0)
+            toks = int(lengths.sum())
+            for ov in overlaps:
+                drafts = _overlap_drafts(np.asarray(ref), ov, MNT)
+                s_spec, s_plain, acc = _time_spec(gen, batch, drafts,
+                                                  MNT, reps)
+                csv_row(f"spec_b{b}_k{k}_ov{int(ov * 100)}", s_spec * 1e6,
+                        f"plain_us={s_plain * 1e6:.0f};"
+                        f"tok_s_spec={toks / s_spec:.0f};"
+                        f"tok_s_plain={toks / s_plain:.0f};tokens={toks}",
+                        spec_speedup=round(s_plain / max(s_spec, 1e-9), 2),
+                        acceptance_rate=round(acc, 3))
+
+
+def _trained_speclm(steps: int = 600):
+    """Tiny LM trained far enough that its greedy continuations of a
+    query and of the tweak prompt built from that query's cached
+    response actually overlap (see module docstring)."""
+    if "lm" not in _cache:
+        cfg = ModelConfig(name="speclm", num_layers=2, d_model=96,
+                          num_heads=4, num_kv_heads=2, d_ff=192,
+                          vocab_size=VOCAB, max_seq_len=512,
+                          dtype="float32")
+        from repro.training import (AdamWConfig, init_opt_state,
+                                    make_train_step)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(7))
+        step = jax.jit(make_train_step(model, AdamWConfig(lr=3e-3),
+                                       total_steps=steps))
+        opt = init_opt_state(params)
+        stream = token_stream_batches(get_tokenizer(), 8, 64, seed=3)
+        for _ in range(steps):
+            batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+            params, opt, _ = step(params, opt, batch)
+        _cache["lm"] = (model, params)
+    return _cache["lm"]
+
+
+def bench_tweak_acceptance(n_pairs: int = 48, spec_k: int = 4,
+                           mnt: int = 16, smoke: bool = False):
+    """Acceptance rate the engine actually achieves on mixed
+    dup / hard-negative / random traffic.
+
+    Big and small share one trained LM, so the cached response is the
+    same model's greedy continuation of the original prompt — the
+    closest CPU-trainable stand-in for the paper's premise that cached
+    and tweaked responses largely agree.  ``n_pairs`` is NOT scaled down
+    for smoke: the rate is a ratio of small per-row counts, so shrinking
+    the stream makes the gated value noisy, and serving is cheap next to
+    the one-time LM training anyway."""
+    del smoke
+    tok = get_tokenizer()
+    eparams, ecfg, _ = get_trained_embedder()
+    model, params = _trained_speclm()
+    gcfg = GenerateConfig(max_new_tokens=mnt,
+                          sampler=SamplerConfig(vocab_size=VOCAB))
+    big = Generator(model, params, gcfg)
+    small = Generator(model, params, dataclasses.replace(gcfg, spec_k=spec_k))
+    assert small.speculation_ready
+    eng = TweakLLMEngine(
+        tokenizer=tok, embedder_params=eparams, embedder_cfg=ecfg,
+        big=big, small=small,
+        cache_cfg=CacheConfig(capacity=512, dim=ecfg.d_model, topk=4),
+        router_cfg=RouterConfig(tweak_threshold=0.3))
+    pairs = QuestionPairGenerator(seed=5).generate(n_pairs, dup_frac=0.75,
+                                                   hard_frac=0.25)
+    eng.handle_batch([a.text for a, _, _ in pairs], max_new_tokens=mnt)
+    t0 = time.perf_counter()
+    eng.handle_batch([b.text for _, b, _ in pairs], max_new_tokens=mnt)
+    us = (time.perf_counter() - t0) / n_pairs * 1e6
+    s = eng.stats
+    assert s.tweak > 0, "dup stream must route some TWEAK traffic"
+    assert s.proposed > 0, "TWEAK rows must carry cached-response drafts"
+    csv_row("spec_tweak_stream", us,
+            f"tweak={s.tweak};proposed={s.proposed};accepted={s.accepted};"
+            f"spec_steps={s.spec_steps}",
+            acceptance_rate=round(s.acceptance_rate, 3))
+
+
+def main(smoke: bool = False):
+    if smoke:
+        # CI perf-gate subset: the b=1 dispatch-bound cell (the regime a
+        # CPU runner can meaningfully measure — at b=8 the tiny model's
+        # k-wide lm_head matmul is compute-bound and the verify block
+        # buys nothing) at ALL overlap points, because the
+        # 1.5x-at-full-overlap and 0.95x-at-zero-overlap acceptance
+        # numbers are both gated, so both ends of the sweep must run
+        bench_spec_generate(batches=(1,), ks=(4,), reps=7)
+        bench_tweak_acceptance(smoke=True)
+        return
+    bench_spec_generate()
+    bench_tweak_acceptance()
+
+
+if __name__ == "__main__":
+    main()

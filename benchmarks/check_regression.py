@@ -37,8 +37,9 @@ import sys
 # leak in), so they get double the tolerance to keep the gate from
 # flaking on runner heterogeneity while still catching real collapses.
 QUALITY_KEYS = ("recall", "band_agree", "decision_agree",
-                "scaling_eff", "hit_ratio", "frontier_auc")
-RATIO_KEYS = ("speedup",)
+                "scaling_eff", "hit_ratio", "frontier_auc",
+                "acceptance_rate")
+RATIO_KEYS = ("speedup", "spec_speedup")
 LATENCY_KEYS = ("us_per_call",)
 
 

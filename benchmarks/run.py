@@ -13,6 +13,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   index       clustered (IVF) vs flat cache lookup         (DESIGN.md §7)
   generate    fused on-device vs host-loop decode          (DESIGN.md §8)
   prefill     prefix-KV reuse + suffix buckets vs full     (DESIGN.md §9)
+  speculative cached-response draft verify vs plain decode (DESIGN.md §14)
 
   PYTHONPATH=src python -m benchmarks.run [--only fig2,...] \
       [--smoke] [--json BENCH_ci.json]
@@ -34,9 +35,10 @@ import time
 import traceback
 
 SUITES = ("fig2", "frontier", "fig34567", "fig89", "microbench", "roofline",
-          "scheduler", "replicas", "index", "generate", "prefill")
+          "scheduler", "replicas", "index", "generate", "prefill",
+          "speculative")
 SMOKE_SUITES = ("microbench", "index", "scheduler", "replicas", "generate",
-                "prefill", "frontier")
+                "prefill", "frontier", "speculative")
 SCHEMA = "tweakllm-bench/v1"
 
 
@@ -73,8 +75,9 @@ def main() -> None:
 
     from . import (bench_frontier, bench_generate, bench_index,
                    bench_prefill, bench_replicas, bench_scheduler,
-                   fig2_precision_recall, fig34567_quality,
-                   fig89_cost_analysis, microbench, roofline)
+                   bench_speculative, fig2_precision_recall,
+                   fig34567_quality, fig89_cost_analysis, microbench,
+                   roofline)
     mods = {
         "fig2": fig2_precision_recall,
         "frontier": bench_frontier,
@@ -87,6 +90,7 @@ def main() -> None:
         "index": bench_index,
         "generate": bench_generate,
         "prefill": bench_prefill,
+        "speculative": bench_speculative,
     }
     print("name,us_per_call,derived")
     failures = 0

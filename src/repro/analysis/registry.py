@@ -144,6 +144,12 @@ JIT_REGISTRY: Tuple[JitSite, ...] = (
             static=("mnt",),
             note="whole decode loop in one device call; mnt bounds the "
                  "while_loop trip count and the output block shape"),
+    JitSite("serving/generate.py", "Generator.__init__._decode_fused_spec",
+            static=("mnt", "k"),
+            note="draft-verify speculative decode (DESIGN.md §14): verify "
+                 "phase + per-row fallback phase in one device call; mnt "
+                 "and the verify block width k fix every carried shape; "
+                 "greedy-only so no PRNG key is carried"),
     # ---- serving: paged KV pool + persistent decode session ---------
     JitSite("serving/paged_kv.py", "pack_caches", donate=(0,),
             note="dense prefill KV -> pool pages; donates the pool storage "
@@ -180,10 +186,18 @@ JIT_REGISTRY: Tuple[JitSite, ...] = (
     JitSite("kernels/decode_attention/ops.py", "decode_attention",
             static=("block_t", "impl"),
             note="decode attention over the KV cache"),
+    JitSite("kernels/decode_attention/ops.py", "decode_attention_block",
+            static=("block_t", "impl"),
+            note="speculative verify q-block (DESIGN.md §14): K draft "
+                 "queries per row in one pass with in-block causal masking"),
     JitSite("kernels/paged_attention/ops.py", "paged_decode_attention",
             static=("impl",),
             note="decode attention gathered through the page block table "
                  "(DESIGN.md §11)"),
+    JitSite("kernels/paged_attention/ops.py", "paged_decode_attention_block",
+            static=("impl",),
+            note="speculative verify q-block over the page pool "
+                 "(DESIGN.md §14); per-query causality via slot positions"),
     JitSite("kernels/flash_attention/ops.py", "flash_attention",
             static=("causal", "window", "block_q", "block_k", "impl"),
             note="prefill flash attention; window/causal change the "

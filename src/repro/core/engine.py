@@ -75,6 +75,12 @@ class EngineStats:
     # Real query tokens across ALL requests: the prompt volume an
     # uncached all-Big deployment would have ingested (baseline input).
     baseline_prompt_tokens: int = 0
+    # speculative-decode counters (DESIGN.md §14): cached-response draft
+    # tokens fed to TWEAK verify blocks, how many were accepted (emitted
+    # without a plain decode step), and verify-block iterations run.
+    proposed: int = 0
+    accepted: int = 0
+    spec_steps: int = 0
     big_cost_per_token: float = 25.0
     small_cost_per_token: float = 1.0
 
@@ -95,6 +101,11 @@ class EngineStats:
     @property
     def hit_rate(self) -> float:
         return (self.tweak + self.exact) / max(self.total, 1)
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the verify loop accepted (§14)."""
+        return self.accepted / max(self.proposed, 1)
 
     @classmethod
     def aggregate(cls, parts) -> "EngineStats":
@@ -117,7 +128,8 @@ class EngineStats:
         for f in ("total", "miss", "tweak", "exact", "uncertain",
                   "recovered", "suppressed_inserts", "big_tokens",
                   "small_tokens", "big_prompt_tokens", "small_prompt_tokens",
-                  "baseline_prompt_tokens"):
+                  "baseline_prompt_tokens", "proposed", "accepted",
+                  "spec_steps"):
             setattr(out, f, sum(getattr(p, f) for p in parts))
         return out
 
@@ -175,6 +187,12 @@ class SharedCacheBank:
         self.axis = axis
         # host-side mirror of cached texts (display only; tokens are truth)
         self.text_store: Dict[int, Tuple[str, str]] = {}
+        # host-side mirror of cached-response TOKEN ids, the speculation
+        # drafts (DESIGN.md §14): the exact ids generation produced (a
+        # text round-trip through the tokenizer need not be identity, and
+        # draft quality is acceptance rate).  Overwritten on slot reuse
+        # alongside text_store.
+        self.draft_store: Dict[int, List[int]] = {}
         self.insert_seq = 0
         # per-batch-size default-cost arrays (explicit device_put once per
         # size — the hot loop must not transfer implicitly per dispatch)
@@ -660,6 +678,7 @@ class TweakLLMEngine:
         new_qs = [queries[i] for i in ids]
         cqs = [cq for cq, _ in cached]
         crs = [cr for _, cr in cached]
+        drafts = self._tweak_drafts(slots, crs, max_new_tokens)
 
         suffix_budget = None
         if self._prefix_path_available():
@@ -667,11 +686,53 @@ class TweakLLMEngine:
                 max_new_tokens, len(self._tweak_prefix_ids()))
         if suffix_budget is None:
             self._run_tweak_full(new_qs, cqs, crs, ids, responses,
-                                 max_new_tokens, gen_tokens, prompt_tokens)
+                                 max_new_tokens, gen_tokens, prompt_tokens,
+                                 drafts)
         else:
             self._run_tweak_prefixed(new_qs, cqs, crs, ids, responses,
                                      max_new_tokens, suffix_budget,
-                                     gen_tokens, prompt_tokens)
+                                     gen_tokens, prompt_tokens, drafts)
+
+    def _tweak_drafts(self, slots, crs, max_new_tokens):
+        """Per-row speculation drafts for a TWEAK sub-batch, or None.
+
+        The tweak prompt asks the small model to minimally edit the cached
+        response, so the cached response's own token ids (plus the
+        terminating EOS) are the natural draft for the verify loop
+        (DESIGN.md §14).  Ids come from the bank's draft store (the exact
+        generated ids) with a tokenize-the-mirror fallback for slots
+        populated outside this process.  Returns ``(ids (B, D), lens
+        (B,))`` or None when the small generator is not speculation-ready
+        (wrong config/arch/sampler — ``getattr`` so wrapped generators
+        degrade gracefully) or the per-call budget is below ``spec_k``.
+        """
+        if not getattr(self.small, "speculation_ready", False):
+            return None
+        if self.small.cfg.spec_k > max_new_tokens:
+            return None
+        eos = self.small.cfg.eos_id
+        rows = []
+        for s, cr in zip(slots, crs):
+            ids = self.bank.draft_store.get(s)
+            if ids is None:
+                t, m = self.tok.encode_batch(
+                    [cr], self.cache_cfg.max_response_tokens, add_bos=False)
+                ids = [tt for tt, mm in zip(t[0].tolist(), m[0].tolist())
+                       if mm > 0]
+            rows.append(list(ids) + [eos])
+        width = max(len(r) for r in rows)
+        did = np.full((len(rows), width), eos, np.int32)
+        for j, r in enumerate(rows):
+            did[j, :len(r)] = r
+        return did, np.asarray([len(r) for r in rows], np.int32)  # hostsync: ok drafts are host-resident cached-response ids
+
+    def _bill_spec_stats(self):
+        """Fold the small generator's last speculative call into stats."""
+        st = getattr(self.small, "last_spec_stats", None)
+        if st:
+            self.stats.proposed += st["proposed"]
+            self.stats.accepted += st["accepted"]
+            self.stats.spec_steps += st["spec_steps"]
 
     def _emit_tweak_rows(self, rows, ids, out, lengths, ended, responses,
                          gen_tokens):
@@ -688,15 +749,28 @@ class TweakLLMEngine:
             gen_tokens[i] = n_gen
 
     def _run_tweak_full(self, new_qs, cqs, crs, ids, responses,
-                        max_new_tokens, gen_tokens, prompt_tokens):
+                        max_new_tokens, gen_tokens, prompt_tokens,
+                        drafts=None):
         """Fallback: prefill the whole Appendix-A prompt (no prefix reuse)."""
         toks, mask = tweak_lib.build_tweak_batch(
             self.tok, new_qs, cqs, crs, self._tweak_encode_len(max_new_tokens))
         real_lens = mask.sum(axis=1).astype(np.int64).tolist()
         toks, mask, b = pad_to_buckets(toks, mask)
+        kw = {}
+        if drafts is not None:
+            # bucket padding added rows: give them empty drafts
+            did, dlen = drafts
+            pad = toks.shape[0] - did.shape[0]
+            if pad:
+                did = np.concatenate(
+                    [did, np.zeros((pad, did.shape[1]), did.dtype)])
+                dlen = np.concatenate([dlen, np.zeros((pad,), dlen.dtype)])
+            kw["drafts"] = (did, dlen)
         out, lengths, ended = self.small.generate_with_lengths(
             {"tokens": jnp.asarray(toks)}, max_new_tokens=max_new_tokens,
-            seed=self._next_seed())
+            seed=self._next_seed(), **kw)
+        if drafts is not None:
+            self._bill_spec_stats()
         self._emit_tweak_rows(range(len(ids)), ids, out, lengths, ended,
                               responses, gen_tokens)
         for j, i in enumerate(ids):
@@ -705,7 +779,7 @@ class TweakLLMEngine:
 
     def _run_tweak_prefixed(self, new_qs, cqs, crs, ids, responses,
                             max_new_tokens, suffix_budget, gen_tokens,
-                            prompt_tokens):
+                            prompt_tokens, drafts=None):
         """Hot path: shared-prefix KV reuse + length-bucketed suffixes.
 
         Each row prefills only its variable suffix over the cached
@@ -727,10 +801,23 @@ class TweakLLMEngine:
             sub_m = mask[rows][:, :bucket]
             sub_t = pad_to_buckets(sub_t, sub_m)[0]
             pc = self._small_prefix_cache(sub_t.shape[0])
+            kw = {}
+            if drafts is not None:
+                did, dlen = drafts
+                sub_d, sub_l = did[rows], dlen[rows]
+                pad = sub_t.shape[0] - sub_d.shape[0]
+                if pad:
+                    sub_d = np.concatenate(
+                        [sub_d, np.zeros((pad, sub_d.shape[1]), sub_d.dtype)])
+                    sub_l = np.concatenate(
+                        [sub_l, np.zeros((pad,), sub_l.dtype)])
+                kw["drafts"] = (sub_d, sub_l)
             out, lengths, ended = self.small.generate_with_lengths(
                 {"tokens": jnp.asarray(sub_t)},
                 max_new_tokens=max_new_tokens, seed=self._next_seed(),
-                prefix_cache=pc)
+                prefix_cache=pc, **kw)
+            if drafts is not None:
+                self._bill_spec_stats()
             self._emit_tweak_rows(rows, ids, out, lengths, ended,
                                   responses, gen_tokens)
             for row in rows:
@@ -771,6 +858,7 @@ class TweakLLMEngine:
         slots = jax.device_get(slots).tolist()  # hostsync: ok the one per-insert sync
         for j in range(n):
             self._text_store[slots[j]] = (texts[j], resp_texts[j])
+            self.bank.draft_store[slots[j]] = list(resp_tokens[j])
         # IVF maintenance: k-means recluster when enough writes piled up
         # (or the member table overflowed).  No-op for flat caches.
         self.bank.maybe_reindex()

@@ -5,8 +5,8 @@ import functools
 
 import jax
 
-from .kernel import decode_attention_pallas
-from .ref import decode_attention_ref
+from .kernel import decode_attention_block_pallas, decode_attention_pallas
+from .ref import decode_attention_block_ref, decode_attention_ref
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "impl"))
@@ -18,3 +18,17 @@ def decode_attention(q, k, v, cache_len, *, block_t: int = 1024,
             q, k, v, cache_len, block_t=block_t,
             interpret=jax.default_backend() != "tpu")
     return decode_attention_ref(q, k, v, cache_len)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "impl"))
+def decode_attention_block(q, k, v, cache_len, *, block_t: int = 1024,
+                           impl: str = "pallas"):
+    """Speculative verify (DESIGN.md §14): q (B,K,H,dh) — K draft queries
+    per row whose keys sit at slots ``cache_len + i`` — against cache k/v
+    (B,T,Hk,dh) with pre-block valid prefix cache_len (B,); causal inside
+    the block."""
+    if impl == "pallas":
+        return decode_attention_block_pallas(
+            q, k, v, cache_len, block_t=block_t,
+            interpret=jax.default_backend() != "tpu")
+    return decode_attention_block_ref(q, k, v, cache_len)

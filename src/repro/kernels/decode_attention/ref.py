@@ -23,3 +23,26 @@ def decode_attention_ref(q, k, v, cache_len):
     w = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgt,btkd->bkgd", w, v.astype(jnp.float32))
     return out.reshape(b, h, dh).astype(q.dtype)
+
+
+def decode_attention_block_ref(q, k, v, cache_len):
+    """q: (B,K,H,dh) — K speculative queries per row (DESIGN.md §14).
+
+    k/v: (B,T,Hk,dh); cache_len: (B,) counts the slots filled BEFORE the
+    block; the block's own keys occupy slots ``cache_len + i``.  Query i
+    attends causally within the block: slots ``< cache_len + i + 1``.
+    Returns (B,K,H,dh).  K=1 equals ``decode_attention_ref`` with
+    ``cache_len + 1``.
+    """
+    b, kq, h, dh = q.shape
+    t, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    qg = q.reshape(b, kq, hk, g, dh)
+    s = jnp.einsum("bikgd,btkd->bkgit", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (dh ** -0.5)
+    limit = cache_len[:, None] + jnp.arange(kq)[None, :] + 1       # (B,K)
+    valid = jnp.arange(t)[None, None, :] < limit[:, :, None]       # (B,K,T)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgit,btkd->bikgd", w, v.astype(jnp.float32))
+    return out.reshape(b, kq, h, dh).astype(q.dtype)

@@ -60,6 +60,94 @@ def _kernel(tbl_ref, q_ref, k_ref, v_ref, sp_ref, o_ref, m_scr, l_scr,
                     ).astype(o_ref.dtype)
 
 
+def _kernel_block(tbl_ref, qpos_ref, q_ref, k_ref, v_ref, sp_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, g: int):
+    """Q-block variant (DESIGN.md §14): the panel carries K*g rows — K
+    speculative queries × g grouped heads.  Query i (panel rows i*g ..)
+    sits at absolute position ``q_pos + i`` and masks keys by position:
+    ``slot_pos <= q_pos + i`` — causality inside the block falls out of
+    the same comparison that orders it against the cache."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)            # (K*g, dh)
+    k = k_ref[0, :, 0].astype(jnp.float32)      # (page, dh)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    dh = q.shape[-1]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * (dh ** -0.5)
+    sp = sp_ref[0]                              # (1, page)
+    row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // g
+    s = jnp.where((sp >= 0) & (sp <= qpos_ref[0] + row), s, NEG)
+
+    m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_new = acc_prev * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...], l_scr[...], acc_scr[...] = m_new, l_new, acc_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _final():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def paged_decode_attention_block_pallas(q, kp, vp, block_tbl, slot_pos,
+                                        q_pos, *, interpret: bool = True):
+    """q: (B,K,H,dh); kp/vp: (P+1,page,Hk,dh); block_tbl: (B,npg) int32;
+    slot_pos: (B,cap) int32 (-1 = invalid); q_pos: (B,) absolute position
+    of each row's first query.  Returns (B,K,H,dh)."""
+    b, kq, h, dh = q.shape
+    page, hk = kp.shape[1], kp.shape[2]
+    npg = block_tbl.shape[1]
+    cap = slot_pos.shape[1]
+    g = h // hk
+    qt = jnp.moveaxis(q.reshape(b, kq, hk, g, dh), 2, 1).reshape(
+        b * hk, kq * g, dh)
+    sp = jnp.pad(slot_pos, ((0, 0), (0, npg * page - cap)),
+                 constant_values=-1).reshape(b, npg, page)
+    tbl = block_tbl.astype(jnp.int32)
+    qpos = jnp.broadcast_to(q_pos[:, None], (b, hk)).reshape(b * hk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b * hk, npg),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bh, j, tbl: (bh,)),
+            pl.BlockSpec((1, kq * g, dh), lambda bh, j, tbl: (bh, 0, 0)),
+            pl.BlockSpec((1, page, 1, dh),
+                         lambda bh, j, tbl: (tbl[bh // hk, j], 0,
+                                             bh % hk, 0)),
+            pl.BlockSpec((1, page, 1, dh),
+                         lambda bh, j, tbl: (tbl[bh // hk, j], 0,
+                                             bh % hk, 0)),
+            pl.BlockSpec((1, 1, page), lambda bh, j, tbl: (bh // hk, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, kq * g, dh), lambda bh, j, tbl: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kq * g, 1), jnp.float32),
+            pltpu.VMEM((kq * g, 1), jnp.float32),
+            pltpu.VMEM((kq * g, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel_block, g=g),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hk, kq * g, dh), q.dtype),
+        interpret=interpret,
+    )(tbl, qpos, qt, kp, vp, sp)
+    return jnp.moveaxis(out.reshape(b, hk, kq, g, dh), 1, 2).reshape(
+        b, kq, h, dh)
+
+
 def paged_decode_attention_pallas(q, kp, vp, block_tbl, slot_pos, *,
                                   interpret: bool = True):
     """q: (B,H,dh); kp/vp: (P+1,page,Hk,dh); block_tbl: (B,npg) int32;

@@ -5,8 +5,9 @@ import functools
 
 import jax
 
-from .kernel import paged_decode_attention_pallas
-from .ref import paged_decode_attention_ref
+from .kernel import (paged_decode_attention_block_pallas,
+                     paged_decode_attention_pallas)
+from .ref import paged_decode_attention_block_ref, paged_decode_attention_ref
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))
@@ -19,3 +20,17 @@ def paged_decode_attention(q, kp, vp, block_tbl, slot_pos, *,
             q, kp, vp, block_tbl, slot_pos,
             interpret=jax.default_backend() != "tpu")
     return paged_decode_attention_ref(q, kp, vp, block_tbl, slot_pos)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def paged_decode_attention_block(q, kp, vp, block_tbl, slot_pos, q_pos, *,
+                                 impl: str = "pallas"):
+    """Speculative verify (DESIGN.md §14): q (B,K,H,dh) draft queries, row
+    query i at absolute position ``q_pos + i``, against pool pages through
+    block_tbl; per-query causal masking via slot_pos positions."""
+    if impl == "pallas":
+        return paged_decode_attention_block_pallas(
+            q, kp, vp, block_tbl, slot_pos, q_pos,
+            interpret=jax.default_backend() != "tpu")
+    return paged_decode_attention_block_ref(q, kp, vp, block_tbl, slot_pos,
+                                            q_pos)

@@ -47,3 +47,29 @@ def paged_decode_attention_ref(q, kp, vp, block_tbl, slot_pos):
     w = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgt,btkd->bkgd", w, v.astype(jnp.float32))
     return out.reshape(b, h, dh).astype(q.dtype)
+
+
+def paged_decode_attention_block_ref(q, kp, vp, block_tbl, slot_pos, q_pos):
+    """Speculative verify over paged KV (DESIGN.md §14).
+
+    q: (B,K,H,dh) — K draft queries per row, query i at absolute position
+    ``q_pos + i`` (q_pos (B,)); its key is already scattered into the
+    pages at that slot.  Validity per query: ``slot_pos >= 0`` (written)
+    AND ``slot_pos <= q_pos + i`` (causal).  Returns (B,K,H,dh).
+    """
+    b, kq, h, dh = q.shape
+    hk = kp.shape[2]
+    cap = slot_pos.shape[1]
+    g = h // hk
+    k = gather_pages(kp, block_tbl, cap)
+    v = gather_pages(vp, block_tbl, cap)
+    qg = q.reshape(b, kq, hk, g, dh)
+    s = jnp.einsum("bikgd,btkd->bkgit", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (dh ** -0.5)
+    limit = q_pos[:, None] + jnp.arange(kq)[None, :]          # (B,K)
+    valid = ((slot_pos[:, None, :] >= 0)
+             & (slot_pos[:, None, :] <= limit[:, :, None]))   # (B,K,cap)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgit,btkd->bikgd", w, v.astype(jnp.float32))
+    return out.reshape(b, kq, h, dh).astype(q.dtype)

@@ -325,6 +325,118 @@ def decode_attention(params, x, cache, cfg: ModelConfig, *, window: int = 0,
     return out, new_cache
 
 
+# ----------------------------------------------------- q-block decode (k>1)
+
+def _paged_decode_attention_block(params, x, cache, cfg: ModelConfig, *,
+                                  use_rope=True):
+    """(B, k)-block decode against paged KV (speculative verify, §14).
+
+    Same contract as ``_paged_decode_attention`` with k query positions
+    per row: K/V for positions ``[pos, pos + k)`` are scattered
+    optimistically through the block table (the caller rewinds rejected
+    suffixes via ``paged_kv.rewind_kv``), and the queries attend over
+    the full gathered cache with causal masking — in-block causality
+    falls out of the position comparison, no special path.  Writes whose
+    logical slot falls beyond the capacity are redirected to the TRASH
+    page (their query rows are garbage that budget-clamping upstream
+    never emits — same discard-by-masking contract as evicted rows).
+    """
+    b, kblk = x.shape[0], x.shape[1]
+    kp, vp, tbl = cache["kp"], cache["vp"], cache["block_tbl"]
+    page = kp.shape[1]
+    npg = tbl.shape[1]
+    cap = cache["slot_pos"].shape[1]
+    trash = kp.shape[0] - 1
+    pos = cache["pos"]                                   # (B,) per-row
+    q, k, v = _project_qkv(params, x, cfg)
+    cur = pos[:, None] + jnp.arange(kblk, dtype=jnp.int32)[None, :]  # (B,k)
+    if use_rope:
+        q = apply_rope(q, cur, cfg.rope_theta)
+        k = apply_rope(k, cur, cfg.rope_theta)
+    slot = jnp.minimum(cur, cap - 1)                     # (B,k) clamped
+    pg = jnp.take_along_axis(tbl, slot // page, axis=1)
+    pg = jnp.where(cur < cap, pg, trash)                 # overflow -> TRASH
+    off = slot % page
+    kp = kp.at[pg, off].set(k.astype(kp.dtype))
+    vp = vp.at[pg, off].set(v.astype(vp.dtype))
+    c = jnp.broadcast_to(jnp.arange(cap, dtype=jnp.int32)[None, :], (b, cap))
+    in_blk = (c >= pos[:, None]) & (c < pos[:, None] + kblk)
+    slot_pos = jnp.where(in_blk, c, cache["slot_pos"])
+    kg = kp[tbl].reshape(b, npg * page, *kp.shape[2:])[:, :cap]
+    vg = vp[tbl].reshape(b, npg * page, *vp.shape[2:])[:, :cap]
+    valid = slot_pos >= 0
+    ctx = attend(q, kg, vg, cur, slot_pos, causal=True, window=0,
+                 impl="naive", extra_mask=valid)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, params["w_o"])
+    new_cache = dict(cache)
+    new_cache.update(kp=kp, vp=vp, slot_pos=slot_pos, pos=pos + kblk)
+    return out, new_cache
+
+
+def decode_attention_block(params, x, cache, cfg: ModelConfig, *,
+                           use_rope=True):
+    """(B, k)-block decode: k candidate tokens per row in ONE forward.
+
+    The speculative verify step (DESIGN.md §14): ``x`` (B, k, d) embeds
+    the last accepted token followed by k-1 draft tokens; all k
+    positions' K/V are written optimistically at slots
+    ``[pos, pos + k)`` and the k queries attend causally over the whole
+    cache (in-block causality comes from the position mask, since slot
+    index == absolute position for global attention).  The caller keeps
+    the longest accepted prefix and rewinds the rest
+    (``paged_kv.rewind_kv``).
+
+    Unlike ``decode_attention``, the dense cache's ``pos`` MUST already
+    be per-row (B,) — rows of a speculating batch sit at different
+    depths after their first divergence (``paged_kv.row_pos_caches``
+    converts a fresh prefill).  With k == 1 this computes exactly what
+    ``decode_attention`` computes (same write mask, same attend shapes),
+    which the differential tests pin token-for-token.
+    """
+    if "kp" in cache:
+        return _paged_decode_attention_block(params, x, cache, cfg,
+                                             use_rope=use_rope)
+    b, kblk = x.shape[0], x.shape[1]
+    cap = cache["k"].shape[1]
+    pos = cache["pos"]                                   # (B,) per-row
+    q, k, v = _project_qkv(params, x, cfg)
+    cur = pos[:, None] + jnp.arange(kblk, dtype=jnp.int32)[None, :]  # (B,k)
+    if use_rope:
+        q = apply_rope(q, cur, cfg.rope_theta)
+        k = apply_rope(k, cur, cfg.rope_theta)
+    # Masked gather-write instead of a scatter: slot c of row b takes the
+    # block's (c - pos_b)-th token when c lands inside [pos_b, pos_b + k)
+    # — elementwise over the sequence dim like the one-hot single-token
+    # write, so GSPMD never all-gathers the cache.  Positions beyond the
+    # capacity simply don't write (their queries are discarded upstream).
+    c = jnp.broadcast_to(jnp.arange(cap, dtype=jnp.int32)[None, :], (b, cap))
+    in_blk = (c >= pos[:, None]) & (c < pos[:, None] + kblk)
+    hot = in_blk[:, :, None, None]
+    new_cache = dict(cache)
+    if kblk == 1:
+        # Fallback-phase hot path (every draft-exhausted row decodes
+        # through here): the gather-select degenerates to a broadcast of
+        # the single token, same cost class as the one-hot write above.
+        k_new, v_new = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+    else:
+        idx = jnp.clip(c - pos[:, None], 0, kblk - 1)
+        kv_sel = idx[:, :, None, None]
+        k_new = jnp.take_along_axis(k.astype(cache["k"].dtype), kv_sel,
+                                    axis=1)
+        v_new = jnp.take_along_axis(v.astype(cache["v"].dtype), kv_sel,
+                                    axis=1)
+    new_cache["k"] = jnp.where(hot, k_new, cache["k"])
+    new_cache["v"] = jnp.where(hot, v_new, cache["v"])
+    new_cache["slot_pos"] = jnp.where(in_blk, c, cache["slot_pos"])
+    new_cache["pos"] = pos + kblk
+    k_pos = new_cache["slot_pos"]
+    valid = k_pos >= 0
+    ctx = attend(q, new_cache["k"], new_cache["v"], cur, k_pos,
+                 causal=True, window=0, impl="naive", extra_mask=valid)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, params["w_o"])
+    return out, new_cache
+
+
 # ------------------------------------------------------------- cross attn
 
 def init_cross_attention(key, cfg: ModelConfig):

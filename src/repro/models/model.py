@@ -114,6 +114,32 @@ class Model:
         return (not self.is_encdec and cfg.sliding_window == 0
                 and kinds <= {ATTN, MOE})
 
+    @property
+    def supports_spec_decode(self) -> bool:
+        """True when decode can verify (B, k) draft blocks (DESIGN.md §14).
+
+        Speculative verify writes k positions optimistically and REWINDS
+        the rejected suffix, so every cached layer must be a plain KV
+        cache whose slots can be invalidated by position: decoder-only
+        global-attention stacks (ATTN/MOE, no sliding window) — the same
+        condition as paged decode, and for the same structural reason.
+        Recurrent state (Mamba2/RG-LRU) can't rewind; windowed ring
+        buffers may have overwritten the slots a rewind needs back.
+        """
+        return self.supports_paged_decode
+
+    def decode_block(self, params, tokens, caches):
+        """tokens (B, k) -> (logits (B, k, V), caches); speculative verify.
+
+        Caches must carry per-row positions (``paged_kv.row_pos_caches``)
+        and the caller owns acceptance + rewind of rejected suffixes.
+        """
+        if not self.supports_spec_decode:
+            raise NotImplementedError(
+                f"{self.cfg.name}: block (speculative) decode unsupported "
+                f"for this architecture — use decode_step")
+        return tf_lib.decode_block(params, tokens, caches, self.cfg)
+
     def prefill_prefix(self, params, tokens):
         """KV state of a shared prefix: tokens (B, P) -> caches pytree.
 

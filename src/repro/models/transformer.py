@@ -224,6 +224,28 @@ def _block_decode(kind: str, p, x, cache, cfg: ModelConfig):
     raise ValueError(kind)
 
 
+def _block_decode_block(kind: str, p, x, cache, cfg: ModelConfig):
+    """(B, k)-block decode step for one layer (speculative verify, §14).
+
+    Only plain-KV global attention qualifies — recurrent mixers can't
+    rewind rejected positions and windowed ring buffers overwrite slots
+    the rewind would need back; ``Model.supports_spec_decode`` gates
+    callers to ATTN/MOE stacks before tracing reaches here.
+    """
+    if kind not in (ATTN, MOE) or cfg.sliding_window > 0:
+        raise ValueError(
+            f"block decode requires global-attention KV layers, got {kind!r}")
+    h = apply_norm(p["norm1"], x, cfg.norm_type)
+    a, cache = attn_lib.decode_attention_block(p["attn"], h, cache, cfg)
+    x = x + a
+    h2 = apply_norm(p["norm2"], x, cfg.norm_type)
+    if kind == MOE:
+        m, _ = moe_lib.apply_moe(p["moe"], h2, cfg)
+    else:
+        m = apply_mlp(p["mlp"], h2, cfg.mlp_type)
+    return x + m, cache
+
+
 # ----------------------------------------------------------------- stacks
 
 def _maybe_remat(fn, cfg: ModelConfig):
@@ -331,6 +353,28 @@ def _run_stack_decode(params, caches, x, cfg: ModelConfig):
     return x, {"scan": new_scan, "rem": tuple(new_rem), "pos": caches["pos"] + 1}
 
 
+def _run_stack_decode_block(params, caches, x, cfg: ModelConfig):
+    def period_body(x, period_in):
+        pp, pc = period_in
+        new_c = []
+        for j, kind in enumerate(cfg.block_pattern):
+            x, c = _block_decode_block(kind, pp[j], x, pc[j], cfg)
+            new_c.append(c)
+        return x, tuple(new_c)
+
+    if cfg.pattern_periods > 0:
+        x, new_scan = jax.lax.scan(period_body, x, (params["scan"], caches["scan"]))
+    else:
+        new_scan = caches["scan"]
+    new_rem = []
+    for i, kind in enumerate(cfg.pattern_remainder):
+        x, c = _block_decode_block(kind, params["rem"][i], x, caches["rem"][i], cfg)
+        new_rem.append(c)
+    kblk = x.shape[1]
+    return x, {"scan": new_scan, "rem": tuple(new_rem),
+               "pos": caches["pos"] + kblk}
+
+
 # ----------------------------------------------------------------- heads
 
 def _embed_inputs(params, tokens, cfg: ModelConfig, prefix_embeds=None):
@@ -400,6 +444,22 @@ def decode_step(params, token, caches, cfg: ModelConfig):
     x, caches = _run_stack_decode(params, caches, x, cfg)
     logits = _logits(params, x, cfg)
     return logits[:, 0], caches
+
+
+def decode_block(params, tokens, caches, cfg: ModelConfig):
+    """tokens: (B, k) int32 verify block.  Returns (logits (B,k,V), caches).
+
+    The speculative verify forward (DESIGN.md §14): logits[:, i] is the
+    model's next-token distribution after consuming tokens[:, :i+1] on
+    top of the cache.  Requires per-row (B,) cache positions (every KV
+    leaf AND the top-level ``pos``) — ``paged_kv.row_pos_caches``
+    converts a fresh prefill; rows diverge after their first rejected
+    draft so a scalar position cannot represent the batch.
+    """
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shu.constrain(x, shu.BATCH, None, None)
+    x, caches = _run_stack_decode_block(params, caches, x, cfg)
+    return _logits(params, x, cfg), caches
 
 
 def cross_entropy(logits, targets, mask, vocab_size: int):

@@ -51,7 +51,7 @@ import numpy as np
 
 from . import paged_kv as paged_lib
 from .generate import Generator
-from .sampler import sample
+from .sampler import greedy_ids, mask_vocab, sample
 
 
 class NoFreeSlots(RuntimeError):
@@ -73,16 +73,35 @@ class DecodeSession:
 
     def __init__(self, gen: Generator, *, slots: int, capacity: int,
                  seed: int = 0,
-                 pool: Optional[paged_lib.PagePool] = None):
+                 pool: Optional[paged_lib.PagePool] = None,
+                 spec_k: int = 1):
         if not gen.model.supports_paged_decode:
             raise NotImplementedError(
                 f"{gen.model.cfg.name}: paged KV decode unsupported")
+        if spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+        if spec_k > 1:
+            # Speculation is lossless only under deterministic greedy
+            # argmax (DESIGN.md §14); same gating as GenerateConfig.
+            if gen.cfg.sampler.temperature > 0:
+                raise ValueError(
+                    "spec_k > 1 requires greedy sampling "
+                    f"(temperature={gen.cfg.sampler.temperature})")
+            if not gen.model.supports_spec_decode:
+                raise ValueError(
+                    f"{gen.model.cfg.name}: speculative decode unsupported "
+                    f"for this architecture")
+            if spec_k > gen.cfg.max_new_tokens:
+                raise ValueError(
+                    f"spec_k={spec_k} exceeds the "
+                    f"max_new_tokens={gen.cfg.max_new_tokens} budget")
         self.gen = gen
         self.model = gen.model
         self.params = gen.params
         self.cfg = gen.cfg
         self.slots = slots
         self.capacity = capacity
+        self.spec_k = spec_k
         self.mnt = gen.cfg.max_new_tokens
         if pool is None:
             pool = paged_lib.PagePool(
@@ -103,6 +122,7 @@ class DecodeSession:
         model, cfg = self.model, self.cfg
         eos, mnt = cfg.eos_id, self.mnt
         sampler = cfg.sampler
+        spec_k = self.spec_k            # trace-time constant
 
         def splice_one(kp, vp, bt, pos, slot_pos, k, v, pos_d, slot_pos_d,
                        slot_ids, tbl, writable):
@@ -127,12 +147,17 @@ class DecodeSession:
                     "slot_pos": slot_pos}
 
         @functools.partial(jax.jit, donate_argnums=(0,))
-        def _admit(state, dense_caches, logits0, slot_ids, tbl, writable):
+        def _admit(state, dense_caches, logits0, slot_ids, tbl, writable,
+                   did=None, dlen=None):
             """Splice a prefilled cohort into free slots, one device call.
 
             Step-0 sampling uses the session key UNSPLIT — exactly the
             dense fused loop's schedule, so an inaugural full cohort
-            replays ``_decode_fused`` bitwise.
+            replays ``_decode_fused`` bitwise.  A spec_k > 1 session also
+            splices the cohort's draft buffers (``did`` (k, mnt) /
+            ``dlen`` (k,)) and arms speculation for rows whose draft
+            predicted the first emitted token (DESIGN.md §14) — so
+            mid-flight joins speculate exactly like inaugural rows.
             """
             dense = paged_lib.kv_leaves(dense_caches)
             it = iter(dense)
@@ -155,7 +180,7 @@ class DecodeSession:
             row_toks = jnp.full((t0.shape[0], mnt), eos, jnp.int32)
             row_toks = jax.lax.dynamic_update_slice_in_dim(
                 row_toks, t0[:, None], 0, axis=1)
-            return {
+            out = {
                 "caches": caches,
                 "key": state["key"],
                 "tok": state["tok"].at[slot_ids].set(t0),
@@ -166,6 +191,15 @@ class DecodeSession:
                 "eos_done": state["eos_done"].at[slot_ids].set(done0),
                 "occupied": state["occupied"].at[slot_ids].set(True),
             }
+            if spec_k > 1:
+                spec0 = ~done0 & (dlen > 0) & (t0 == did[:, 0])
+                out.update(
+                    draft=state["draft"].at[slot_ids].set(did),
+                    draft_len=state["draft_len"].at[slot_ids].set(dlen),
+                    spec_on=state["spec_on"].at[slot_ids].set(spec0),
+                    prop=state["prop"], acc=state["acc"],
+                    spec_steps=state["spec_steps"])
+            return out
 
         def step_body(params, state):
             """One decode step over every slot — the chunk loop body.
@@ -192,6 +226,83 @@ class DecodeSession:
             return {"caches": caches, "key": key, "tok": t, "toks": toks,
                     "n_emitted": n_emitted, "lengths": lengths,
                     "eos_done": new_eos, "occupied": state["occupied"]}
+
+        def step_body_spec(params, state):
+            """One (slots, k) verify block over every row — the spec_k > 1
+            chunk body (DESIGN.md §14).
+
+            Every occupied row runs the same k-wide ``decode_block``; a
+            row still speculating verifies its draft and accepts
+            ``a ∈ [1, k]`` tokens, a row whose draft diverged or ran out
+            accepts exactly its one greedy token (``a = 1`` — position 0
+            of the block is bitwise the plain decode step, since in-block
+            causal masking hides the optimistic writes), and the k - a
+            rejected cache positions are rewound.  Greedy-only, so the
+            session key is carried untouched.  Token-for-token identical
+            to the plain ``step_body`` trace for any join/leave pattern.
+            """
+            k = spec_k
+            tok, ne = state["tok"], state["n_emitted"]
+            draft, dlen = state["draft"], state["draft_len"]
+            b = tok.shape[0]
+            act = (state["occupied"] & ~state["eos_done"] & (ne < mnt))
+            spec = act & state["spec_on"]
+            gidx = jnp.clip(
+                ne[:, None] + jnp.arange(k - 1, dtype=jnp.int32)[None, :],
+                0, mnt - 1)
+            x = jnp.concatenate(
+                [tok[:, None], jnp.take_along_axis(draft, gidx, axis=1)],
+                axis=1)                                          # (B, k)
+            logits, caches = model.decode_block(params, x, state["caches"])
+            g = greedy_ids(mask_vocab(logits, sampler))          # (B, k)
+            dpos = (ne[:, None]
+                    + jnp.arange(k - 1, dtype=jnp.int32)[None, :])
+            dval = jnp.take_along_axis(
+                draft, jnp.clip(dpos, 0, mnt - 1), axis=1)
+            match = (g[:, :k - 1] == dval) & (dpos < dlen[:, None])
+            lmatch = jnp.sum(
+                jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+            iota_k = jnp.broadcast_to(
+                jnp.arange(k, dtype=jnp.int32)[None, :], (b, k))
+            eos_idx = jnp.min(jnp.where(g == eos, iota_k, k), axis=1)
+            a_spec = jnp.minimum(jnp.minimum(lmatch + 1, eos_idx + 1),
+                                 mnt - ne)
+            a = jnp.where(spec, a_spec,
+                          jnp.where(act, 1, 0).astype(jnp.int32))
+            last = jnp.clip(a - 1, 0, k - 1)
+            tlast = jnp.take_along_axis(g, last[:, None], axis=1)[:, 0]
+            ended_now = (a > 0) & (tlast == eos)
+            lengths = jnp.where(ended_now, ne + a, state["lengths"])
+            cm = jnp.broadcast_to(
+                jnp.arange(mnt, dtype=jnp.int32)[None, :], (b, mnt))
+            sel = jnp.clip(cm - ne[:, None], 0, k - 1)
+            val = jnp.take_along_axis(g, sel, axis=1)
+            in_rng = (cm >= ne[:, None]) & (cm < (ne + a)[:, None])
+            toks = jnp.where(in_rng, val, state["toks"])
+            tok = jnp.where(a > 0, tlast, tok)
+            caches = paged_lib.rewind_kv(caches, k - a)
+            ne2 = ne + a
+            n_fed = jnp.clip(dlen - ne, 0, k - 1)
+            return {
+                "caches": caches, "key": state["key"], "tok": tok,
+                "toks": toks, "n_emitted": ne2, "lengths": lengths,
+                "eos_done": state["eos_done"] | ended_now,
+                "occupied": state["occupied"],
+                "draft": draft, "draft_len": dlen,
+                # Full acceptance keeps a row speculating (drafts re-sync
+                # after a local tweak); rejection or exhaustion drops it.
+                "spec_on": spec & (a == k) & (ne2 < dlen),
+                "prop": state["prop"] + jnp.sum(jnp.where(spec, n_fed, 0)),
+                "acc": state["acc"] + jnp.sum(
+                    jnp.where(spec, jnp.minimum(lmatch, a), 0)),
+                "spec_steps": state["spec_steps"]
+                + jnp.any(spec).astype(jnp.int32),
+            }
+
+        if spec_k > 1:
+            # Spec sessions decode in k-wide verify blocks; _chunk and
+            # _step_once pick this up through the closure.
+            step_body = step_body_spec
 
         def active(state):
             return (state["occupied"] & ~state["eos_done"]
@@ -243,6 +354,11 @@ class DecodeSession:
                 lengths=state["lengths"].at[slot_ids].set(0),
                 eos_done=state["eos_done"].at[slot_ids].set(False),
                 occupied=state["occupied"].at[slot_ids].set(False))
+            if spec_k > 1:
+                out.update(
+                    draft=state["draft"].at[slot_ids].set(0),
+                    draft_len=state["draft_len"].at[slot_ids].set(0),
+                    spec_on=state["spec_on"].at[slot_ids].set(False))
             return out
 
         self._admit = _admit
@@ -262,7 +378,7 @@ class DecodeSession:
         self.pool.adopt(caches0)
         b, mnt = self.slots, self.mnt
         eos = self.cfg.eos_id
-        return {
+        state = {
             "caches": caches0,
             "key": jax.random.PRNGKey(jax.device_put(np.uint32(seed))),
             "tok": jnp.full((b,), eos, jnp.int32),
@@ -272,22 +388,59 @@ class DecodeSession:
             "eos_done": jnp.zeros((b,), bool),
             "occupied": jnp.zeros((b,), bool),
         }
+        if self.spec_k > 1:
+            # rewind_kv carries a per-row top-level position; paged
+            # leaves are already per-row, so this only lifts the counter.
+            state["caches"] = paged_lib.row_pos_caches(state["caches"], b)
+            state.update(
+                draft=jnp.zeros((b, mnt), jnp.int32),
+                draft_len=jnp.zeros((b,), jnp.int32),
+                spec_on=jnp.zeros((b,), bool),
+                prop=jnp.zeros((), jnp.int32),
+                acc=jnp.zeros((), jnp.int32),
+                spec_steps=jnp.zeros((), jnp.int32))
+        return state
 
     # --------------------------------------------------------- protocol
     @property
     def free_slots(self) -> int:
         return len(self._free_slots)
 
+    @property
+    def spec_stats(self) -> Dict[str, int]:
+        """Cumulative speculation counters (DESIGN.md §14).
+
+        ``proposed`` drafted tokens fed to verify blocks, ``accepted``
+        drafted tokens emitted, ``spec_steps`` verify iterations that had
+        at least one speculating row.  Call at step boundaries: reading
+        them costs one device sync (a spec_k == 1 session costs nothing).
+        """
+        if self.spec_k == 1:
+            return {"proposed": 0, "accepted": 0, "spec_steps": 0}
+        prop, acc, steps = jax.device_get(  # hostsync: ok stats readout at a step boundary, caller-paced
+            (self.state["prop"], self.state["acc"],
+             self.state["spec_steps"]))
+        return {"proposed": int(prop),    # hostsync: ok already host-side
+                "accepted": int(acc),     # hostsync: ok already host-side
+                "spec_steps": int(steps)}  # hostsync: ok already host-side
+
     def admit(self, tokens, tags: Optional[Sequence[Any]] = None,
-              slots: Optional[Sequence[int]] = None) -> List[int]:
+              slots: Optional[Sequence[int]] = None,
+              drafts: Optional[Any] = None) -> List[int]:
         """Splice a cohort of prompts (k, S) into free slots.
 
         Returns the slot ids used.  ``tags`` ride along to ``harvest``
         (request ids); ``slots`` pins explicit slot choices (tests use
-        this to prove slot-stable bitwise identity).  All-or-nothing:
-        raises ``NoFreeSlots`` / ``PagePoolExhausted`` / ``ValueError``
-        before touching device state.
+        this to prove slot-stable bitwise identity).  ``drafts`` is an
+        optional ``(ids (k, D), lens (k,))`` pair of host int arrays —
+        per-row draft continuations (cached-response token ids) that a
+        ``spec_k > 1`` session verifies in k-wide blocks (DESIGN.md §14);
+        rows whose draft is empty (``lens == 0``) decode plainly.
+        All-or-nothing: raises ``NoFreeSlots`` / ``PagePoolExhausted`` /
+        ``ValueError`` before touching device state.
         """
+        if drafts is not None and self.spec_k == 1:
+            raise ValueError("drafts require a spec_k > 1 session")
         tokens = jnp.asarray(tokens, jnp.int32)
         k, s = tokens.shape
         if s + self.mnt + 1 > self.capacity:
@@ -306,6 +459,18 @@ class DecodeSession:
                                  "per row")
             if any(c not in self._free_slots for c in chosen):
                 raise NoFreeSlots(f"requested slots {chosen} not all free")
+        spec_args = ()
+        if self.spec_k > 1:
+            # Pad/clip to the mnt-column draft block the chunk body
+            # indexes — same host-side normalisation as the fused path.
+            did = np.zeros((k, self.mnt), np.int32)
+            dlen = np.zeros((k,), np.int32)
+            if drafts is not None:
+                raw_ids = np.asarray(drafts[0], np.int32)  # hostsync: ok drafts are host-resident cached-response ids
+                w = min(raw_ids.shape[1], self.mnt)
+                did[:, :w] = raw_ids[:, :w]
+                dlen = np.minimum(np.asarray(drafts[1], np.int32), self.mnt)  # hostsync: ok drafts are host-resident cached-response ids
+            spec_args = (jax.device_put(did), jax.device_put(dlen))
         tbl, writable = self.pool.alloc_block_table(k, self.capacity)
         try:
             logits0, dense = self.gen._prefill(
@@ -314,7 +479,7 @@ class DecodeSession:
                 self.state, dense, logits0,
                 jax.device_put(np.asarray(chosen, np.int32)),  # hostsync: ok host slot ids entering jit
                 jax.device_put(tbl.astype(np.int32)),
-                jax.device_put(writable))
+                jax.device_put(writable), *spec_args)
         except Exception:
             self.pool.free_block_table(tbl, writable)
             raise
@@ -331,6 +496,9 @@ class DecodeSession:
         ``fused=True`` is one device call; ``fused=False`` is the
         host-stepped differential oracle (same computation, one dispatch
         per token) — byte-identical by the PR 4 fused-loop argument.
+        On a ``spec_k > 1`` session a "step" is one verify-block
+        iteration, which emits up to ``spec_k`` tokens per speculating
+        row — the chunk still exits early once every row is done.
         """
         if fused:
             self.state = self._chunk(self.params, self.state, steps)

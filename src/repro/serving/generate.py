@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.models.model import Model
 from . import paged_kv as paged_lib
-from .sampler import SamplerConfig, masked_sample, sample
+from .sampler import SamplerConfig, greedy_ids, mask_vocab, masked_sample, sample
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +47,29 @@ class GenerateConfig:
     paged: bool = False
     page_size: int = 16
     pool_pages: int = 0
+    # Draft-verify speculative decode (DESIGN.md §14): when a call supplies
+    # per-row draft token ids, each fused-loop iteration verifies a
+    # (B, spec_k) block in ONE forward and accepts the longest greedy-
+    # matching prefix plus one correction token — token-for-token identical
+    # to plain fused decode, lossless only because greedy argmax is
+    # deterministic.  spec_k is the verify block width; 1 degenerates to
+    # per-row single-token decode (still draft-driven bookkeeping).
+    spec_k: int = 1
+
+    def __post_init__(self):
+        # Reject incoherent combos up front — no silent fallback.
+        if self.spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {self.spec_k}")
+        if self.spec_k > self.max_new_tokens:
+            raise ValueError(
+                f"spec_k ({self.spec_k}) > max_new_tokens "
+                f"({self.max_new_tokens}): a verify block can never exceed "
+                f"the decode budget")
+        if self.spec_k > 1 and self.sampler.temperature > 0:
+            raise ValueError(
+                "speculative decode is greedy-only (temperature 0): the "
+                "lossless acceptance rule compares argmax choices; set "
+                "spec_k=1 or temperature=0.0")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,12 +95,22 @@ class Generator:
         self.model = model
         self.params = params
         self.cfg = gen_cfg
+        if gen_cfg.spec_k > 1 and not model.supports_spec_decode:
+            raise ValueError(
+                f"{model.cfg.name}: spec_k={gen_cfg.spec_k} but this "
+                f"architecture cannot verify draft blocks (recurrent state "
+                f"/ windowed KV can't rewind) — use spec_k=1")
         # Fallback per-call seeds when the caller threads none: every batch
         # gets a fresh key stream instead of replaying PRNGKey(0) forever.
         self._auto_seed = itertools.count()
         # Page pool for cfg.paged decode, built lazily on first use so
         # dense-only generators allocate nothing (DESIGN.md §11).
         self._pool: Optional[paged_lib.PagePool] = None
+        # Speculation counters: cumulative across calls, plus the last
+        # call's slice — the engine aggregates these into EngineStats.
+        self.spec_stats = {"proposed": 0, "accepted": 0, "spec_steps": 0}
+        self.last_spec_stats = {"proposed": 0, "accepted": 0,
+                                "spec_steps": 0}
 
         @functools.partial(jax.jit, static_argnames=("capacity",))
         def _prefill(params, batch, capacity):
@@ -142,11 +175,154 @@ class Generator:
                 cond, body, carry)
             return toks, lengths, done
 
+        @functools.partial(jax.jit, static_argnames=("mnt", "k"))
+        def _decode_fused_spec(params, logits0, caches, draft_pack, mnt, k):
+            """Draft-verify speculative decode, whole budget in ONE call.
+
+            ``draft_pack`` is the (B, mnt + 1) int32 ``[draft_len |
+            draft_ids]`` concatenation — ONE host->device transfer per
+            call (two small puts mid-stream measurably stall behind the
+            in-flight prefill on the CPU backend).
+
+            Greedy-only (the caller validates), so no PRNG key is carried
+            at all — the key schedule is vacuously identical to the plain
+            fused loop's.  Two phases (DESIGN.md §14):
+
+            1. While any active row still has draft tokens, verify a
+               (B, k) block per iteration: feed ``[last_tok, draft...]``,
+               accept the longest prefix whose greedy choices match the
+               draft plus the first correction token (``a ∈ [1, k]``
+               per active row), and REWIND the k - a optimistically
+               written cache positions.
+            2. Plain per-row single-token decode (k=1 block — bitwise
+               the same computation as ``decode_step``) for rows whose
+               drafts are exhausted or diverged.
+
+            Returns (tokens (B, mnt) EOS-padded, lengths (B,), ended (B,),
+            proposed, accepted, spec_steps) — the last three are scalar
+            int32 speculation counters (drafted tokens fed / drafted
+            tokens emitted / verify-block iterations).
+            """
+            eos = gen_cfg.eos_id
+            scfg = gen_cfg.sampler
+            b = logits0.shape[0]
+            draft_len = draft_pack[:, 0]
+            draft_ids = draft_pack[:, 1:]
+            d = draft_ids.shape[1]
+            caches = paged_lib.row_pos_caches(caches, b)
+            tok = greedy_ids(mask_vocab(logits0, scfg))
+            eos_done = tok == eos
+            toks = jnp.full((b, mnt), eos, jnp.int32)
+            toks = jax.lax.dynamic_update_slice_in_dim(
+                toks, tok[:, None], 0, axis=1)
+            lengths = jnp.where(eos_done, 1, mnt).astype(jnp.int32)
+            ne = jnp.ones((b,), jnp.int32)          # tokens emitted per row
+            # Speculate only while the draft tracks the stream: it must
+            # predict token 0 correctly to be worth a verify block at all.
+            spec_on = (~eos_done) & (draft_len > 0) & (tok == draft_ids[:, 0])
+            zero = jnp.zeros((), jnp.int32)
+
+            def cond1(carry):
+                _, _, eos_done, _, _, ne, spec_on, _, _, _ = carry
+                return jnp.any(~eos_done & (ne < mnt) & spec_on)
+
+            def body1(carry):
+                (tok, caches, eos_done, toks, lengths, ne, spec_on,
+                 prop, acc, steps) = carry
+                active = ~eos_done & (ne < mnt) & spec_on
+                # Verify block x: last emitted token, then the draft's
+                # predictions for output positions [ne, ne + k - 1).
+                gidx = jnp.clip(
+                    ne[:, None] + jnp.arange(k - 1, dtype=jnp.int32)[None, :],
+                    0, d - 1)
+                dtoks = jnp.take_along_axis(draft_ids, gidx, axis=1)
+                x = jnp.concatenate([tok[:, None], dtoks], axis=1)   # (B, k)
+                logits, caches = model.decode_block(params, x, caches)
+                g = greedy_ids(mask_vocab(logits, scfg))             # (B, k)
+                # g[:, i] is the TRUE greedy token at output position
+                # ne + i provided the fed draft prefix matched — the
+                # cumprod keeps only the leading matched run, so later
+                # coincidental matches never count.
+                dpos = (ne[:, None]
+                        + jnp.arange(k - 1, dtype=jnp.int32)[None, :])
+                dval = jnp.take_along_axis(
+                    draft_ids, jnp.clip(dpos, 0, d - 1), axis=1)
+                match = (g[:, :k - 1] == dval) & (dpos < draft_len[:, None])
+                lmatch = jnp.sum(
+                    jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+                iota_k = jnp.broadcast_to(
+                    jnp.arange(k, dtype=jnp.int32)[None, :], (b, k))
+                eos_idx = jnp.min(jnp.where(g == eos, iota_k, k), axis=1)
+                a = jnp.minimum(jnp.minimum(lmatch + 1, eos_idx + 1),
+                                mnt - ne)
+                a = jnp.where(active, a, 0)
+                last = jnp.clip(a - 1, 0, k - 1)
+                tlast = jnp.take_along_axis(g, last[:, None], axis=1)[:, 0]
+                ended_now = (a > 0) & (tlast == eos)
+                lengths = jnp.where(ended_now, ne + a, lengths)
+                # Block write of the a accepted tokens into the output
+                # buffer (per-row offsets, so a gather-select like the KV
+                # block write rather than a dynamic slice).
+                cm = jnp.broadcast_to(
+                    jnp.arange(mnt, dtype=jnp.int32)[None, :], (b, mnt))
+                sel = jnp.clip(cm - ne[:, None], 0, k - 1)
+                val = jnp.take_along_axis(g, sel, axis=1)
+                in_rng = (cm >= ne[:, None]) & (cm < (ne + a)[:, None])
+                toks = jnp.where(in_rng, val, toks)
+                tok = jnp.where(a > 0, tlast, tok)
+                # Drop the k - a rejected cache positions; inactive rows
+                # (a = 0) roll back the whole block.
+                caches = paged_lib.rewind_kv(caches, k - a)
+                ne2 = ne + a
+                n_fed = jnp.clip(draft_len - ne, 0, k - 1)
+                prop = prop + jnp.sum(jnp.where(active, n_fed, 0))
+                acc = acc + jnp.sum(jnp.where(active,
+                                              jnp.minimum(lmatch, a), 0))
+                # Full acceptance keeps the row speculating (drafts can
+                # re-sync after a local tweak); any rejection or draft
+                # exhaustion drops it to phase 2 for good.
+                spec_on = active & (a == k) & (ne2 < draft_len)
+                eos_done = eos_done | ended_now
+                return (tok, caches, eos_done, toks, lengths, ne2, spec_on,
+                        prop, acc, steps + 1)
+
+            carry = (tok, caches, eos_done, toks, lengths, ne, spec_on,
+                     zero, zero, zero)
+            (tok, caches, eos_done, toks, lengths, ne, _, prop, acc,
+             steps) = jax.lax.while_loop(cond1, body1, carry)
+
+            def cond2(carry):
+                _, _, eos_done, _, _, ne = carry
+                return jnp.any(~eos_done & (ne < mnt))
+
+            def body2(carry):
+                tok, caches, eos_done, toks, lengths, ne = carry
+                logits, caches = model.decode_block(
+                    params, tok[:, None], caches)
+                g1 = greedy_ids(mask_vocab(logits, scfg))[:, 0]
+                active = ~eos_done & (ne < mnt)
+                t = jnp.where(active, g1, tok)
+                end_now = active & (t == eos)
+                lengths = jnp.where(end_now, ne + 1, lengths)
+                hot = ((jnp.broadcast_to(
+                    jnp.arange(mnt, dtype=jnp.int32)[None, :], (b, mnt))
+                    == ne[:, None]) & active[:, None])
+                toks = jnp.where(
+                    hot, jnp.broadcast_to(t[:, None], (b, mnt)), toks)
+                ne = ne + active.astype(jnp.int32)
+                return t, caches, eos_done | end_now, toks, lengths, ne
+
+            carry2 = (tok, caches, eos_done, toks, lengths, ne)
+            _, _, eos_done, toks, lengths, _ = jax.lax.while_loop(
+                cond2, body2, carry2)
+            return toks, lengths, eos_done, prop, acc, steps
+
         self._prefill = _prefill
         self._prefill_with_prefix = _prefill_with_prefix
         self._prefill_prefix = _prefill_prefix
         self._step = _step
         self._decode_fused = _decode_fused
+        self._decode_fused_spec = _decode_fused_spec
 
     # ------------------------------------------------------ paged decode
     @property
@@ -193,6 +369,18 @@ class Generator:
     def supports_prefix_prefill(self) -> bool:
         return self.model.supports_prefix_prefill
 
+    @property
+    def speculation_ready(self) -> bool:
+        """True when callers should bother threading drafts (DESIGN.md §14).
+
+        spec_k=1 would verify one token per forward — all bookkeeping, no
+        win — so the engine only harvests cached-response drafts when the
+        configured block is actually wider than plain decode.
+        """
+        return (self.cfg.spec_k > 1 and self.cfg.fused
+                and self.cfg.sampler.temperature <= 0
+                and self.model.supports_spec_decode)
+
     def build_prefix_cache(self, prefix_ids: Sequence[int],
                            batch: int) -> PrefixCache:
         """Prefill a shared prefix once at ``batch`` rows (DESIGN.md §9).
@@ -235,6 +423,7 @@ class Generator:
             seed: Optional[int] = None,
             fused: Optional[bool] = None,
             prefix_cache: Optional[PrefixCache] = None,
+            drafts: Optional[Tuple[np.ndarray, np.ndarray]] = None,
     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Generate and return (tokens (B, T_new), lengths (B,), ended (B,)).
 
@@ -248,6 +437,14 @@ class Generator:
         prefill attends over the stored prefix KV and the whole call is
         byte-identical to generating from the ``[prefix | suffix]``
         concatenation (same capacity, same key schedule).
+
+        With ``drafts`` — a ``(draft_ids (B, D) int32, draft_lens (B,))``
+        pair of per-row predicted output tokens (the TWEAK path feeds the
+        cached response here) — decode runs the speculative verify loop
+        at ``cfg.spec_k`` tokens per forward (DESIGN.md §14).  Greedy +
+        fused only; outputs are token-for-token identical to the plain
+        call, just cheaper.  Rows whose draft is empty (len 0) decode
+        plainly inside the same call.
         """
         # `is None`, not falsiness: an explicit max_new_tokens=0 must not
         # silently fall back to the config default.
@@ -261,6 +458,40 @@ class Generator:
         if seed is None:
             seed = next(self._auto_seed)
         use_fused = self.cfg.fused if fused is None else fused
+        if drafts is not None:
+            # Incoherent speculation requests fail loudly (satellite 2):
+            # silently decoding plainly would fake the perf win.
+            if not use_fused:
+                raise ValueError(
+                    "speculative decode requires the fused loop — the host "
+                    "oracle is the plain differential baseline (fused=True)")
+            if self.cfg.sampler.temperature > 0:
+                raise ValueError(
+                    "speculative decode is greedy-only (temperature 0): "
+                    "lossless acceptance compares argmax choices")
+            if not self.model.supports_spec_decode:
+                raise NotImplementedError(
+                    f"{self.model.cfg.name}: draft-verify decode "
+                    f"unsupported for this architecture — drop the drafts")
+            if self.cfg.spec_k > mnt:
+                raise ValueError(
+                    f"spec_k ({self.cfg.spec_k}) > max_new_tokens ({mnt}) "
+                    f"for this call: shrink the block or raise the budget")
+        draft_pack = None
+        if drafts is not None:
+            # Pack [draft_len | draft_ids] padded/clipped to exactly mnt
+            # columns (jit buckets by (batch, mnt) like the plain fused
+            # loop; a draft longer than the budget can never be consumed)
+            # and ship it BEFORE the prefill dispatch: one transfer, on an
+            # idle stream — two puts issued after the prefill stall behind
+            # the in-flight compute and cost ~3x as much wall time.
+            raw_ids, raw_lens = drafts
+            raw_ids = np.asarray(raw_ids, np.int32)  # hostsync: ok drafts are host-resident cached-response ids
+            pack = np.zeros((b, mnt + 1), np.int32)
+            w = min(raw_ids.shape[1], mnt)
+            pack[:, 1:1 + w] = raw_ids[:, :w]
+            pack[:, 0] = np.minimum(np.asarray(raw_lens, np.int32), mnt)  # hostsync: ok drafts are host-resident cached-response ids
+            draft_pack = jax.device_put(pack)
         if prefix_cache is not None:
             if b != prefix_cache.batch:
                 raise ValueError(
@@ -286,6 +517,20 @@ class Generator:
         # the scalar implicitly, which the transfer-guard harness forbids
         key = jax.random.PRNGKey(jax.device_put(np.uint32(seed)))
         try:
+            if draft_pack is not None:
+                toks, lengths, ended, prop, acc, steps = self._decode_fused_spec(
+                    self.params, logits, caches, draft_pack,
+                    mnt, self.cfg.spec_k)
+                toks, lengths, ended, prop, acc, steps = jax.device_get(  # hostsync: ok the one per-call sync
+                    (toks, lengths, ended, prop, acc, steps))
+                self.last_spec_stats = {
+                    "proposed": int(prop),    # hostsync: ok already host-side
+                    "accepted": int(acc),     # hostsync: ok already host-side
+                    "spec_steps": int(steps)  # hostsync: ok already host-side
+                }
+                for stat, inc in self.last_spec_stats.items():
+                    self.spec_stats[stat] += inc
+                return toks, lengths, ended
             if use_fused:
                 toks, lengths, ended = self._decode_fused(
                     self.params, logits, caches, key, mnt)

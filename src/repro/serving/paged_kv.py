@@ -185,6 +185,56 @@ def write_pinned(pool_tree, prefix_caches, pin_ids):
     return map_kv_leaves(pool_tree, write)
 
 
+def row_pos_caches(caches, batch: int):
+    """Broadcast every cache position to per-row (B,) (DESIGN.md §14).
+
+    Block (speculative) decode advances rows by different amounts per
+    step — after the first divergence a scalar ``pos`` cannot represent
+    the batch.  A fresh prefill's dense leaves carry scalar ``pos``;
+    this lifts them (and the top-level counter) to ``(B,)`` so
+    ``decode_attention_block`` / ``rewind_kv`` can treat dense and paged
+    caches uniformly.  Paged leaves are already per-row: no-op there.
+    """
+    def fix(leaf):
+        depth = _stack_depth(leaf)      # scan-stacked leading dims
+        if leaf["pos"].ndim > depth:    # already per-row (paged, or re-call)
+            return leaf
+        out = dict(leaf)
+        out["pos"] = jnp.broadcast_to(
+            leaf["pos"][..., None] if leaf["pos"].ndim else leaf["pos"],
+            leaf["pos"].shape + (batch,)).astype(jnp.int32)
+        return out
+
+    out = map_kv_leaves(caches, fix)
+    out["pos"] = jnp.broadcast_to(caches["pos"], (batch,)).astype(jnp.int32)
+    return out
+
+
+def rewind_kv(caches, rollback):
+    """Rewind per-row positions by ``rollback`` (B,) ints >= 0 (§14).
+
+    The speculative verify step writes k positions optimistically; when a
+    row accepts only ``a`` of them the trailing ``k - a`` K/V entries are
+    stale.  Rewinding moves ``pos`` back and marks the abandoned slots
+    invalid (``slot_pos = -1``), which the decode attend masks out — the
+    stale K/V values are hidden until the next write overwrites them.
+    Works on dense and paged leaves alike; caches must already be in
+    per-row-``pos`` form (``row_pos_caches``).
+    """
+    def rew(leaf):
+        out = dict(leaf)
+        pos = leaf["pos"] - jnp.broadcast_to(rollback, leaf["pos"].shape)
+        sp = leaf["slot_pos"]
+        c = jax.lax.broadcasted_iota(jnp.int32, sp.shape, sp.ndim - 1)
+        out["pos"] = pos
+        out["slot_pos"] = jnp.where(c >= pos[..., None], -1, sp)
+        return out
+
+    out = map_kv_leaves(caches, rew)
+    out["pos"] = caches["pos"] - rollback
+    return out
+
+
 def extract_pool(paged_caches):
     """Recover the pool storage pytree from packed/stepped paged caches."""
     return map_kv_leaves(

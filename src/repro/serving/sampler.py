@@ -14,14 +14,41 @@ class SamplerConfig:
     vocab_size: int = 0        # mask padded logits above this (0 = off)
 
 
-def sample(key, logits, cfg: SamplerConfig):
-    """logits (B, V) -> token ids (B,) int32."""
+def greedy_ids(logits):
+    """Greedy argmax over the last axis with EXPLICIT tie-breaking.
+
+    ``jnp.argmax`` happens to return the first maximal index on most
+    backends, but that is an implementation detail, not a contract.
+    Speculative decode (DESIGN.md §14) compares verify-time greedy
+    choices against decode-time greedy choices token-for-token, so ties
+    MUST break identically everywhere: this spells out lowest-id-wins as
+    a min-reduction over the argmax set, which no backend may reorder.
+    Works on any (..., V) logits block.
+    """
+    v = logits.shape[-1]
+    top = jnp.max(logits, axis=-1, keepdims=True)
+    is_top = logits == top
+    iota = jnp.broadcast_to(jnp.arange(v, dtype=jnp.int32), is_top.shape)
+    return jnp.min(jnp.where(is_top, iota, v), axis=-1).astype(jnp.int32)
+
+
+def mask_vocab(logits, cfg: SamplerConfig):
+    """Mask padded logit lanes above ``cfg.vocab_size`` (0 = off)."""
     if cfg.vocab_size:
         v = logits.shape[-1]
-        mask = jnp.arange(v) < cfg.vocab_size
-        logits = jnp.where(mask[None, :], logits, -jnp.inf)
+        keep = jnp.arange(v) < cfg.vocab_size
+        # explicit broadcast: the sanitizer harness runs with
+        # jax_numpy_rank_promotion="raise"
+        keep = jnp.broadcast_to(keep, logits.shape)
+        logits = jnp.where(keep, logits, -jnp.inf)
+    return logits
+
+
+def sample(key, logits, cfg: SamplerConfig):
+    """logits (B, V) -> token ids (B,) int32."""
+    logits = mask_vocab(logits, cfg)
     if cfg.temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return greedy_ids(logits)
     logits = logits / cfg.temperature
     if cfg.top_k > 0:
         kth = jax.lax.top_k(logits, cfg.top_k)[0][..., -1:]

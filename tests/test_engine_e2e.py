@@ -349,3 +349,66 @@ def test_engine_cost_threshold_moves_operating_point(stack):
         assert res[1.0]["decision"] == router.MISS
     hit = lambda d: d != router.MISS
     assert hit(res[0.0]["decision"]) or not hit(res[1.0]["decision"])
+
+
+# ------------------------------------------- speculative TWEAK drafts (§14)
+def test_tweak_speculative_drafts_match_plain(stack):
+    """A spec-enabled small generator serves byte-identical TWEAK
+    responses, threads cached-response drafts into the verify loop, and
+    bills the speculation counters into EngineStats (DESIGN.md §14)."""
+    from repro.core.engine import EngineStats
+
+    tok, ecfg, eparams, big, small = stack
+    small_spec = Generator(
+        small.model, small.params,
+        GenerateConfig(max_new_tokens=6,
+                       sampler=SamplerConfig(vocab_size=VOCAB), spec_k=3))
+    assert small_spec.speculation_ready
+
+    def mk(s):
+        return TweakLLMEngine(
+            tokenizer=tok, embedder_params=eparams, embedder_cfg=ecfg,
+            big=big, small=s,
+            cache_cfg=CacheConfig(capacity=64, dim=ecfg.d_model, topk=4),
+            router_cfg=RouterConfig(tweak_threshold=0.3))
+
+    e_plain, e_spec = mk(small), mk(small_spec)
+    seen, outs = [], []
+    orig = small_spec.generate_with_lengths
+
+    def spy(batch, **kw):
+        out = orig(batch, **kw)
+        seen.append(kw.get("drafts") is not None)
+        outs.append(out)
+        return out
+
+    small_spec.generate_with_lengths = spy
+    seeds = ["how do i learn python setup", "best way to cook rice fast"]
+    probes = ["how do i learn python install", "best way to cook rice quickly"]
+    for e in (e_plain, e_spec):
+        e.handle_batch(seeds, max_new_tokens=6)
+    r_plain = e_plain.handle_batch_result(probes, max_new_tokens=6)
+    r_spec = e_spec.handle_batch_result(probes, max_new_tokens=6)
+    assert ([m["decision"] for m in r_plain.meta]
+            == [m["decision"] for m in r_spec.meta])
+    assert r_plain.responses == r_spec.responses
+    assert e_plain.stats.small_tokens == e_spec.stats.small_tokens
+    tweaked = e_spec.stats.tweak > 0
+    assert tweaked, "probe queries must route TWEAK for this test to bite"
+    assert seen and all(seen)       # every tweak call carried drafts
+    # Re-serving the same tweak with the previous small output as the
+    # cached draft makes the draft exact: acceptance must show up.
+    t, l, en = outs[-1]
+    vis = t[0][: l[0] - 1 if en[0] else l[0]].tolist()
+    for s in list(e_spec.bank.draft_store):
+        e_spec.bank.draft_store[s] = vis
+    before = e_spec.stats.accepted
+    e_spec.handle_batch([probes[0]], max_new_tokens=6)
+    assert e_spec.stats.proposed > 0
+    assert e_spec.stats.accepted > before
+    assert 0.0 < e_spec.stats.acceptance_rate <= 1.0
+    # replica aggregation sums the speculation counters
+    agg = EngineStats.aggregate([e_plain.stats, e_spec.stats])
+    assert agg.proposed == e_spec.stats.proposed
+    assert agg.accepted == e_spec.stats.accepted
+    assert agg.spec_steps == e_spec.stats.spec_steps

@@ -9,12 +9,16 @@ from _hypothesis_shim import given, settings, st
 from repro.kernels.cosine_topk.ops import cosine_topk, cosine_topk_gather
 from repro.kernels.cosine_topk.ref import (cosine_topk_gather_ref,
                                            cosine_topk_ref)
-from repro.kernels.decode_attention.ops import decode_attention
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.ops import (decode_attention,
+                                                decode_attention_block)
+from repro.kernels.decode_attention.ref import (decode_attention_block_ref,
+                                                decode_attention_ref)
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
-from repro.kernels.paged_attention.ops import paged_decode_attention
-from repro.kernels.paged_attention.ref import paged_decode_attention_ref
+from repro.kernels.paged_attention.ops import (paged_decode_attention,
+                                               paged_decode_attention_block)
+from repro.kernels.paged_attention.ref import (
+    paged_decode_attention_block_ref, paged_decode_attention_ref)
 
 
 def _unit(key, shape, dtype=jnp.float32):
@@ -207,6 +211,55 @@ def test_decode_property(t, g, seed):
         np.asarray(o1)[0], np.asarray(v)[0, 0].repeat(g, axis=0), rtol=1e-4)
 
 
+# -------------------------------------------- q-block (speculative) decode
+
+@pytest.mark.parametrize("b,kq,t,h,hk,dh,bt", [
+    (2, 4, 128, 8, 2, 32, 32), (3, 2, 100, 4, 4, 16, 64),
+    (1, 8, 64, 6, 1, 8, 16), (2, 1, 96, 4, 2, 16, 32),
+])
+def test_decode_block_matches_ref(b, kq, t, h, hk, dh, bt):
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, kq, h, dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, t, hk, dh))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, t, hk, dh))
+    cl = jax.random.randint(jax.random.PRNGKey(3), (b,), 1, t - kq)
+    o1 = decode_attention_block(q, k, v, cl, block_t=bt)
+    o2 = decode_attention_block_ref(q, k, v, cl)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_block_k1_equals_single_decode():
+    """A 1-wide verify block IS single-token decode (limit cache_len + 1)."""
+    b, t, h, hk, dh = 3, 64, 4, 2, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, 1, h, dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, t, hk, dh))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, t, hk, dh))
+    cl = jnp.asarray([5, 31, 62])
+    o1 = decode_attention_block(q, k, v, cl, block_t=32)[:, 0]
+    o2 = decode_attention(q[:, 0], k, v, cl + 1, block_t=32)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(kq=st.sampled_from([1, 2, 4, 8]), g=st.sampled_from([1, 2]),
+       seed=st.integers(0, 2 ** 16))
+def test_decode_block_rowwise_equals_sequential(kq, g, seed):
+    """Each block query i must equal a single-token decode over the prefix
+    grown by i — the in-block causal mask IS the sequential semantics."""
+    b, hk, dh, t = 2, 2, 16, 64
+    h = hk * g
+    q = jax.random.normal(jax.random.PRNGKey(seed), (b, kq, h, dh))
+    k = jax.random.normal(jax.random.PRNGKey(seed + 1), (b, t, hk, dh))
+    v = jax.random.normal(jax.random.PRNGKey(seed + 2), (b, t, hk, dh))
+    cl = jnp.asarray([3, t - kq - 1])
+    blk = decode_attention_block(q, k, v, cl, block_t=32)
+    for i in range(kq):
+        one = decode_attention(q[:, i], k, v, cl + i + 1, block_t=32)
+        np.testing.assert_allclose(np.asarray(blk[:, i]), np.asarray(one),
+                                   rtol=2e-5, atol=2e-5)
+
+
 # ---------------------------------------------------- paged decode attention
 
 def _paged_case(b, h, hk, dh, page, npg, num_pages, cap, lens, seed):
@@ -254,6 +307,42 @@ def test_paged_decode_matches_dense_decode_kernel():
     kd = gather_pages(kp, tbl, 20)
     vd = gather_pages(vp, tbl, 20)
     o2 = decode_attention(q, kd, vd, jnp.asarray([20, 11]), block_t=32)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("kq,page,npg", [(1, 8, 4), (2, 4, 6), (4, 8, 4),
+                                         (8, 1, 16)])
+def test_paged_decode_block_matches_ref(kq, page, npg):
+    b, h, hk, dh = 2, 4, 2, 16
+    num_pages = max(b * npg, 8)
+    cap = npg * page
+    rng = np.random.default_rng(kq * 13 + page)
+    lens = tuple(int(x) for x in rng.integers(kq, cap + 1, size=b))
+    q1, kp, vp, tbl, sp = _paged_case(b, h, hk, dh, page, npg, num_pages,
+                                      cap, lens, seed=kq + page)
+    q = jax.random.normal(jax.random.PRNGKey(99), (b, kq, h, dh))
+    qpos = jnp.asarray([ln - kq for ln in lens], jnp.int32)
+    o1 = paged_decode_attention_block(q, kp, vp, tbl, sp, qpos)
+    o2 = paged_decode_attention_block_ref(q, kp, vp, tbl, sp, qpos)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_decode_block_matches_dense_block_kernel():
+    """Paging is pure indirection for the block variant too: gather the
+    pages dense and the DENSE block kernel must agree."""
+    from repro.kernels.paged_attention.ref import gather_pages
+    kq = 4
+    lens = (20, 11)
+    q1, kp, vp, tbl, sp = _paged_case(2, 4, 2, 16, 8, 3, 16, 20, lens,
+                                      seed=5)
+    q = jax.random.normal(jax.random.PRNGKey(42), (2, kq, 4, 16))
+    qpos = jnp.asarray([ln - kq for ln in lens], jnp.int32)
+    o1 = paged_decode_attention_block(q, kp, vp, tbl, sp, qpos)
+    kd = gather_pages(kp, tbl, 20)
+    vd = gather_pages(vp, tbl, 20)
+    o2 = decode_attention_block(q, kd, vd, qpos, block_t=32)
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
                                rtol=2e-5, atol=2e-5)
 

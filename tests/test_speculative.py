@@ -1,0 +1,311 @@
+"""Speculative decode differential tests (DESIGN.md §14).
+
+The contract under test: greedy speculative decode is **token-for-token
+and length-for-length identical** to the plain fused loop — for ANY
+draft content.  The draft only changes how many forwards it takes to
+produce the stream, never the stream itself, because every accepted
+token is one the plain loop would have emitted (verified greedy argmax)
+and every rejected cache position is rewound before it can influence a
+later step.
+
+Layers covered here:
+* ``Generator.generate_with_lengths(..., drafts=)`` — spec vs plain
+  fused vs host-stepped oracle, dense AND paged, across draft-overlap
+  patterns and k ∈ {1, 2, 4, 8} (seeded deterministic sweep + a
+  hypothesis property when hypothesis is installed).
+* ``DecodeSession(spec_k=...)`` — mid-flight join/leave churn with
+  per-slot drafts matches the plain session token-for-token, and the
+  page pool returns to zero leaked pages.
+* Config/call-path validation (satellite 2) and the sampler's explicit
+  greedy tie-break (satellite 1) that the whole §14 contract rests on.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_shim import given, settings, st
+from repro.models import ModelConfig, build_model
+from repro.serving import GenerateConfig, Generator, SamplerConfig
+from repro.serving.continuous import DecodeSession, leaked_pages
+from repro.serving.sampler import SamplerConfig as SC
+from repro.serving.sampler import greedy_ids, sample
+
+VOCAB = 128
+EOS = 2
+MNT = 8
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = ModelConfig(num_layers=2, d_model=32, num_heads=2, num_kv_heads=1,
+                      d_ff=64, vocab_size=VOCAB, max_seq_len=256,
+                      dtype="float32", attention_impl="xla_flash",
+                      flash_block_q=16, flash_block_k=16)
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _gen(model_and_params, *, spec_k=1, paged=False, page_size=4,
+         mnt=MNT, temp=0.0, fused=True):
+    model, params = model_and_params
+    gc = GenerateConfig(
+        max_new_tokens=mnt, eos_id=EOS,
+        sampler=SamplerConfig(temperature=temp, vocab_size=VOCAB),
+        paged=paged, page_size=page_size, spec_k=spec_k, fused=fused)
+    return Generator(model, params, gc)
+
+
+def _prompts(batch, s, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.asarray(rng.integers(3, VOCAB, size=(batch, s)), np.int32)
+
+
+def _triple(gen, toks, **kw):
+    t, l, e = gen.generate_with_lengths({"tokens": jnp.asarray(toks)}, **kw)
+    return np.asarray(t), np.asarray(l), np.asarray(e)
+
+
+PATTERNS = ("perfect", "zero", "diverge", "short", "empty", "mixed")
+
+
+def _drafts(ref_toks, pattern, rng):
+    """Build a (ids, lens) draft pair with a given agreement pattern
+    against the plain loop's reference output."""
+    b, w = ref_toks.shape
+    ids = np.zeros((b, w), np.int32)
+    lens = np.zeros((b,), np.int32)
+    garbage = rng.integers(3, VOCAB, size=(b, w)).astype(np.int32)
+    if pattern == "perfect":
+        ids[:], lens[:] = ref_toks, w
+    elif pattern == "zero":
+        # force disagreement at every position (mod-vocab shift keeps
+        # ids in range and never equal to the reference)
+        ids[:] = (ref_toks + 1 - 3) % (VOCAB - 3) + 3
+        lens[:] = w
+    elif pattern == "diverge":
+        ids[:] = ref_toks
+        ids[:, w // 2:] = garbage[:, w // 2:]
+        lens[:] = w
+    elif pattern == "short":
+        ids[:, :3], lens[:] = ref_toks[:, :3], 3
+    elif pattern == "empty":
+        pass
+    elif pattern == "mixed":
+        # one row of each flavour, cycling over the batch
+        for r in range(b):
+            ids[r], lens[r] = ref_toks[r], w
+            if r % 4 == 1:
+                ids[r] = (ref_toks[r] + 1 - 3) % (VOCAB - 3) + 3
+            elif r % 4 == 2:
+                ids[r, w // 2:] = garbage[r, w // 2:]
+            elif r % 4 == 3:
+                lens[r] = 2
+    return ids, lens
+
+
+# -------------------------------------------- spec == plain == oracle
+@pytest.mark.parametrize("paged", [False, True])
+@pytest.mark.parametrize("k", [2, 4, 8])
+def test_spec_matches_plain_and_oracle(model_and_params, paged, k):
+    plain = _gen(model_and_params, paged=paged)
+    toks = _prompts(3, 6, seed=k)
+    ref = _triple(plain, toks, seed=0)
+    oracle = _triple(plain, toks, seed=0, fused=False)
+    for a, b in zip(ref, oracle):
+        np.testing.assert_array_equal(a, b)
+    spec = _gen(model_and_params, spec_k=k, paged=paged)
+    rng = np.random.default_rng(100 + k)
+    for pattern in PATTERNS:
+        out = _triple(spec, toks, seed=0,
+                      drafts=_drafts(ref[0], pattern, rng))
+        for a, b in zip(ref, out):
+            np.testing.assert_array_equal(a, b, err_msg=pattern)
+
+
+@pytest.mark.parametrize("page_size", [1, 4, 16])
+def test_spec_paged_page_sizes(model_and_params, page_size):
+    plain = _gen(model_and_params, paged=True, page_size=page_size)
+    toks = _prompts(2, 5, seed=page_size)
+    ref = _triple(plain, toks, seed=0)
+    spec = _gen(model_and_params, spec_k=4, paged=True, page_size=page_size)
+    rng = np.random.default_rng(page_size)
+    for pattern in ("perfect", "diverge", "mixed"):
+        out = _triple(spec, toks, seed=0,
+                      drafts=_drafts(ref[0], pattern, rng))
+        for a, b in zip(ref, out):
+            np.testing.assert_array_equal(a, b, err_msg=pattern)
+
+
+def test_spec_k1_block_loop_matches_plain(model_and_params):
+    """k=1 degenerates to the block-form plain loop — still identical."""
+    plain = _gen(model_and_params)
+    toks = _prompts(2, 4)
+    ref = _triple(plain, toks, seed=0)
+    spec = _gen(model_and_params, spec_k=1)
+    out = _triple(spec, toks, seed=0,
+                  drafts=(np.zeros((2, 1), np.int32),
+                          np.zeros((2,), np.int32)))
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_spec_counters_account_perfect_draft(model_and_params):
+    """A perfect draft is fully accepted; counters reflect it."""
+    plain = _gen(model_and_params)
+    toks = _prompts(2, 5, seed=9)
+    ref = _triple(plain, toks, seed=0)
+    spec = _gen(model_and_params, spec_k=4)
+    _triple(spec, toks, seed=0, drafts=(ref[0], np.full((2,), MNT, np.int32)))
+    st_ = spec.last_spec_stats
+    assert st_["proposed"] > 0
+    assert st_["accepted"] == st_["proposed"]   # lossless + perfect draft
+    assert st_["spec_steps"] > 0
+    # a non-matching draft proposes but accepts nothing
+    bad = (ref[0] + 1 - 3) % (VOCAB - 3) + 3
+    _triple(spec, toks, seed=0, drafts=(bad, np.full((2,), MNT, np.int32)))
+    assert spec.last_spec_stats["accepted"] == 0
+    assert spec.spec_stats["proposed"] >= st_["proposed"]  # cumulative
+
+
+# ------------------------------------------------- hypothesis property
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+       st.sampled_from([1, 2, 4, 8]),
+       st.booleans())
+def test_spec_identity_random_agreement(model_and_params, seed, k, paged):
+    """Random per-row agreement prefixes never change the stream."""
+    rng = np.random.default_rng(seed)
+    b = int(rng.integers(1, 4))
+    toks = _prompts(b, int(rng.integers(3, 8)), seed=seed % 1000)
+    plain = _gen(model_and_params, paged=paged)
+    ref = _triple(plain, toks, seed=0)
+    ids = rng.integers(3, VOCAB, size=(b, MNT)).astype(np.int32)
+    lens = rng.integers(0, MNT + 1, size=(b,)).astype(np.int32)
+    for r in range(b):
+        agree = int(rng.integers(0, MNT + 1))
+        ids[r, :agree] = ref[0][r, :agree]
+    spec = _gen(model_and_params, spec_k=k, paged=paged)
+    out = _triple(spec, toks, seed=0, drafts=(ids, lens))
+    for a, c in zip(ref, out):
+        np.testing.assert_array_equal(a, c)
+
+
+# ------------------------------------------------ DecodeSession churn
+def test_session_spec_matches_plain_with_churn(model_and_params):
+    """Mid-flight joins with per-slot drafts: spec session ≡ plain
+    session token-for-token, and no page leaks after full drain."""
+    model, params = model_and_params
+    cap = 6 + MNT + 1
+    mk = lambda: _gen(model_and_params, paged=True)
+
+    def run(spec_k, drafts1=None, drafts2=None):
+        gen = mk()
+        sess = DecodeSession(gen, slots=3, capacity=cap, seed=7,
+                             spec_k=spec_k)
+        kw1 = {"drafts": drafts1} if drafts1 is not None else {}
+        sess.admit(_prompts(2, 6, seed=1), tags=["a", "b"], slots=[0, 1],
+                   **kw1)
+        sess.run_chunk(2)
+        kw2 = {"drafts": drafts2} if drafts2 is not None else {}
+        sess.admit(_prompts(1, 6, seed=2), tags=["c"], slots=[2], **kw2)
+        fin = {r["tag"]: r for r in sess.drain(chunk=3)}
+        leak = sess.pool.live_pages - sess.pool.pinned_pages
+        return fin, leak, leaked_pages(gen), sess
+
+    ref, leak0, gleak0, _ = run(1)
+    # drafts: row a gets its true continuation, row b garbage, c (mid-
+    # flight join) its true continuation — joins speculate too.
+    rng = np.random.default_rng(3)
+    d1 = (np.stack([ref["a"]["tokens"],
+                    rng.integers(3, VOCAB, size=(MNT,)).astype(np.int32)]),
+          np.asarray([MNT, MNT], np.int32))
+    d2 = (ref["c"]["tokens"][None, :], np.asarray([MNT], np.int32))
+    out, leak1, gleak1, sess = run(4, d1, d2)
+    for tag in ("a", "b", "c"):
+        for key in ("tokens", "length", "ended"):
+            np.testing.assert_array_equal(ref[tag][key], out[tag][key],
+                                          err_msg=f"{tag}/{key}")
+    assert leak0 == leak1 == gleak0 == gleak1 == 0
+    stats = sess.spec_stats
+    assert stats["proposed"] >= stats["accepted"] >= 0
+
+
+def test_session_spec_stats_and_draftless_rows(model_and_params):
+    """Rows admitted without drafts decode plainly inside a spec session."""
+    gen = _gen(model_and_params, paged=True)
+    sess = DecodeSession(gen, slots=2, capacity=6 + MNT + 1, spec_k=2)
+    sess.admit(_prompts(2, 6), tags=["x", "y"])
+    fin = sess.drain()
+    assert {r["tag"] for r in fin} == {"x", "y"}
+    assert sess.spec_stats == {"proposed": 0, "accepted": 0, "spec_steps": 0}
+    assert sess.pool.live_pages - sess.pool.pinned_pages == 0
+
+
+# ------------------------------------------------- validation (sat. 2)
+def test_generate_config_rejects_incoherent_spec():
+    with pytest.raises(ValueError, match="spec_k"):
+        GenerateConfig(spec_k=0)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        GenerateConfig(max_new_tokens=4, spec_k=8)
+    with pytest.raises(ValueError, match="greedy|temperature"):
+        GenerateConfig(spec_k=2, sampler=SamplerConfig(temperature=0.7))
+
+
+def test_generator_rejects_unsupported_arch():
+    cfg = ModelConfig(num_layers=2, d_model=32, num_heads=2, num_kv_heads=1,
+                      d_ff=64, vocab_size=VOCAB, max_seq_len=128,
+                      dtype="float32", sliding_window=8)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    assert not model.supports_spec_decode
+    with pytest.raises(ValueError, match="spec"):
+        Generator(model, params,
+                  GenerateConfig(max_new_tokens=MNT, spec_k=2,
+                                 sampler=SamplerConfig(vocab_size=VOCAB)))
+
+
+def test_drafts_call_path_validation(model_and_params):
+    toks = _prompts(1, 4)
+    d = (np.zeros((1, 2), np.int32), np.zeros((1,), np.int32))
+    gen = _gen(model_and_params, spec_k=2)
+    with pytest.raises(ValueError, match="fused"):
+        gen.generate_with_lengths({"tokens": jnp.asarray(toks)},
+                                  drafts=d, fused=False)
+    with pytest.raises(ValueError, match="spec_k|budget|max_new"):
+        gen.generate_with_lengths({"tokens": jnp.asarray(toks)},
+                                  drafts=d, max_new_tokens=1)
+    hot = _gen(model_and_params, temp=0.8)
+    with pytest.raises(ValueError, match="greedy|temperature"):
+        hot.generate_with_lengths({"tokens": jnp.asarray(toks)}, drafts=d)
+
+
+def test_session_spec_validation(model_and_params):
+    gen = _gen(model_and_params, paged=True)
+    with pytest.raises(ValueError, match="spec_k"):
+        DecodeSession(gen, slots=2, capacity=32, spec_k=0)
+    with pytest.raises(ValueError, match="greedy|temperature"):
+        DecodeSession(_gen(model_and_params, paged=True, temp=0.5),
+                      slots=2, capacity=32, spec_k=2)
+    sess = DecodeSession(gen, slots=2, capacity=6 + MNT + 1)
+    with pytest.raises(ValueError, match="drafts"):
+        sess.admit(_prompts(1, 6),
+                   drafts=(np.zeros((1, 2), np.int32),
+                           np.ones((1,), np.int32)))
+
+
+# ------------------------------------------------- tie-break (sat. 1)
+def test_greedy_tiebreak_lowest_id_wins():
+    logits = np.full((2, 7), -1.0, np.float32)
+    logits[0, [2, 5]] = 3.0           # tie between ids 2 and 5
+    logits[1, [0, 3, 6]] = 1.5        # three-way tie
+    ids = np.asarray(greedy_ids(jnp.asarray(logits)))
+    np.testing.assert_array_equal(ids, [2, 0])
+    # block-shaped logits (B, k, V) — the verify loop's shape
+    blk = np.broadcast_to(logits[:, None, :], (2, 3, 7)).copy()
+    np.testing.assert_array_equal(np.asarray(greedy_ids(jnp.asarray(blk))),
+                                  [[2, 2, 2], [0, 0, 0]])
+    # sample() at temperature 0 routes through the same tie-break
+    got = np.asarray(sample(jax.random.PRNGKey(0), jnp.asarray(logits),
+                            SC(temperature=0.0)))
+    np.testing.assert_array_equal(got, ids)
